@@ -1,0 +1,72 @@
+"""Shared benchmark plumbing: cached datasets, timing, CSV emission."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def art_path(name: str) -> str:
+    os.makedirs(ART, exist_ok=True)
+    return os.path.join(ART, name)
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(kind: str, n: int, seed: int = 0):
+    from repro.graphs.generators import aids_like_db, graphgen_db
+    if kind == "aids":
+        return aids_like_db(n, seed=seed)
+    if kind == "s100k":
+        return graphgen_db(n, num_edges=30, density=0.5, n_vlabels=5,
+                           n_elabels=2, seed=seed)
+    if kind == "pubchem":
+        return aids_like_db(n, seed=seed + 7, mean_v=23.4, n_vlabels=101,
+                            n_elabels=3)
+    raise ValueError(kind)
+
+
+def queries_for(db, num: int = 10, tau: int = 3, seed: int = 1):
+    """Paper protocol: randomly selected graphs (perturbed so answers are
+    non-trivial)."""
+    from repro.graphs.generators import perturb_graph
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(db), size=num, replace=False)
+    return [perturb_graph(db[int(i)], max(tau // 2, 1), rng, db.n_vlabels,
+                          db.n_elabels) for i in idx]
+
+
+def timer(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+class Csv:
+    """Collects 'name,us_per_call,derived' rows (the run.py contract)."""
+
+    def __init__(self) -> None:
+        self.rows: List[str] = []
+
+    def add(self, name: str, seconds: float, derived: Any = "") -> None:
+        row = f"{name},{seconds * 1e6:.1f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.write("\n".join(self.rows) + "\n")
+
+
+def save_json(name: str, obj: Any) -> None:
+    with open(art_path(name), "w") as f:
+        json.dump(obj, f, indent=1)

@@ -1,0 +1,78 @@
+"""Figure 8: candidate-set size and response time vs tau, MSQ-Index against
+the C-Star / Branch(Mixed) / path-q-gram baselines (per-pair filters) —
+plus verification time, on the paper's query protocol (random data graphs)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Csv, dataset, queries_for, save_json
+from repro.core import baselines
+from repro.core.search import MSQIndex
+from repro.core.verify import ged_upto
+
+
+def baseline_candidates(db, h, tau: int, fn) -> int:
+    cnt = 0
+    for g in db:
+        if fn(g, h) <= tau:
+            cnt += 1
+    return cnt
+
+
+def run(csv: Csv, kind: str = "aids", n: int = 1500, taus=(1, 2, 3, 4, 5),
+        n_queries: int = 5, verify: bool = True,
+        with_baselines: bool = True) -> Dict:
+    db = dataset(kind, n)
+    idx = MSQIndex(db)
+    queries = queries_for(db, num=n_queries)
+    out = {"kind": kind, "n": n, "taus": {}}
+    for tau in taus:
+        cand_sizes, f_times, v_times, match_counts = [], [], [], []
+        b_counts = {"cstar": [], "branch": [], "path": []}
+        b_times = {"cstar": [], "branch": [], "path": []}
+        for h in queries:
+            res = idx.query(h, tau, verify=verify)
+            cand_sizes.append(len(res.candidates))
+            f_times.append(res.filter_time_s)
+            v_times.append(res.verify_time_s)
+            match_counts.append(len(res.matches))
+            if with_baselines:
+                for name, fn in (("cstar", baselines.cstar_lb),
+                                 ("branch", baselines.branch_lb),
+                                 ("path", baselines.path_qgram_lb)):
+                    t0 = time.perf_counter()
+                    b_counts[name].append(baseline_candidates(db, h, tau, fn))
+                    b_times[name].append(time.perf_counter() - t0)
+        rec = {
+            "msq_candidates": float(np.mean(cand_sizes)),
+            "msq_matches": float(np.mean(match_counts)),
+            "msq_filter_s": float(np.mean(f_times)),
+            "msq_verify_s": float(np.mean(v_times)),
+        }
+        if with_baselines:
+            for name in b_counts:
+                rec[f"{name}_candidates"] = float(np.mean(b_counts[name]))
+                rec[f"{name}_filter_s"] = float(np.mean(b_times[name]))
+        out["taus"][tau] = rec
+        csv.add(f"fig8/{kind}/tau{tau}/msq_candidates",
+                rec["msq_filter_s"], round(rec["msq_candidates"], 1))
+        if with_baselines:
+            csv.add(f"fig8/{kind}/tau{tau}/cstar_candidates",
+                    rec["cstar_filter_s"], round(rec["cstar_candidates"], 1))
+            csv.add(f"fig8/{kind}/tau{tau}/branch_candidates",
+                    rec["branch_filter_s"], round(rec["branch_candidates"], 1))
+    save_json(f"fig8_filter_quality_{kind}.json", out)
+    return out
+
+
+def main() -> None:
+    csv = Csv()
+    run(csv, "aids", 1500)
+    run(csv, "s100k", 800, taus=(1, 2, 3), verify=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks: wall time of the jnp/XLA serving paths on CPU
+(correctness-scale; real-TPU time comes from the §Roofline model) plus the
+analytic HBM-traffic roofline of each kernel on v5e constants."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, dataset, save_json, timer
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def bench_qgram_filter(csv: Csv, B: int = 4096, U: int = 2048) -> dict:
+    from repro.kernels.qgram_filter.ref import fused_filter_bounds_ref
+    from repro.kernels.qgram_filter.ops import make_aux, make_scalars
+    rng = np.random.default_rng(0)
+    args = (make_scalars(20, 22, 3, 25, 27, 4),
+            jnp.asarray(rng.integers(0, 4, (B, U)).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 4, U).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 5, (B, 62)).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 5, 62).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 5, (B, 3)).astype(np.int32)),
+            jnp.asarray(rng.integers(0, 5, 3).astype(np.int32)),
+            jnp.asarray(-np.sort(-rng.integers(0, 5, (B, 64)), 1).astype(np.int32)),
+            jnp.asarray(-np.sort(-rng.integers(0, 5, 64)).astype(np.int32)),
+            jnp.asarray(np.concatenate(
+                [rng.integers(1, 30, (B, 2)), rng.integers(-3, 4, (B, 2)),
+                 np.zeros((B, 1), int)], 1).astype(np.int32)))
+    fn = jax.jit(fused_filter_bounds_ref)
+    fn(*args)[0].block_until_ready()
+    _, dt = timer(lambda: fn(*args)[0].block_until_ready(), repeat=20)
+    bytes_moved = B * U * 4 + B * (62 + 3 + 64 + 5) * 4
+    tpu_s = bytes_moved / HBM_BW  # memory-bound kernel
+    csv.add("kernel/qgram_filter/xla_cpu", dt,
+            f"graphs_per_s={B / dt:.0f}")
+    csv.add("kernel/qgram_filter/tpu_roofline", tpu_s,
+            f"graphs_per_s={B / tpu_s:.0f}")
+    return {"cpu_s": dt, "tpu_model_s": tpu_s, "bytes": bytes_moved}
+
+
+def bench_bitunpack(csv: Csv, n: int = 1 << 18) -> dict:
+    from repro.kernels.bitunpack.ops import pack_hybrid, packed_size_bits
+    from repro.kernels.bitunpack.ref import unpack_hybrid_ref
+    rng = np.random.default_rng(1)
+    vals = rng.integers(1, 12, n)
+    words, sb, widths, nv = pack_hybrid(vals)
+    fn = jax.jit(unpack_hybrid_ref)
+    args = (jnp.asarray(sb), jnp.asarray(widths), jnp.asarray(words))
+    fn(*args).block_until_ready()
+    _, dt = timer(lambda: fn(*args).block_until_ready(), repeat=20)
+    packed_bits = packed_size_bits(words, sb, widths)
+    csv.add("kernel/bitunpack/xla_cpu", dt,
+            f"vals_per_s={n / dt:.0f};bits_per_val={packed_bits / n:.2f}")
+    tpu_s = (packed_bits / 8 + n * 4) / HBM_BW  # read packed, write int32
+    csv.add("kernel/bitunpack/tpu_roofline", tpu_s,
+            f"vals_per_s={n / tpu_s:.0f}")
+    return {"cpu_s": dt, "tpu_model_s": tpu_s,
+            "bits_per_val": packed_bits / n}
+
+
+def bench_rank(csv: Csv, n: int = 1 << 20) -> dict:
+    from repro.kernels.rank_popcount.ops import build_rank_dictionary, rank1_query
+    rng = np.random.default_rng(2)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    words, cum = build_rank_dictionary(bits, interpret=True)
+    idx = jnp.asarray(rng.integers(0, n, 4096).astype(np.int32))
+    rank1_query(words, cum, idx).block_until_ready()
+    _, dt = timer(lambda: rank1_query(words, cum, idx).block_until_ready(),
+                  repeat=20)
+    csv.add("kernel/rank1/xla_cpu", dt, f"queries_per_s={4096 / dt:.0f}")
+    return {"cpu_s": dt}
+
+
+def bench_attention(csv: Csv) -> dict:
+    from repro.kernels.flash_attention.ops import flash_attention
+    rng = np.random.default_rng(3)
+    B, H, S, D = 1, 8, 1024, 128
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, H // 2, S, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, H // 2, S, D)), jnp.bfloat16)
+    fn = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                 impl="xla"))
+    fn(q, k, v).block_until_ready()
+    _, dt = timer(lambda: fn(q, k, v).block_until_ready(), repeat=5)
+    flops = 2 * 2 * B * H * S * S * D / 2  # causal half, qk + pv
+    tpu_s = flops / PEAK_FLOPS_BF16
+    csv.add("kernel/flash_attention/xla_cpu", dt,
+            f"tflops={flops / dt / 1e12:.3f}")
+    csv.add("kernel/flash_attention/tpu_roofline", tpu_s,
+            f"compute_bound_s={tpu_s:.2e}")
+    return {"cpu_s": dt, "tpu_model_s": tpu_s}
+
+
+def main() -> None:
+    csv = Csv()
+    out = {
+        "qgram_filter": bench_qgram_filter(csv),
+        "bitunpack": bench_bitunpack(csv),
+        "rank1": bench_rank(csv),
+        "flash_attention": bench_attention(csv),
+    }
+    save_json("kernels_bench.json", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Roofline table assembly: reads artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and renders the §Roofline table —
+compute / memory / collective seconds per (arch x shape x mesh), dominant
+term, MODEL_FLOPS vs HLO FLOPs ratio, and the roofline fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: Optional[str] = None, tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if cell_tag != tag:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — | — | {r['reason'][:48]}… |")
+    if r["status"] == "error":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — | — | {r.get('error', '')[:48]} |")
+    ro = r.get("roofline_kernel") or r["roofline"]
+    raw = r["roofline"]
+    note = {
+        "compute_s": "raise useful FLOPs/chip (sharding) or cut remat",
+        "memory_s": "cut HBM traffic: fuse, shrink activations, remat policy",
+        "collective_s": "cut wire bytes: reshard, overlap, compress",
+    }[ro["dominant"]]
+    return ("| {arch} | {shape} | {mesh} | {c:.3f} | {m:.3f} | {x:.3f} | "
+            "{dom} | {uf:.2f} | {rf:.4f} | {raw:.4f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=ro["compute_s"], m=ro["memory_s"], x=ro["collective_s"],
+        dom=ro["dominant"].replace("_s", ""),
+        uf=ro["useful_flops_ratio"], rf=ro["roofline_fraction"],
+        raw=raw["roofline_fraction"], note=note)
+
+
+def table(mesh: Optional[str] = "pod16x16", tag: str = "") -> str:
+    cells = load_cells(mesh, tag)
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful_flops | frac(kernel) | frac(raw) | "
+           "what moves it |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(fmt_row(r) for r in cells)
+
+
+def summarize(csv=None) -> Dict:
+    out = {}
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        out[mesh] = {
+            "cells": len(cells),
+            "ok": len(ok),
+            "skipped": sum(c["status"] == "skipped" for c in cells),
+            "errors": sum(c["status"] == "error" for c in cells),
+            "dominant": {
+                k: sum(c["roofline"]["dominant"] == k for c in ok)
+                for k in ("compute_s", "memory_s", "collective_s")},
+        }
+        if csv is not None:
+            csv.add(f"dryrun/{mesh}/cells_ok", 0.0,
+                    f"{len(ok)}ok/{out[mesh]['skipped']}skip/"
+                    f"{out[mesh]['errors']}err")
+    return out
+
+
+def main() -> None:
+    print(table("pod16x16"))
+    print()
+    print(json.dumps(summarize(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

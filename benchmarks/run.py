@@ -1,0 +1,75 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--full]``.
+
+One entry per paper table/figure (DESIGN.md §8):
+  Table 2  -> encoding_bits      (bits/entry across coders)
+  Table 3  -> index_size         (T_Q vs T_SQ decomposition + build time)
+  Fig 7    -> index_size sweep   (size/build vs |G| + baselines)
+  Fig 8    -> filter_quality     (candidates + response time vs tau)
+  Fig 10-13-> scalability        (|V_h|, |G|, |Sigma_V|, rho)
+  kernels  -> kernels_bench      (hot-path micro-benchmarks + TPU model)
+  dry-run  -> roofline           (summary of artifacts/dryrun, if present)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,fig8,scal,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks.common import Csv, art_path
+    from benchmarks import (encoding_bits, filter_quality, index_size,
+                            kernels_bench, roofline, scalability)
+
+    csv = Csv()
+    full = args.full
+
+    def want(key: str) -> bool:
+        return only is None or key in only
+
+    if want("table2"):
+        encoding_bits.run(csv, {"aids": 20000 if full else 2000,
+                                "s100k": 20000 if full else 1500,
+                                "pubchem": 20000 if full else 2000})
+    if want("table3"):
+        index_size.run(csv, {"aids": 20000 if full else 2000,
+                             "s100k": 20000 if full else 1500,
+                             "pubchem": 20000 if full else 2000},
+                       sweep=([2000, 8000, 20000, 42687] if full
+                              else [500, 1000, 2000]))
+    if want("fig8"):
+        filter_quality.run(csv, "aids", 10000 if full else 1000,
+                           taus=(1, 2, 3, 4, 5) if full else (1, 2, 3),
+                           n_queries=10 if full else 4)
+        filter_quality.run(csv, "s100k", 5000 if full else 600,
+                           taus=(1, 2, 3), n_queries=4, verify=False)
+    if want("scal"):
+        scalability.vary_query_size(csv, 8000 if full else 1500)
+        scalability.vary_db_size(
+            csv, (2000, 8000, 20000, 50000) if full else (500, 1000, 2000))
+        scalability.vary_labels(csv, 2000 if full else 600)
+        scalability.vary_density(csv, 2000 if full else 600)
+    if want("kernels"):
+        kernels_bench.bench_qgram_filter(csv)
+        kernels_bench.bench_bitunpack(csv)
+        kernels_bench.bench_rank(csv)
+        kernels_bench.bench_attention(csv)
+    if want("roofline"):
+        try:
+            roofline.summarize(csv)
+        except Exception as e:  # artifacts may not exist yet
+            print(f"roofline summary skipped: {e}", file=sys.stderr)
+
+    csv.dump(art_path("bench_results.csv"))
+
+
+if __name__ == "__main__":
+    main()

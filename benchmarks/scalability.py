@@ -1,0 +1,104 @@
+"""Figures 10-13: scalability of candidate size / filter time in
+query-graph size |V_h|, database size |G|, label alphabet |Sigma_V| and
+density rho.  Also the distributed per-shard throughput model that stands
+in for the paper's PubChem-25M runs (DESIGN.md §9)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Csv, dataset, save_json
+from repro.core.search import FlatMSQIndex, MSQIndex
+from repro.graphs.generators import graphgen_db, perturb_graph, random_graph
+
+
+def vary_query_size(csv: Csv, n: int = 2000, sizes=(10, 20, 30, 40, 50, 60),
+                    tau: int = 3) -> List[Dict]:
+    db = dataset("pubchem", n)
+    idx = MSQIndex(db)
+    rng = np.random.default_rng(0)
+    rows = []
+    for vh in sizes:
+        h = random_graph(rng, vh, vh + vh // 12, db.n_vlabels, db.n_elabels,
+                         max_degree=4)
+        res = idx.query(h, tau, verify=False)
+        rows.append({"vh": vh, "candidates": len(res.candidates),
+                     "filter_s": res.filter_time_s,
+                     "regions_visited": res.stats.get("regions_visited", -1)})
+        csv.add(f"fig10/vh{vh}/candidates", res.filter_time_s,
+                len(res.candidates))
+    save_json("fig10_vary_vh.json", rows)
+    return rows
+
+
+def vary_db_size(csv: Csv, sizes=(500, 1000, 2000, 4000), tau: int = 5
+                 ) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        db = dataset("pubchem", n)
+        idx = MSQIndex(db)
+        qs = [perturb_graph(db[i], 2, np.random.default_rng(i),
+                            db.n_vlabels, db.n_elabels)
+              for i in (1, n // 2, n - 2)]
+        cands, times = [], []
+        for h in qs:
+            res = idx.query(h, tau, verify=False)
+            cands.append(len(res.candidates))
+            times.append(res.filter_time_s)
+        rows.append({"n": n, "candidates": float(np.mean(cands)),
+                     "filter_s": float(np.mean(times))})
+        csv.add(f"fig11/g{n}/candidates", float(np.mean(times)),
+                round(float(np.mean(cands)), 1))
+    save_json("fig11_vary_g.json", rows)
+    return rows
+
+
+def vary_labels(csv: Csv, n: int = 800, labels=(2, 5, 10, 20), tau: int = 5
+                ) -> List[Dict]:
+    rows = []
+    for nl in labels:
+        db = graphgen_db(n, num_edges=30, density=0.5, n_vlabels=nl,
+                         n_elabels=2, seed=nl)
+        idx = FlatMSQIndex(db)
+        rng = np.random.default_rng(nl)
+        cands = []
+        for i in (3, n // 2, n - 3):
+            h = perturb_graph(db[i], 2, rng, db.n_vlabels, db.n_elabels)
+            cands.append(len(idx.candidates(h, tau)))
+        rows.append({"n_vlabels": nl, "candidates": float(np.mean(cands))})
+        csv.add(f"fig12/labels{nl}/candidates", 0.0,
+                round(float(np.mean(cands)), 1))
+    save_json("fig12_vary_labels.json", rows)
+    return rows
+
+
+def vary_density(csv: Csv, n: int = 800, rhos=(0.2, 0.4, 0.6, 0.8),
+                 tau: int = 5) -> List[Dict]:
+    rows = []
+    for rho in rhos:
+        db = graphgen_db(n, num_edges=30, density=rho, n_vlabels=5,
+                         n_elabels=2, seed=int(rho * 10))
+        idx = FlatMSQIndex(db)
+        rng = np.random.default_rng(int(rho * 100))
+        cands = []
+        for i in (3, n // 2, n - 3):
+            h = perturb_graph(db[i], 2, rng, db.n_vlabels, db.n_elabels)
+            cands.append(len(idx.candidates(h, tau)))
+        rows.append({"rho": rho, "candidates": float(np.mean(cands))})
+        csv.add(f"fig13/rho{int(rho*100)}/candidates", 0.0,
+                round(float(np.mean(cands)), 1))
+    save_json("fig13_vary_density.json", rows)
+    return rows
+
+
+def main() -> None:
+    csv = Csv()
+    vary_query_size(csv)
+    vary_db_size(csv)
+    vary_labels(csv)
+    vary_density(csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Multi-device MSQ-Index search: the graph-sharded + vocab-sharded (TP)
+filter pipeline on a simulated 8-device mesh.
+
+    PYTHONPATH=src python examples/distributed_search.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    from repro.core import filters_jax as fj
+    from repro.core.distributed import (gather_candidates, make_sharded_search,
+                                        pad_db_to_shards, pad_vocab)
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+
+    db = aids_like_db(4096, seed=0)
+    flat = FlatMSQIndex(db)
+    part = flat.partition
+    dbar = fj.db_arrays_from_encoded(flat.enc, part)
+    print(f"DB: {len(db)} graphs; dense F_D is "
+          f"{dbar.fd.shape} ({dbar.fd.nbytes / 2**20:.1f} MiB)")
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+    rng = np.random.default_rng(3)
+    h = perturb_graph(db[99], 2, rng, db.n_vlabels, db.n_elabels)
+    tau = 3
+    q = fj.query_arrays_from_graph(h, flat.vocab, part, tau,
+                                   vmax=dbar.degseq.shape[1])
+    dbp, qp = pad_vocab(pad_db_to_shards(dbar, 2), q, 4)
+    fn, _, _ = make_sharded_search(mesh, part.x0, part.y0, part.l, k=256,
+                                   batch_axes=("data",), model_axis="model")
+    with jax.sharding.set_mesh(mesh):
+        args = (jax.tree.map(jnp.asarray, dbp), jax.tree.map(jnp.asarray, qp))
+        gids, bnds, cnts = fn(*args)           # compile
+        t0 = time.perf_counter()
+        for _ in range(10):
+            gids, bnds, cnts = fn(*args)
+        jax.block_until_ready(gids)
+        dt = (time.perf_counter() - t0) / 10
+    cand = gather_candidates(np.asarray(gids), np.asarray(bnds),
+                             np.asarray(cnts))
+    ref = flat.candidates(h, tau)
+    print(f"sharded filter: {dt * 1e3:.2f} ms/query, "
+          f"{len(cand)} candidates; matches flat oracle: "
+          f"{cand.tolist() == ref}")
+
+
+if __name__ == "__main__":
+    main()

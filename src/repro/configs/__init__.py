@@ -1,0 +1,67 @@
+"""Config registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture has its own module with ``get_config()``; the
+paper's own configs (msq_aids / msq_pubchem) describe index builds.
+``reduced(cfg)`` shrinks any ModelConfig to a CPU-smoke-test size of the
+same family (same pattern/features, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "qwen3-1.7b",
+    "qwen3-8b",
+    "gemma3-12b",
+    "yi-34b",
+    "seamless-m4t-large-v2",
+    "recurrentgemma-2b",
+    "chameleon-34b",
+    "xlstm-1.3b",
+    "kimi-k2-1t-a32b",
+    "granite-moe-1b-a400m",
+]
+
+MSQ_IDS = ["msq_aids", "msq_pubchem"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = arch.replace("-", "_").replace(".", "_")
+    import importlib
+    m = importlib.import_module(f"repro.configs.{mod}")
+    return m.get_config()
+
+
+def get_msq_config(name: str):
+    import importlib
+    m = importlib.import_module(f"repro.configs.{name}")
+    return m.get_config()
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests (one fwd/train step)."""
+    n_units = min(cfg.n_units, 2)
+    n_enc_units = min(cfg.n_enc_units, 2)
+    kw = dict(
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads * 4 // max(cfg.n_heads, 1), 4)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        n_units=n_units,
+        n_enc_units=n_enc_units,
+        prefix=cfg.prefix[:1],
+        local_window=16,
+        lru_width=64 if cfg.lru_width else None,
+        mlstm_heads=2,
+        dtype="float32",
+        remat=False,
+        attn_impl="xla",
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=2, expert_d_ff=32)
+    return dataclasses.replace(cfg, **kw)

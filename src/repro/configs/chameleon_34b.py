@@ -1,0 +1,15 @@
+"""Chameleon-34B [vlm]: 48L d=8192 64H GQA kv=8 d_ff=22016 vocab=65536,
+early fusion: VQ image tokens share the token vocabulary, so the frontend
+is the ordinary embedding (image tokens are ids).  [arXiv:2405.09818;
+unverified]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b", family="vlm",
+        d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=22016, vocab_size=65536,
+        pattern=(("ga", "swiglu"),), n_units=48,
+        qk_norm=True,
+    )

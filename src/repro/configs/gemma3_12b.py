@@ -1,0 +1,17 @@
+"""Gemma3-12B [dense]: 48L d=3840 16H GQA kv=8 d_ff=15360 vocab=262144,
+5:1 local:global interleave, 128k context.  [hf:google/gemma-3-1b-pt;
+unverified]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    local = ("la", "swiglu")
+    return ModelConfig(
+        name="gemma3-12b", family="dense",
+        d_model=3840, n_heads=16, n_kv_heads=8, head_dim=256,
+        d_ff=15360, vocab_size=262144,
+        pattern=(local, local, local, local, local, ("ga", "swiglu")),
+        n_units=8,
+        qk_norm=True, rope_theta=1e6, local_window=1024,
+        supports_long_context=True,  # 5/6 layers windowed; 8 global layers
+    )

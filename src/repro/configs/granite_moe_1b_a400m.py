@@ -1,0 +1,15 @@
+"""Granite-3.0-1B-A400M [moe]: 24L d=1024 16H GQA kv=8, MoE 32 experts
+top-8 with expert d_ff=512, vocab=49155.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m", family="moe",
+        d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+        d_ff=0, vocab_size=49155,
+        pattern=(("ga", "moe"),), n_units=24,
+        n_experts=32, top_k=8, expert_d_ff=512,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,15 @@
+"""Kimi-K2 1T-A32B [moe]: 61L d=7168 64H GQA kv=8, MoE 384 experts top-8
+with expert d_ff=2048, vocab=163840.  Trillion-parameter MoE (paper-table).
+Optimizer defaults to Adafactor with bf16 states at this scale (see
+EXPERIMENTS.md §Dry-run).  [arXiv:2501.kimi2; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        d_model=7168, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=0, vocab_size=163840,
+        pattern=(("ga", "moe"),), n_units=61,
+        n_experts=384, top_k=8, expert_d_ff=2048,
+    )

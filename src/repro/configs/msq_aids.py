@@ -1,0 +1,27 @@
+"""The paper's own AIDS configuration (Table 1): 42687 molecule graphs,
+avg |V|=25.6 avg |E|=27.5, 62 vertex labels, 3 edge labels; subregion
+length l=4, hybrid block size b=16 (Section 7.1)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MSQConfig:
+    name: str
+    num_graphs: int
+    generator: str          # aids_like | graphgen
+    n_vlabels: int
+    n_elabels: int
+    subregion_l: int = 4
+    block: int = 16
+    fanout: int = 8
+    taus: tuple = (1, 2, 3, 4, 5)
+    num_queries: int = 50
+    # GraphGen params (generator == 'graphgen')
+    num_edges: int = 30
+    density: float = 0.5
+    seed: int = 0
+
+
+def get_config() -> MSQConfig:
+    return MSQConfig(name="msq_aids", num_graphs=42687, generator="aids_like",
+                     n_vlabels=62, n_elabels=3)

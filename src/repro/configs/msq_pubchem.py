@@ -1,0 +1,10 @@
+"""PubChem-scale configuration (scaled to container memory; the paper's
+25M-graph run is emulated by the distributed sharding math in the dry-run
+and by the per-shard measurements in benchmarks/scalability.py)."""
+from repro.configs.msq_aids import MSQConfig
+
+
+def get_config() -> MSQConfig:
+    return MSQConfig(name="msq_pubchem", num_graphs=500_000,
+                     generator="aids_like", n_vlabels=101, n_elabels=3,
+                     seed=7)

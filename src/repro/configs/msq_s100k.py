@@ -1,0 +1,9 @@
+"""S100K.E30.D50.L5 (Table 1): GraphGen synthetic, 100k graphs, 30 edges,
+density 50%, 5 vertex labels, 2 edge labels."""
+from repro.configs.msq_aids import MSQConfig
+
+
+def get_config() -> MSQConfig:
+    return MSQConfig(name="msq_s100k", num_graphs=100_000,
+                     generator="graphgen", n_vlabels=5, n_elabels=2,
+                     num_edges=30, density=0.5, seed=3)

@@ -1,0 +1,14 @@
+"""Qwen3-1.7B [dense]: 28L d=2048 16H GQA kv=8 d_ff=6144 vocab=151936,
+qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b", family="dense",
+        d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+        d_ff=6144, vocab_size=151936,
+        pattern=(("ga", "swiglu"),), n_units=28,
+        qk_norm=True, rope_theta=1e6,
+        tie_embeddings=True,
+    )

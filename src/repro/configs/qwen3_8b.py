@@ -1,0 +1,13 @@
+"""Qwen3-8B [dense]: 36L d=4096 32H GQA kv=8 d_ff=12288 vocab=151936,
+qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b", family="dense",
+        d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=12288, vocab_size=151936,
+        pattern=(("ga", "swiglu"),), n_units=36,
+        qk_norm=True, rope_theta=1e6,
+    )

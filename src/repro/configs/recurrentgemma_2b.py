@@ -1,0 +1,19 @@
+"""RecurrentGemma-2B [hybrid]: 26L d=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000; RG-LRU + local attention at 1:2 attn:recurrent.
+26 = 2 unscanned recurrent blocks + 8 x (rec, rec, local-attn).
+[arXiv:2402.19427; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b", family="hybrid",
+        d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+        d_ff=7680, vocab_size=256000,
+        prefix=(("rglru", "swiglu"), ("rglru", "swiglu")),
+        pattern=(("rglru", "swiglu"), ("rglru", "swiglu"),
+                 ("la", "swiglu")),
+        n_units=8,
+        local_window=2048, lru_width=2560,
+        supports_long_context=True,
+    )

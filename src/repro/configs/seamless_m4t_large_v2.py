@@ -1,0 +1,16 @@
+"""SeamlessM4T-large-v2 [audio]: enc-dec, 24L each side, d=1024 16H
+(kv=16 => MHA) d_ff=8192 vocab=256206.  Modality frontend is a STUB:
+encoder inputs are precomputed frame embeddings (input_specs).
+[arXiv:2308.11596; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="audio",
+        d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+        d_ff=8192, vocab_size=256206,
+        pattern=(("ga", "swiglu"),), n_units=24,
+        enc_pattern=(("ga", "swiglu"),), n_enc_units=24,
+        frontend="embed_stub",
+    )

@@ -1,0 +1,16 @@
+"""xLSTM-1.3B [ssm]: 48 blocks d=2048, mLSTM + sLSTM (7:1), no separate
+FFN (d_ff=0; the blocks carry their own up/down projections).
+[arXiv:2405.04517; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    m = ("mlstm", "none")
+    return ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        d_model=2048, n_heads=4, n_kv_heads=4, head_dim=512,
+        d_ff=0, vocab_size=50304,
+        pattern=(m, m, m, m, m, m, m, ("slstm", "none")),
+        n_units=6, mlstm_heads=4,
+        supports_long_context=True,
+    )

@@ -1,0 +1,13 @@
+"""Yi-34B [dense]: 60L d=7168 56H GQA kv=8 d_ff=20480 vocab=64000,
+llama-arch GQA.  [arXiv:2403.04652; hf]"""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-34b", family="dense",
+        d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+        d_ff=20480, vocab_size=64000,
+        pattern=(("ga", "swiglu"),), n_units=60,
+        rope_theta=5e6,
+    )

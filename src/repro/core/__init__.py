@@ -1,0 +1,14 @@
+# The paper's primary contribution — the MSQ-Index system:
+#   qgrams     — degree-/label-based q-gram extraction + vocabularies
+#   filters    — the admissible lower-bound filters (Lemmas 2, 5)
+#   succinct   — bit vectors, rank, Elias/Golomb coders, hybrid blocks
+#   tree       — q-gram tree + succinct representation (Algorithm 1)
+#   region     — reduced query region (Section 4, formula (1))
+#   search     — MSQIndex / FlatMSQIndex end-to-end engines (Algorithm 2)
+#   verify     — exact GED (A* with cutoff)
+#   baselines  — C-Star / Branch / path q-grams / kappa-AT competitors
+#   filters_jax, distributed — accelerator + multi-pod paths
+
+from repro.core.search import MSQIndex, FlatMSQIndex, QueryResult
+
+__all__ = ["MSQIndex", "FlatMSQIndex", "QueryResult"]

@@ -1,0 +1,241 @@
+"""Competitor filters the paper compares against (Sections 7–8).
+
+* C-Star  (Zeng et al. 2009): star-structure mapping distance;
+  L_S(g,h) = s_m(g,h) / max(4, max(d_g, d_h) + 1), where s_m is the
+  minimum-weight bipartite matching over star edit distances.
+* Branch / Mixed (Zheng et al. 2015): branch structures (vertex label +
+  sorted incident edge labels); L_B(g,h) = b_m(g,h) / 2 with branch edit
+  cost = [vertex label differs] + |multiset diff of edge labels| / 2.
+* GSimJoin (Zhao et al. 2012): path q-grams of length p; counting bound:
+  common q-grams >= max(|Q(g)| - gamma_g * tau, |Q(h)| - gamma_h * tau)
+  where gamma is the max number of q-grams one edit op can touch.
+* kappa-AT (Wang et al. 2012): kappa-adjacent-subtree q-grams, same
+  counting principle with gamma = 1 + kappa * d_max^kappa style bound
+  (we use the standard kappa=1 star form).
+
+All are admissible lower bounds (tested).  ``index_bits`` methods emulate
+each method's index footprint for the Fig-7 comparison.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import linear_sum_assignment
+
+from repro.graphs.graph import Graph
+
+
+# --------------------------------------------------------------------------
+# star / branch structures
+# --------------------------------------------------------------------------
+
+def star_structures(g: Graph) -> List[Tuple[int, Tuple[int, ...], Tuple[int, ...]]]:
+    """Star of v = (label(v), sorted neighbor labels, sorted edge labels)."""
+    adjv: List[List[int]] = [[] for _ in range(g.n)]
+    adje: List[List[int]] = [[] for _ in range(g.n)]
+    for (u, v), l in zip(g.edges, g.elabels):
+        adjv[int(u)].append(int(g.vlabels[int(v)]))
+        adjv[int(v)].append(int(g.vlabels[int(u)]))
+        adje[int(u)].append(int(l))
+        adje[int(v)].append(int(l))
+    return [(int(g.vlabels[v]), tuple(sorted(adjv[v])), tuple(sorted(adje[v])))
+            for v in range(g.n)]
+
+
+def _star_edit_cost(s1, s2) -> int:
+    """Zeng et al.'s lambda: T(r1,r2) + ||L1|-|L2|| + M(L1,L2) over leaf
+    vertex labels.  Edge labels are deliberately NOT counted — the
+    max(4, dmax+1) normaliser of L_S is proven for exactly this lambda
+    (adding terms breaks admissibility; verified by the property tests)."""
+    l1, nb1, _el1 = s1
+    l2, nb2, _el2 = s2
+    cost = int(l1 != l2)
+    d1, d2 = len(nb1), len(nb2)
+    cost += abs(d1 - d2)
+    c1, c2 = Counter(nb1), Counter(nb2)
+    inter_n = sum(min(c1[k], c2[k]) for k in c1)
+    cost += max(d1, d2) - inter_n
+    return cost
+
+
+def _mapping_distance(items_g: Sequence, items_h: Sequence, cost_fn,
+                      eps_cost_g, eps_cost_h) -> float:
+    """Min-cost bipartite matching padded with eps items (Hungarian)."""
+    n, m = len(items_g), len(items_h)
+    size = max(n, m)
+    if size == 0:
+        return 0.0
+    C = np.zeros((size, size), np.float64)
+    for i in range(size):
+        for j in range(size):
+            if i < n and j < m:
+                C[i, j] = cost_fn(items_g[i], items_h[j])
+            elif i < n:
+                C[i, j] = eps_cost_g(items_g[i])
+            elif j < m:
+                C[i, j] = eps_cost_h(items_h[j])
+    r, c = linear_sum_assignment(C)
+    return float(C[r, c].sum())
+
+
+def cstar_lb(g: Graph, h: Graph) -> float:
+    """L_S(g,h) = s_m / max(4, max(d_g, d_h) + 1)."""
+    sg, sh = star_structures(g), star_structures(h)
+    s_m = _mapping_distance(
+        sg, sh, _star_edit_cost,
+        eps_cost_g=lambda s: 1 + 2 * len(s[1]),
+        eps_cost_h=lambda s: 1 + 2 * len(s[1]),
+    )
+    dg = int(g.degrees().max()) if g.n else 0
+    dh = int(h.degrees().max()) if h.n else 0
+    return s_m / max(4, max(dg, dh) + 1)
+
+
+def branch_structures(g: Graph) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Branch of v = (label(v), sorted incident edge labels)."""
+    adje: List[List[int]] = [[] for _ in range(g.n)]
+    for (u, v), l in zip(g.edges, g.elabels):
+        adje[int(u)].append(int(l))
+        adje[int(v)].append(int(l))
+    return [(int(g.vlabels[v]), tuple(sorted(adje[v]))) for v in range(g.n)]
+
+
+def _branch_edit_cost(b1, b2) -> float:
+    l1, e1 = b1
+    l2, e2 = b2
+    c1, c2 = Counter(e1), Counter(e2)
+    inter = sum(min(c1[k], c2[k]) for k in c1)
+    return int(l1 != l2) + (max(len(e1), len(e2)) - inter) / 2.0
+
+
+def branch_lb(g: Graph, h: Graph) -> float:
+    """Mixed/Branch filter: L_B = b_m / 2 (Zheng et al. 2015)."""
+    bg, bh = branch_structures(g), branch_structures(h)
+    b_m = _mapping_distance(
+        bg, bh, _branch_edit_cost,
+        eps_cost_g=lambda b: 1 + len(b[1]) / 2.0,
+        eps_cost_h=lambda b: 1 + len(b[1]) / 2.0,
+    )
+    return b_m / 2.0
+
+
+# --------------------------------------------------------------------------
+# path q-grams (GSimJoin)
+# --------------------------------------------------------------------------
+
+def path_qgrams(g: Graph, p: int = 2) -> Counter:
+    """All simple paths with p edges, as label sequences (both directions
+    canonicalised).  p=2 default keeps enumeration tractable on dense data.
+    """
+    adj: List[List[Tuple[int, int]]] = [[] for _ in range(g.n)]
+    for (u, v), l in zip(g.edges, g.elabels):
+        adj[int(u)].append((int(v), int(l)))
+        adj[int(v)].append((int(u), int(l)))
+    grams: Counter = Counter()
+
+    def extend(path_v: List[int], labels: List[int]) -> None:
+        if (len(path_v) - 1) == p:
+            fwd = tuple(labels)
+            rev = tuple(reversed(labels))
+            grams[min(fwd, rev)] += 1
+            return
+        last = path_v[-1]
+        for (w, el) in adj[last]:
+            if w in path_v:
+                continue
+            extend(path_v + [w],
+                   labels + [el, int(g.vlabels[w])])
+
+    for v in range(g.n):
+        extend([v], [int(g.vlabels[v])])
+    for k in grams:  # each path enumerated from both ends
+        grams[k] //= 2
+    return grams
+
+
+def path_qgram_lb(g: Graph, h: Graph, p: int = 2) -> float:
+    """Counting bound: if ged <= tau then common >= max(|Qg| - gamma tau,
+    |Qh| - gamma tau); rearranged into a lower bound on tau.
+
+    gamma must bound the q-grams an op can touch on ANY graph along the
+    edit path (intermediate degrees are bounded by the larger endpoint
+    degree here — the conservative shared-gamma form), so it is shared
+    between the two sides.
+    """
+    qg, qh = path_qgrams(g, p), path_qgrams(h, p)
+    common = sum(min(qg[k], qh[k]) for k in qg.keys() & qh.keys())
+    gamma = _max_qgrams_per_op(g, h, p)
+    bound_g = (sum(qg.values()) - common) / gamma
+    bound_h = (sum(qh.values()) - common) / gamma
+    return max(bound_g, bound_h, 0.0)
+
+
+def _max_qgrams_per_op(g: Graph, h: Graph, p: int) -> int:
+    """gamma: max #path-q-grams one edit op can affect along the path."""
+    dg = int(g.degrees().max()) if g.m else 0
+    dh = int(h.degrees().max()) if h.m else 0
+    dmax = max(dg, dh, 1)
+    # an edge op can touch every path through that edge: <= p * dmax^(p-1);
+    # any op touches >= 2 endpoint neighbourhoods
+    return max(2, p * dmax ** (p - 1))
+
+
+# --------------------------------------------------------------------------
+# kappa-AT (tree q-grams)
+# --------------------------------------------------------------------------
+
+def kat_qgrams(g: Graph, kappa: int = 1) -> Counter:
+    """kappa-adjacent-subtree q-grams; kappa=1 = (label, sorted nbr labels)."""
+    adj: List[List[int]] = [[] for _ in range(g.n)]
+    for (u, v) in g.edges:
+        adj[int(u)].append(int(g.vlabels[int(v)]))
+        adj[int(v)].append(int(g.vlabels[int(u)]))
+    grams: Counter = Counter()
+    for v in range(g.n):
+        grams[(int(g.vlabels[v]), tuple(sorted(adj[v])))] += 1
+    return grams
+
+
+def kat_lb(g: Graph, h: Graph, kappa: int = 1) -> float:
+    qg, qh = kat_qgrams(g, kappa), kat_qgrams(h, kappa)
+    common = sum(min(qg[k], qh[k]) for k in qg.keys() & qh.keys())
+    dg = int(g.degrees().max()) if g.m else 0
+    dh = int(h.degrees().max()) if h.m else 0
+    # one op touches <= 1 + dmax subtrees (kappa=1) on any graph along the
+    # edit path; shared gamma (per-side gammas are NOT admissible — an op
+    # can touch intermediate vertices whose degree exceeds that side's dmax)
+    gamma = max(2, 1 + max(dg, dh))
+    return max((sum(qg.values()) - common) / gamma,
+               (sum(qh.values()) - common) / gamma, 0.0)
+
+
+# --------------------------------------------------------------------------
+# index-size emulation for Fig 7 comparisons (bits)
+# --------------------------------------------------------------------------
+
+def cstar_index_bits(db) -> int:
+    """C-Star stores every star structure: label + nbr labels + edge labels."""
+    total = 0
+    for g in db:
+        for (l, nb, el) in star_structures(g):
+            total += 32 * (1 + len(nb) + len(el))
+    return total
+
+
+def branch_index_bits(db) -> int:
+    """Mixed stores branch + disjoint structures (~2x branch footprint)."""
+    total = 0
+    for g in db:
+        for (l, el) in branch_structures(g):
+            total += 32 * (1 + len(el)) * 2
+    return total
+
+
+def path_index_bits(db, p: int = 2) -> int:
+    """GSimJoin stores every path q-gram occurrence (id + graph ref)."""
+    total = 0
+    for g in db:
+        total += 64 * sum(path_qgrams(g, p).values())
+    return total

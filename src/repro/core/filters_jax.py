@@ -1,0 +1,179 @@
+"""JAX (accelerator) implementations of the filter cascade.
+
+These mirror ``repro.core.filters.batched_bounds_np`` exactly (tested) and
+are jit/shard_map friendly: fixed shapes, no data-dependent control flow.
+
+Data layout (DESIGN.md §3): the degree-q-gram frequency matrix is dense
+over the frequency-ordered vocabulary (optionally only its hot prefix, in
+which case the caller must add the CSR tail correction to ``c_d`` *before*
+thresholding to stay admissible).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DBArrays(NamedTuple):
+    """Device-side database shard (all (B, ...) along the graph axis)."""
+
+    nv: jax.Array           # (B,)   int32
+    ne: jax.Array           # (B,)   int32
+    degseq: jax.Array       # (B, Vmax) int32, non-increasing, zero-padded
+    vhist: jax.Array        # (B, n_vlabels) int32
+    ehist: jax.Array        # (B, n_elabels) int32
+    fd: jax.Array           # (B, U) int32 dense degree-q-gram frequencies
+    region_i: jax.Array     # (B,)   int32
+    region_j: jax.Array     # (B,)   int32
+
+
+class QueryArrays(NamedTuple):
+    nv: jax.Array           # () int32
+    ne: jax.Array           # () int32
+    sigma: jax.Array        # (Vmax,) int32
+    vhist: jax.Array        # (n_vlabels,) int32
+    ehist: jax.Array        # (n_elabels,) int32
+    fd: jax.Array           # (U,) int32
+    tau: jax.Array          # () int32
+
+
+def min_sum(a: jax.Array, b: jax.Array, axis: int = -1) -> jax.Array:
+    """sum(min(a, b)) — the multiset-intersection contraction."""
+    return jnp.minimum(a, b).sum(axis=axis)
+
+
+def batched_bounds(db: DBArrays, q: QueryArrays,
+                   c_d: Optional[jax.Array] = None) -> jax.Array:
+    """Combined admissible lower bound per graph; (B,) int32.
+
+    ``c_d`` overrides the dense F_D intersection (e.g. the Pallas kernel's
+    output, or hot-prefix + tail correction).
+    """
+    nv = db.nv.astype(jnp.int32)
+    ne = db.ne.astype(jnp.int32)
+    overlap_v = min_sum(db.vhist, q.vhist[None, :]).astype(jnp.int32)
+    overlap_e = min_sum(db.ehist, q.ehist[None, :]).astype(jnp.int32)
+    c_l = overlap_v + overlap_e
+    if c_d is None:
+        c_d = min_sum(db.fd, q.fd[None, :]).astype(jnp.int32)
+    max_nv = jnp.maximum(nv, q.nv)
+    max_ne = jnp.maximum(ne, q.ne)
+
+    number_count = jnp.abs(nv - q.nv) + jnp.abs(ne - q.ne)
+    label_qgram = max_nv + max_ne - c_l
+    # ceil((2 max_nv - overlap_v - c_d) / 2), clamped at 0
+    dq_num = 2 * max_nv - overlap_v - c_d
+    degree_qgram = jnp.maximum(0, (dq_num + 1) // 2)
+
+    d = db.degseq.astype(jnp.int32) - q.sigma[None, :].astype(jnp.int32)
+    s1 = jnp.maximum(d, 0).sum(axis=1)
+    s2 = jnp.maximum(-d, 0).sum(axis=1)
+    delta = (s1 + 1) // 2 + (s2 + 1) // 2
+    min_deg = min_sum(db.degseq, q.sigma[None, :]).astype(jnp.int32)
+    lam2 = jnp.maximum(q.ne + ne - min_deg, 0)
+    lam = jnp.where(q.nv <= nv, delta, lam2)
+    degree_sequence = max_nv - overlap_v + lam
+
+    return jnp.maximum(
+        jnp.maximum(number_count, label_qgram),
+        jnp.maximum(degree_qgram, degree_sequence),
+    ).astype(jnp.int32)
+
+
+def region_mask(db: DBArrays, q: QueryArrays,
+                x0: int, y0: int, l: int) -> jax.Array:
+    """Reduced-query-region membership (formula (1)); (B,) bool."""
+    s, ddiag = x0 + y0, y0 - x0
+    i1 = jnp.floor_divide(q.ne - q.tau + q.nv - s, l)
+    i2 = jnp.floor_divide(q.ne + q.tau + q.nv - s, l)
+    j1 = jnp.floor_divide(q.ne - q.tau - q.nv - ddiag, l)
+    j2 = jnp.floor_divide(q.ne + q.tau - q.nv - ddiag, l)
+    return ((db.region_i >= i1) & (db.region_i <= i2)
+            & (db.region_j >= j1) & (db.region_j <= j2))
+
+
+def filter_pass(db: DBArrays, q: QueryArrays, x0: int, y0: int, l: int,
+                c_d: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """(pass_mask, bounds): the full cascade incl. region reduction."""
+    bounds = batched_bounds(db, q, c_d=c_d)
+    mask = region_mask(db, q, x0, y0, l) & (bounds <= q.tau)
+    return mask, bounds
+
+
+def topk_candidates(mask: jax.Array, bounds: jax.Array,
+                    k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-size candidate extraction (jit-able ragged->dense).
+
+    Returns (ids, bounds, count): the (up to) k best (lowest-bound) passing
+    graphs; ids are -1 beyond ``count``.
+    """
+    B = mask.shape[0]
+    score = jnp.where(mask, -bounds.astype(jnp.int32), -(2 ** 30))
+    vals, idx = jax.lax.top_k(score, min(k, B))
+    valid = vals > -(2 ** 30)
+    ids = jnp.where(valid, idx, -1)
+    return ids, jnp.where(valid, -vals, 2 ** 30), valid.sum()
+
+
+# --------------------------------------------------------------------------
+# host <-> device conversion
+# --------------------------------------------------------------------------
+
+def db_arrays_from_encoded(enc, partition, hot: Optional[int] = None,
+                           vmax: Optional[int] = None) -> DBArrays:
+    """Materialise DBArrays (numpy) from an EncodedDB + RegionPartition."""
+    from repro.graphs.batching import PaddedGraphBatch
+
+    B = len(enc)
+    if vmax is None:
+        vmax = int(max(enc.nv.max(), 1))
+    U = enc.vocab.n_degree_ids if hot is None else min(hot, enc.vocab.n_degree_ids)
+    fd = np.zeros((B, max(U, 1)), np.int32)
+    for i in range(B):
+        ids, cnt = enc.row_degree(i)
+        sel = ids < U
+        fd[i, ids[sel]] = cnt[sel]
+    ri, rj = partition.region_of(enc.nv, enc.ne)
+    # degseq/vhist/ehist recomputed from CSR data:
+    degs = np.zeros((B, vmax), np.int32)
+    t_d = enc.vocab.degree_id_table()
+    for i in range(B):
+        ids, cnt = enc.row_degree(i)
+        d = np.repeat(t_d[ids], cnt)
+        d = np.sort(d)[::-1][:vmax]
+        degs[i, :len(d)] = d
+    nvl, nel = enc.vocab.n_vlabels, enc.vocab.n_elabels
+    vhist = np.zeros((B, nvl), np.int32)
+    ehist = np.zeros((B, nel), np.int32)
+    for i in range(B):
+        ids, cnt = enc.row_label(i)
+        vsel = ids < nvl
+        vhist[i, ids[vsel]] = cnt[vsel]
+        esel = ~vsel
+        ehist[i, ids[esel] - nvl] = cnt[esel]
+    return DBArrays(
+        nv=enc.nv.astype(np.int32), ne=enc.ne.astype(np.int32),
+        degseq=degs, vhist=vhist, ehist=ehist, fd=fd,
+        region_i=ri.astype(np.int32), region_j=rj.astype(np.int32))
+
+
+def query_arrays_from_graph(h, vocab, partition, tau: int, vmax: int,
+                            hot: Optional[int] = None) -> QueryArrays:
+    from repro.core.tree import QueryTuple
+
+    q = QueryTuple.from_graph(h, vocab)
+    U = vocab.n_degree_ids if hot is None else min(hot, vocab.n_degree_ids)
+    fd = np.zeros(max(U, 1), np.int32)
+    sel = q.d_ids < U
+    fd[q.d_ids[sel]] = q.d_cnt[sel]
+    sigma = np.zeros(vmax, np.int32)
+    sigma[:min(len(q.sigma), vmax)] = q.sigma[:vmax]
+    return QueryArrays(
+        nv=np.int32(h.n), ne=np.int32(h.m), sigma=sigma,
+        vhist=h.vertex_label_hist(vocab.n_vlabels).astype(np.int32),
+        ehist=h.edge_label_hist(vocab.n_elabels).astype(np.int32),
+        fd=fd, tau=np.int32(tau))

@@ -1,0 +1,178 @@
+"""MSQ-Index: the end-to-end filter-and-verify engine (Algorithm 2).
+
+Build:   GraphDB -> q-gram vocab -> region partition -> one succinct q-gram
+         tree per subregion A_{i,j} (graphs region-sorted so each region is
+         a contiguous slab — DESIGN.md §3).
+Query:   reduced query region Q_h (formula (1)) -> Algorithm 1 per tree ->
+         candidate ids -> exact GED verification (ged_upto with tau cutoff).
+
+``FlatMSQIndex`` is the TPU-mode equivalent: no tree, leaf-level filters
+evaluated as one vectorised pass (oracle for the Pallas path).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import filters
+from repro.core.qgrams import EncodedDB, QGramVocab, sparse_intersection_size
+from repro.core.region import RegionPartition, default_partition, group_by_region
+from repro.core.tree import (QGramTree, QueryTuple, SuccinctQGramTree,
+                             leaves_from_encoded)
+from repro.core.verify import ged_upto
+from repro.graphs.graph import Graph, GraphDB
+
+
+@dataclass
+class QueryResult:
+    candidates: List[int]
+    matches: List[Tuple[int, int]]          # (graph_id, ged)
+    n_filtered: int                         # graphs pruned by the index
+    filter_time_s: float
+    verify_time_s: float
+    stats: Dict[str, int] = field(default_factory=dict)
+
+
+class MSQIndex:
+    """The paper's index: region-partitioned succinct q-gram trees."""
+
+    def __init__(self, db: GraphDB, l: int = 4, block: int = 16,
+                 fanout: int = 8, vocab: Optional[QGramVocab] = None):
+        t0 = time.perf_counter()
+        self.db = db
+        self.enc = EncodedDB.build(db, vocab)
+        self.vocab = self.enc.vocab
+        nv, ne = db.sizes()
+        self.partition = default_partition(nv, ne, l=l)
+        self.regions = group_by_region(self.partition, nv, ne)
+        self.trees: Dict[Tuple[int, int], SuccinctQGramTree] = {}
+        self._plain_trees: Dict[Tuple[int, int], QGramTree] = {}
+        for key, gids in self.regions.items():
+            leaves = leaves_from_encoded(self.enc, gids)
+            tree = QGramTree(leaves, fanout=fanout)
+            self._plain_trees[key] = tree
+            self.trees[key] = SuccinctQGramTree(tree, self.vocab, block=block)
+        self.build_time_s = time.perf_counter() - t0
+
+    # ---- Algorithm 2 ------------------------------------------------------
+    def candidates(self, h: Graph, tau: int,
+                   collect_stats: bool = False) -> Tuple[List[int], Dict]:
+        q = QueryTuple.from_graph(h, self.vocab)
+        i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)
+        cand: List[int] = []
+        stats = {"regions_total": len(self.regions), "regions_visited": 0,
+                 "nodes_visited": 0, "leaves_checked": 0}
+        for (i, j), tree in self.trees.items():
+            if not (i1 <= i <= i2 and j1 <= j <= j2):
+                continue
+            stats["regions_visited"] += 1
+            if collect_stats:
+                c, s = tree.search(q, tau, collect_stats=True)
+                stats["nodes_visited"] += s["nodes_visited"]
+                stats["leaves_checked"] += s["leaves_checked"]
+            else:
+                c = tree.search(q, tau)
+            cand.extend(c)
+        return sorted(cand), stats
+
+    def query(self, h: Graph, tau: int, verify: bool = True,
+              collect_stats: bool = False) -> QueryResult:
+        t0 = time.perf_counter()
+        cand, stats = self.candidates(h, tau, collect_stats)
+        t1 = time.perf_counter()
+        matches: List[Tuple[int, int]] = []
+        if verify:
+            for gid in cand:
+                d = ged_upto(self.db[gid], h, tau)
+                if d <= tau:
+                    matches.append((gid, d))
+        t2 = time.perf_counter()
+        return QueryResult(
+            candidates=cand,
+            matches=matches,
+            n_filtered=len(self.db) - len(cand),
+            filter_time_s=t1 - t0,
+            verify_time_s=t2 - t1,
+            stats=stats,
+        )
+
+    # ---- size accounting (Table 3) -----------------------------------------
+    def size_bits(self) -> Dict[str, int]:
+        agg = {"S_a": 0, "S_b": 0, "S_c": 0, "total": 0}
+        for tree in self.trees.values():
+            for k, v in tree.size_bits().items():
+                agg[k] += v
+        return agg
+
+    def plain_size_bits(self) -> Dict[str, int]:
+        agg = {"S_a": 0, "S_b": 0, "S_c": 0, "total": 0}
+        for tree in self._plain_trees.values():
+            for k, v in tree.size_bits().items():
+                agg[k] += v
+        return agg
+
+
+class FlatMSQIndex:
+    """Tree-free vectorised variant (the TPU serving mode's oracle).
+
+    All leaf-level filters evaluated for every graph in the reduced query
+    region with numpy batch ops; equivalent candidate sets to MSQIndex
+    (tested) because the tree only prunes with *weaker* bounds than the
+    leaves re-check.
+    """
+
+    def __init__(self, db: GraphDB, l: int = 4,
+                 vocab: Optional[QGramVocab] = None):
+        t0 = time.perf_counter()
+        self.db = db
+        self.enc = EncodedDB.build(db, vocab)
+        self.vocab = self.enc.vocab
+        self.nv, self.ne = db.sizes()
+        self.partition = default_partition(self.nv, self.ne, l=l)
+        ri, rj = self.partition.region_of(self.nv, self.ne)
+        self.region_i, self.region_j = ri, rj
+        vmax = int(max(self.nv.max(), 1))
+        from repro.graphs.batching import PaddedGraphBatch
+        self.batch = PaddedGraphBatch.from_db(db, vmax=vmax)
+        self.build_time_s = time.perf_counter() - t0
+
+    def candidates(self, h: Graph, tau: int) -> List[int]:
+        i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)
+        in_region = ((self.region_i >= i1) & (self.region_i <= i2)
+                     & (self.region_j >= j1) & (self.region_j <= j2))
+        idx = np.flatnonzero(in_region)
+        if len(idx) == 0:
+            return []
+        q = QueryTuple.from_graph(h, self.vocab)
+        c_d = np.array([
+            sparse_intersection_size(*self.enc.row_degree(int(g)),
+                                     q.d_ids, q.d_cnt) for g in idx
+        ], np.int64)
+        vmax = self.batch.vmax
+        q_sigma = np.zeros(vmax, np.int64)
+        q_sigma[:min(h.n, vmax)] = q.sigma[:vmax]
+        b = self.batch
+        bounds = filters.batched_bounds_np(
+            b.nv[idx], b.ne[idx], b.degseq[idx], b.vlabel_hist[idx],
+            b.elabel_hist[idx], c_d, h.n, h.m, q_sigma,
+            h.vertex_label_hist(self.vocab.n_vlabels),
+            h.edge_label_hist(self.vocab.n_elabels))
+        keep = bounds["combined"] <= tau
+        return sorted(int(g) for g in idx[keep])
+
+    def query(self, h: Graph, tau: int, verify: bool = True) -> QueryResult:
+        t0 = time.perf_counter()
+        cand = self.candidates(h, tau)
+        t1 = time.perf_counter()
+        matches = []
+        if verify:
+            for gid in cand:
+                d = ged_upto(self.db[gid], h, tau)
+                if d <= tau:
+                    matches.append((gid, d))
+        t2 = time.perf_counter()
+        return QueryResult(cand, matches, len(self.db) - len(cand),
+                           t1 - t0, t2 - t1)

@@ -1,0 +1,449 @@
+"""Succinct building blocks (Section 5.2–5.4).
+
+Paper-faithful host implementations:
+
+* ``BitVector`` — packed bits + two-level rank dictionary (Jacobson-style):
+  superblocks of 512 bits (cumulative int64) + 64-bit blocks (int16 offsets),
+  giving O(1) ``rank1`` with o(n) extra bits.
+* ``elias_gamma`` / ``elias_delta`` / ``golomb`` / fixed-length coders —
+  the encodings compared in Table 2.
+* ``HybridEncodedArray`` — the paper's hybrid scheme: Psi is split into
+  fixed-length blocks of ``b`` entries; each block is stored either
+  fixed-width (floor(log2 b_max)+1 bits/entry) or Elias-gamma, whichever is
+  smaller.  Auxiliary structures: SB (block start offsets in S), flag (1 bit
+  per block + rank dictionary), words (per fixed block width).  ``access(j)``
+  implements formula (2); whole-block decode is vectorised for the batch
+  paths.
+
+All size accounting is in *bits* and mirrors the Section 5.4 analysis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# bit I/O
+# --------------------------------------------------------------------------
+
+class BitWriter:
+    """Append-only MSB-first bit writer backed by a python int buffer."""
+
+    def __init__(self) -> None:
+        self._chunks: List[Tuple[int, int]] = []  # (value, nbits)
+        self._nbits = 0
+
+    def write(self, value: int, nbits: int) -> None:
+        if nbits < 0 or (nbits and value >> nbits):
+            raise ValueError(f"value {value} does not fit in {nbits} bits")
+        if nbits == 0:
+            return
+        self._chunks.append((int(value), int(nbits)))
+        self._nbits += int(nbits)
+
+    def write_unary_zeros(self, n: int) -> None:
+        """n zero bits (the gamma-code prefix)."""
+        while n > 60:
+            self.write(0, 60)
+            n -= 60
+        if n:
+            self.write(0, n)
+
+    @property
+    def nbits(self) -> int:
+        return self._nbits
+
+    def to_words(self) -> np.ndarray:
+        """Pack into a uint64 array, MSB-first within each word."""
+        n_words = (self._nbits + 63) // 64
+        words = np.zeros(n_words, np.uint64)
+        pos = 0
+        for value, nbits in self._chunks:
+            # write bits [pos, pos+nbits) MSB-first
+            remaining = nbits
+            v = value
+            while remaining > 0:
+                w = pos // 64
+                off = pos % 64
+                take = min(64 - off, remaining)
+                shift = remaining - take
+                part = (v >> shift) & ((1 << take) - 1)
+                words[w] |= np.uint64(part << (64 - off - take))
+                pos += take
+                remaining -= take
+        return words
+
+
+class BitReader:
+    """Random-access MSB-first reader over packed uint64 words."""
+
+    def __init__(self, words: np.ndarray, nbits: int):
+        self.words = words.astype(np.uint64)
+        self.nbits = int(nbits)
+
+    def read(self, pos: int, nbits: int) -> int:
+        """Read ``nbits`` starting at absolute bit position ``pos``."""
+        if nbits == 0:
+            return 0
+        out = 0
+        remaining = nbits
+        while remaining > 0:
+            w = pos // 64
+            off = pos % 64
+            take = min(64 - off, remaining)
+            word = int(self.words[w])
+            part = (word >> (64 - off - take)) & ((1 << take) - 1)
+            out = (out << take) | part
+            pos += take
+            remaining -= take
+        return out
+
+    def count_leading_zeros(self, pos: int, limit: int = 64) -> int:
+        """Zeros starting at ``pos`` before the first 1 (gamma prefix)."""
+        n = 0
+        while n < limit and pos + n < self.nbits:
+            if self.read(pos + n, 1):
+                return n
+            n += 1
+        return n
+
+
+# --------------------------------------------------------------------------
+# bit vector with O(1) rank
+# --------------------------------------------------------------------------
+
+SUPER = 512
+BLOCK = 64
+
+
+class BitVector:
+    """Packed bit vector with a two-level rank dictionary.
+
+    ``rank1(j)`` = number of 1s in positions [0, j)  (exclusive — the
+    convention matching formula (3): F[i] nonzero at global bit p maps to
+    Psi[rank1(p)]).
+    """
+
+    def __init__(self, bits: np.ndarray):
+        """``bits``: uint8/bool array of 0/1 values."""
+        bits = np.asarray(bits).astype(np.uint8)
+        self.n = int(bits.shape[0])
+        pad = (-self.n) % 64
+        padded = np.pad(bits, (0, pad))
+        # pack MSB-first into uint64 words
+        b8 = np.packbits(padded)  # MSB-first uint8 bytes
+        pad8 = (-len(b8)) % 8
+        b8 = np.pad(b8, (0, pad8))
+        self.words = b8.view(">u8").astype(np.uint64)
+        self._build_rank()
+
+    # two-level rank dictionary (Jacobson): int64 superblock counts every
+    # SUPER bits + uint16 intra-superblock offsets every BLOCK bits
+    def _build_rank(self) -> None:
+        pc = _popcount64(self.words)
+        self._word_pop = pc
+        cum = np.concatenate([[0], np.cumsum(pc)]).astype(np.int64)
+        self._cum = cum                      # per-word cumulative (query fast path)
+        wps = SUPER // 64                    # words per superblock
+        n_super = (len(self.words) + wps - 1) // wps
+        sup = np.zeros(n_super + 1, np.int64)
+        if len(self.words):
+            sup[1:] = np.add.reduceat(
+                pc, np.arange(0, len(self.words), wps)).cumsum()
+        self._super = sup
+        # intra-superblock offsets of each word (<= 512, 10 bits each)
+        base = np.repeat(sup[:-1], wps)[:len(self.words)]
+        self._block_off = (cum[:-1] - base).astype(np.uint16)
+
+    def rank1(self, j: int) -> int:
+        """Number of ones in [0, j)."""
+        if j <= 0:
+            return 0
+        j = min(j, self.n)
+        w = j // 64
+        r = int(self._cum[w])
+        rem = j % 64
+        if rem:
+            word = int(self.words[w])
+            r += bin(word >> (64 - rem)).count("1")
+        return r
+
+    def rank1_bulk(self, idx: np.ndarray) -> np.ndarray:
+        """Vectorised rank for many positions."""
+        idx = np.minimum(np.maximum(np.asarray(idx, np.int64), 0), self.n)
+        w = idx // 64
+        rem = idx % 64
+        base = self._cum[w]
+        words = self.words[np.minimum(w, len(self.words) - 1)]
+        shifted = np.where(rem > 0,
+                           words >> (64 - rem).astype(np.uint64),
+                           np.uint64(0))
+        extra = _popcount64(shifted)
+        return base + np.where(rem > 0, extra, 0)
+
+    def get(self, j: int) -> int:
+        if j < 0 or j >= self.n:
+            return 0
+        w, off = divmod(j, 64)
+        return (int(self.words[w]) >> (63 - off)) & 1
+
+    def get_bulk(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64)
+        valid = (idx >= 0) & (idx < self.n)
+        safe = np.where(valid, idx, 0)
+        w = safe // 64
+        off = safe % 64
+        bits = (self.words[w] >> (63 - off).astype(np.uint64)) & np.uint64(1)
+        return np.where(valid, bits.astype(np.int64), 0)
+
+    def size_bits(self) -> dict:
+        """Bits used: raw + the two-level rank dictionary (Section 5.4:
+        |B| + o(|B|)): one int64 per 512-bit superblock (12.5%) plus one
+        10-bit intra-superblock offset per 64-bit word (15.6%)."""
+        raw = len(self.words) * 64
+        rank_dict = len(self._super) * 64 + len(self.words) * 10
+        return {"raw": raw, "rank": rank_dict, "total": raw + rank_dict}
+
+
+def _popcount64(x: np.ndarray) -> np.ndarray:
+    """Vectorised popcount of uint64 (SWAR)."""
+    x = x.astype(np.uint64)
+    m1 = np.uint64(0x5555555555555555)
+    m2 = np.uint64(0x3333333333333333)
+    m4 = np.uint64(0x0F0F0F0F0F0F0F0F)
+    h01 = np.uint64(0x0101010101010101)
+    x = x - ((x >> np.uint64(1)) & m1)
+    x = (x & m2) + ((x >> np.uint64(2)) & m2)
+    x = (x + (x >> np.uint64(4))) & m4
+    return ((x * h01) >> np.uint64(56)).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# integer coders (Table 2)
+# --------------------------------------------------------------------------
+
+def gamma_length(x: int) -> int:
+    """|gamma(x)| = 2 floor(log2 x) + 1, x >= 1."""
+    if x < 1:
+        raise ValueError("gamma requires x >= 1")
+    return 2 * (x.bit_length() - 1) + 1
+
+
+def write_gamma(bw: BitWriter, x: int) -> None:
+    n = x.bit_length() - 1
+    bw.write_unary_zeros(n)
+    bw.write(x, n + 1)
+
+
+def read_gamma(br: BitReader, pos: int) -> Tuple[int, int]:
+    """Returns (value, new_pos)."""
+    n = br.count_leading_zeros(pos)
+    val = br.read(pos + n, n + 1)
+    return val, pos + 2 * n + 1
+
+
+def delta_length(x: int) -> int:
+    """Elias delta: gamma(floor(log2 x)+1) + floor(log2 x) bits."""
+    if x < 1:
+        raise ValueError("delta requires x >= 1")
+    n = x.bit_length() - 1
+    return gamma_length(n + 1) + n
+
+
+def write_delta(bw: BitWriter, x: int) -> None:
+    n = x.bit_length() - 1
+    write_gamma(bw, n + 1)
+    if n:
+        bw.write(x & ((1 << n) - 1), n)
+
+
+def read_delta(br: BitReader, pos: int) -> Tuple[int, int]:
+    np1, pos = read_gamma(br, pos)
+    n = np1 - 1
+    if n == 0:
+        return 1, pos
+    rest = br.read(pos, n)
+    return (1 << n) | rest, pos + n
+
+
+def golomb_length(x: int, m: int) -> int:
+    """Golomb code length for x >= 1 with parameter m (truncated binary)."""
+    q = (x - 1) // m
+    r = (x - 1) % m
+    if m & (m - 1) == 0:  # power of two (Rice): exactly log2(m) bits
+        return q + 1 + (m.bit_length() - 1)
+    b = m.bit_length()          # ceil(log2 m) for non-powers of two
+    cutoff = (1 << b) - m       # remainders below cutoff take b-1 bits
+    return q + 1 + (b - 1 if r < cutoff else b)
+
+
+def fixed_length(values: Sequence[int]) -> int:
+    """Bits/entry of fixed-length coding of a block: floor(log2 max)+1."""
+    mx = max(int(v) for v in values)
+    return max(mx.bit_length(), 1)
+
+
+# --------------------------------------------------------------------------
+# the hybrid-encoded array (Psi_X of the paper)
+# --------------------------------------------------------------------------
+
+@dataclass
+class HybridSizes:
+    s_bits: int
+    sb_bits: int
+    flag_bits: int
+    words_bits: int
+
+    @property
+    def total(self) -> int:
+        return self.s_bits + self.sb_bits + self.flag_bits + self.words_bits
+
+
+class HybridEncodedArray:
+    """Psi stored with the paper's per-block hybrid encoding.
+
+    Parameters:
+      values: positive ints (the nonzero F entries, concatenated over nodes).
+      block:  entries per block (paper's ``b``; default 16 as in Sec 7.1).
+    """
+
+    def __init__(self, values: Sequence[int], block: int = 16):
+        values = np.asarray(list(values), np.int64)
+        if (values < 1).any():
+            raise ValueError("Psi entries must be >= 1 (nonzeros only)")
+        self.n = int(values.shape[0])
+        self.block = int(block)
+        n_blocks = (self.n + block - 1) // block if self.n else 0
+
+        bw = BitWriter()
+        sb = np.zeros(n_blocks + 1, np.int64)
+        flag_bits = np.zeros(n_blocks, np.uint8)
+        words: List[int] = []
+        for k in range(n_blocks):
+            blk = values[k * block:(k + 1) * block]
+            w = fixed_length(blk)
+            fixed_cost = len(blk) * w
+            gamma_cost = int(sum(gamma_length(int(v)) for v in blk))
+            sb[k] = bw.nbits
+            if fixed_cost <= gamma_cost:
+                flag_bits[k] = 1
+                words.append(w)
+                for v in blk:
+                    bw.write(int(v), w)
+            else:
+                for v in blk:
+                    write_gamma(bw, int(v))
+        sb[n_blocks] = bw.nbits
+        self._sb = sb
+        self._flag = BitVector(flag_bits)
+        self._words = np.asarray(words, np.int64)
+        self._s_words = bw.to_words()
+        self._s_nbits = bw.nbits
+        self._reader = BitReader(self._s_words, bw.nbits)
+
+    # ---- access (formula (2)) --------------------------------------------
+    def access(self, j: int) -> int:
+        if j < 0 or j >= self.n:
+            raise IndexError(j)
+        k, r = divmod(j, self.block)
+        pos = int(self._sb[k])
+        if self._flag.get(k):
+            w = int(self._words[self._flag.rank1(k)])
+            return self._reader.read(pos + r * w, w)
+        val = 0
+        for _ in range(r + 1):
+            val, pos = read_gamma(self._reader, pos)
+        return val
+
+    def decode_block(self, k: int) -> np.ndarray:
+        """Decode one whole block (vectorised fixed path)."""
+        lo = k * self.block
+        hi = min(lo + self.block, self.n)
+        cnt = hi - lo
+        pos = int(self._sb[k])
+        if self._flag.get(k):
+            w = int(self._words[self._flag.rank1(k)])
+            return np.array(
+                [self._reader.read(pos + i * w, w) for i in range(cnt)],
+                np.int64)
+        out = np.zeros(cnt, np.int64)
+        for i in range(cnt):
+            out[i], pos = read_gamma(self._reader, pos)
+        return out
+
+    def decode_all(self) -> np.ndarray:
+        if self.n == 0:
+            return np.zeros(0, np.int64)
+        n_blocks = (self.n + self.block - 1) // self.block
+        return np.concatenate([self.decode_block(k) for k in range(n_blocks)])
+
+    def access_bulk(self, idx: np.ndarray) -> np.ndarray:
+        return np.array([self.access(int(j)) for j in np.asarray(idx)], np.int64)
+
+    # ---- sizes (Section 5.4) ----------------------------------------------
+    def size_bits(self) -> HybridSizes:
+        n_blocks = (self.n + self.block - 1) // self.block if self.n else 0
+        sb_entry = max(int(self._s_nbits).bit_length(), 1)
+        if len(self._words):
+            words_bits = len(self._words) * max(int(self._words.max()).bit_length(), 1)
+        else:
+            words_bits = 0
+        return HybridSizes(
+            s_bits=self._s_nbits,
+            sb_bits=(n_blocks + 1) * sb_entry,
+            flag_bits=self._flag.size_bits()["total"],
+            words_bits=words_bits,
+        )
+
+    def bits_per_entry(self) -> float:
+        return self.size_bits().s_bits / max(self.n, 1)
+
+
+# --------------------------------------------------------------------------
+# whole-array single-coder encoders (for the Table 2 comparison)
+# --------------------------------------------------------------------------
+
+def encoded_bits_per_entry(values: Sequence[int], scheme: str,
+                           block: int = 16) -> float:
+    """Average bits/entry of Psi under a given scheme (Table 2 columns)."""
+    values = [int(v) for v in values]
+    if not values:
+        return 0.0
+    if scheme == "fixed":
+        total = 0
+        for k in range(0, len(values), block):
+            blk = values[k:k + block]
+            total += len(blk) * fixed_length(blk)
+        return total / len(values)
+    if scheme == "gamma":
+        return sum(gamma_length(v) for v in values) / len(values)
+    if scheme == "delta":
+        return sum(delta_length(v) for v in values) / len(values)
+    if scheme == "golomb":
+        mean = max(int(round(sum(values) / len(values))), 1)
+        return sum(golomb_length(v, mean) for v in values) / len(values)
+    if scheme == "hybrid":
+        total = 0
+        for k in range(0, len(values), block):
+            blk = values[k:k + block]
+            fixed_cost = len(blk) * fixed_length(blk)
+            gamma_cost = sum(gamma_length(v) for v in blk)
+            total += min(fixed_cost, gamma_cost)
+        return total / len(values)
+    if scheme == "hybrid3":
+        # BEYOND-PAPER: 3-way per-block choice {fixed, gamma, golomb(m=1)}.
+        # Unary (golomb m=1) wins on the 1-dominated blocks that chemistry
+        # q-gram counts produce; the flag grows from 1 to 2 bits per block
+        # (counted here).  See EXPERIMENTS.md §Perf (paper-side).
+        total = 0
+        for k in range(0, len(values), block):
+            blk = values[k:k + block]
+            fixed_cost = len(blk) * fixed_length(blk)
+            gamma_cost = sum(gamma_length(v) for v in blk)
+            unary_cost = sum(golomb_length(v, 1) for v in blk)
+            total += min(fixed_cost, gamma_cost, unary_cost) + 1  # extra flag bit
+        return total / len(values)
+    raise ValueError(f"unknown scheme {scheme}")

@@ -1,0 +1,347 @@
+"""The q-gram tree (Definition 9) and its succinct representation (Sec 5).
+
+Build path:
+  leaves  = per-graph four-tuples LD = (F_D, F_L, n_v, n_e)   (sparse dicts)
+  internal = element-wise max union (Definition 8), min n_v / n_e
+  succinct = per-node zero/nonzero bitmaps concatenated into B_D / B_L
+             (BitVector + rank), nonzero values concatenated into Psi_D /
+             Psi_L (HybridEncodedArray), node metadata arrays (l/r global
+             bit offsets, n_v, n_e, children ranges).
+
+Query path = Algorithm 1 (searchQTree): the label-count prune (Lemma 6),
+the degree-count prune (Lemma 6), the degree-q-gram prune (Lemma 2, leaf),
+and the degree-sequence filter (Lemma 5, leaf, via the T_D table).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import filters
+from repro.core.qgrams import QGramVocab
+from repro.core.succinct import BitVector, HybridEncodedArray
+
+
+# --------------------------------------------------------------------------
+# plain (uncompressed) q-gram tree — the T_Q baseline of Table 3
+# --------------------------------------------------------------------------
+
+@dataclass
+class TreeNode:
+    f_d: Counter          # sparse F_D (id -> count)
+    f_l: Counter          # sparse F_L
+    n_v: int
+    n_e: int
+    children: List[int]   # indices into the node list; empty = leaf
+    graph_id: int = -1    # valid for leaves
+
+
+def union_tuple(nodes: Sequence[TreeNode]) -> TreeNode:
+    """Definition 8 extended to multiple children."""
+    f_d: Counter = Counter()
+    f_l: Counter = Counter()
+    for nd in nodes:
+        for k, v in nd.f_d.items():
+            if v > f_d[k]:
+                f_d[k] = v
+        for k, v in nd.f_l.items():
+            if v > f_l[k]:
+                f_l[k] = v
+    return TreeNode(
+        f_d=f_d,
+        f_l=f_l,
+        n_v=min(nd.n_v for nd in nodes),
+        n_e=min(nd.n_e for nd in nodes),
+        children=[],
+    )
+
+
+class QGramTree:
+    """Balanced bottom-up q-gram tree over a list of leaf four-tuples.
+
+    ``nodes[0]`` is the root; children indices point into ``nodes``.
+    """
+
+    def __init__(self, leaves: Sequence[TreeNode], fanout: int = 8):
+        if not leaves:
+            raise ValueError("empty tree")
+        self.fanout = fanout
+        level: List[TreeNode] = list(leaves)
+        levels: List[List[TreeNode]] = [level]
+        while len(level) > 1:
+            nxt: List[TreeNode] = []
+            for i in range(0, len(level), fanout):
+                group = level[i:i + fanout]
+                parent = union_tuple(group)
+                parent.children = list(range(i, i + len(group)))  # per-level
+                nxt.append(parent)
+            levels.append(nxt)
+            level = nxt
+        # flatten top-down (BFS): root first
+        self.nodes: List[TreeNode] = []
+        offsets: List[int] = []
+        for lvl in reversed(levels):
+            offsets.append(len(self.nodes))
+            self.nodes.extend(lvl)
+        # fix child indices to absolute positions
+        for li, lvl in enumerate(reversed(levels)):
+            if li == len(levels) - 1:
+                break  # leaves have no children
+            child_off = offsets[li + 1]
+            for nd in lvl:
+                nd.children = [child_off + c for c in nd.children]
+        self.root = 0
+        self.n_leaves = len(leaves)
+
+    # ---- Table 3 size accounting (uncompressed T_Q) ----------------------
+    def size_bits(self) -> Dict[str, int]:
+        """S_a: n_v, n_e + pointers; S_b: F_D arrays; S_c: F_L arrays.
+
+        T_Q stores F_X as plain (dense-length) int arrays per node with
+        32-bit entries, matching the in-memory layout the paper compares
+        against.
+        """
+        s_a = s_b = s_c = 0
+        for nd in self.nodes:
+            s_a += 32 * 2 + 64 * max(len(nd.children), 1)  # n_v,n_e + pointers
+            len_d = (max(nd.f_d) + 1) if nd.f_d else 0
+            len_l = (max(nd.f_l) + 1) if nd.f_l else 0
+            s_b += 32 * len_d
+            s_c += 32 * len_l
+        return {"S_a": s_a, "S_b": s_b, "S_c": s_c, "total": s_a + s_b + s_c}
+
+
+def leaves_from_encoded(enc, graph_ids: Sequence[int]) -> List[TreeNode]:
+    """Build leaf four-tuples from an EncodedDB for the given graph ids."""
+    out = []
+    for gid in graph_ids:
+        ids, cnt = enc.row_degree(gid)
+        f_d = Counter({int(i): int(c) for i, c in zip(ids, cnt)})
+        ids, cnt = enc.row_label(gid)
+        f_l = Counter({int(i): int(c) for i, c in zip(ids, cnt)})
+        out.append(TreeNode(f_d=f_d, f_l=f_l, n_v=int(enc.nv[gid]),
+                            n_e=int(enc.ne[gid]), children=[],
+                            graph_id=int(gid)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# succinct q-gram tree — T_SQ
+# --------------------------------------------------------------------------
+
+class SuccinctQGramTree:
+    """Succinct representation of a QGramTree (Section 5.2).
+
+    Per-node F_X (X in {D, L}) spans vocabulary ids [0, len_X) where len_X =
+    1 + max nonzero id; its zero/nonzero bitmap slice occupies global bit
+    positions [l_X, r_X) of B_X, and its nonzero values occupy
+    Psi_X[rank1(B_X, l_X) : rank1(B_X, r_X)].
+    """
+
+    def __init__(self, tree: QGramTree, vocab: QGramVocab, block: int = 16):
+        self.vocab = vocab
+        self.block = block
+        n = len(tree.nodes)
+        self.n_nodes = n
+        self.graph_id = np.array([nd.graph_id for nd in tree.nodes], np.int64)
+        self.n_v = np.array([nd.n_v for nd in tree.nodes], np.int32)
+        self.n_e = np.array([nd.n_e for nd in tree.nodes], np.int32)
+        self.child_lo = np.zeros(n, np.int64)
+        self.child_hi = np.zeros(n, np.int64)
+        for i, nd in enumerate(tree.nodes):
+            if nd.children:
+                self.child_lo[i] = nd.children[0]
+                self.child_hi[i] = nd.children[-1] + 1
+        self.root = tree.root
+
+        bits_d: List[np.ndarray] = []
+        bits_l: List[np.ndarray] = []
+        psi_d: List[int] = []
+        psi_l: List[int] = []
+        self.l_d = np.zeros(n, np.int64)
+        self.r_d = np.zeros(n, np.int64)
+        self.l_l = np.zeros(n, np.int64)
+        self.r_l = np.zeros(n, np.int64)
+        pos_d = pos_l = 0
+        for i, nd in enumerate(tree.nodes):
+            len_d = (max(nd.f_d) + 1) if nd.f_d else 0
+            bm = np.zeros(len_d, np.uint8)
+            for k, v in sorted(nd.f_d.items()):
+                bm[k] = 1
+                psi_d.append(v)
+            bits_d.append(bm)
+            self.l_d[i] = pos_d
+            pos_d += len_d
+            self.r_d[i] = pos_d
+
+            len_l = (max(nd.f_l) + 1) if nd.f_l else 0
+            bm = np.zeros(len_l, np.uint8)
+            for k, v in sorted(nd.f_l.items()):
+                bm[k] = 1
+                psi_l.append(v)
+            bits_l.append(bm)
+            self.l_l[i] = pos_l
+            pos_l += len_l
+            self.r_l[i] = pos_l
+
+        self.B_D = BitVector(np.concatenate(bits_d) if bits_d else np.zeros(0, np.uint8))
+        self.B_L = BitVector(np.concatenate(bits_l) if bits_l else np.zeros(0, np.uint8))
+        self.Psi_D = HybridEncodedArray(psi_d, block) if psi_d else None
+        self.Psi_L = HybridEncodedArray(psi_l, block) if psi_l else None
+
+    # ---- formula (3): F_X[i] for node w -----------------------------------
+    def _access_f(self, which: str, node: int, i: int) -> int:
+        if which == "D":
+            l, r, B, Psi = self.l_d[node], self.r_d[node], self.B_D, self.Psi_D
+        else:
+            l, r, B, Psi = self.l_l[node], self.r_l[node], self.B_L, self.Psi_L
+        p = int(l) + int(i)
+        if i < 0 or p >= int(r) or not B.get(p):
+            return 0
+        return Psi.access(B.rank1(p))
+
+    def f_d(self, node: int, i: int) -> int:
+        return self._access_f("D", node, i)
+
+    def f_l(self, node: int, i: int) -> int:
+        return self._access_f("L", node, i)
+
+    def _common_count(self, which: str, node: int,
+                      q_ids: np.ndarray, q_cnt: np.ndarray) -> int:
+        """C_X = sum_i min(F_X[i], F'_X[i]) — iterate the query's nonzeros."""
+        if which == "D":
+            l, r, B, Psi = self.l_d[node], self.r_d[node], self.B_D, self.Psi_D
+        else:
+            l, r, B, Psi = self.l_l[node], self.r_l[node], self.B_L, self.Psi_L
+        if Psi is None or len(q_ids) == 0:
+            return 0
+        pos = int(l) + q_ids.astype(np.int64)
+        valid = pos < int(r)
+        if not valid.any():
+            return 0
+        pos = pos[valid]
+        qc = q_cnt[valid]
+        bits = B.get_bulk(pos).astype(bool)
+        if not bits.any():
+            return 0
+        ranks = B.rank1_bulk(pos[bits])
+        vals = Psi.access_bulk(ranks)
+        return int(np.minimum(vals, qc[bits]).sum())
+
+    def node_f_d_full(self, node: int) -> Tuple[np.ndarray, np.ndarray]:
+        """All nonzero (ids, counts) of F_D at a node (Alg 1 lines 14–15)."""
+        l, r = int(self.l_d[node]), int(self.r_d[node])
+        if self.Psi_D is None or r <= l:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        pos = np.arange(l, r, dtype=np.int64)
+        bits = self.B_D.get_bulk(pos).astype(bool)
+        ids = pos[bits] - l
+        lo = self.B_D.rank1(l)
+        hi = self.B_D.rank1(r)
+        vals = np.array([self.Psi_D.access(j) for j in range(lo, hi)], np.int64)
+        return ids, vals
+
+    # ---- Algorithm 1 -------------------------------------------------------
+    def search(self, query_tuple, tau: int, collect_stats: bool = False):
+        """searchQTree: returns candidate graph ids (and stats if asked).
+
+        ``query_tuple`` is a ``QueryTuple`` (see below).
+        """
+        q = query_tuple
+        cand: List[int] = []
+        stats = {"nodes_visited": 0, "leaves_checked": 0}
+        t_d = self.vocab.degree_id_table()
+        stack = [self.root]
+        while stack:
+            w = stack.pop()
+            stats["nodes_visited"] += 1
+            n_v, n_e = int(self.n_v[w]), int(self.n_e[w])
+            # Lemma 6 prune #1: label-based q-grams
+            c_l = self._common_count("L", w, q.l_ids, q.l_cnt)
+            if c_l < max(n_v, q.nv) + max(n_e, q.ne) - tau:
+                continue
+            # Lemma 6 prune #2: degree-based q-grams (weak form)
+            c_d = self._common_count("D", w, q.d_ids, q.d_cnt)
+            if c_d < max(n_v, q.nv) - 2 * tau:
+                continue
+            if self.child_hi[w] > self.child_lo[w]:  # internal
+                stack.extend(range(int(self.child_lo[w]), int(self.child_hi[w])))
+                continue
+            # leaf: Lemma 2 (full degree-q-gram counting filter)
+            stats["leaves_checked"] += 1
+            overlap_v = self._vertex_label_overlap(w, q)
+            if c_d < 2 * max(n_v, q.nv) - overlap_v - 2 * tau:
+                continue
+            # leaf: degree-sequence filter (Lemma 5) via T_D
+            ids, vals = self.node_f_d_full(w)
+            degs = np.repeat(t_d[ids], vals)
+            sigma_w = np.sort(degs)[::-1]
+            xi = filters.degree_sequence_lb(
+                n_v, n_e, sigma_w, q.nv, q.ne, q.sigma, overlap_v)
+            # cheap global filters come along for free (n_v/n_e stored):
+            xi = max(
+                xi,
+                filters.number_count_lb(n_v, n_e, q.nv, q.ne),
+                filters.label_qgram_lb(n_v, n_e, q.nv, q.ne, c_l),
+                filters.degree_qgram_lb(n_v, q.nv, overlap_v, c_d),
+            )
+            if xi <= tau:
+                cand.append(int(self.graph_id[w]))
+        if collect_stats:
+            return cand, stats
+        return cand
+
+    def _vertex_label_overlap(self, node: int, q) -> int:
+        """|Sigma_Vw ∩ Sigma_Vh| — the vertex-label part of C_L."""
+        sel = q.l_ids < self.vocab.n_vlabels
+        return self._common_count("L", node, q.l_ids[sel], q.l_cnt[sel])
+
+    # ---- Table 3 size accounting (T_SQ) ------------------------------------
+    def size_bits(self) -> Dict[str, int]:
+        n = self.n_nodes
+        nbits_bd = max(int(self.B_D.n).bit_length(), 1)
+        nbits_bl = max(int(self.B_L.n).bit_length(), 1)
+        # S'_a: n_v, n_e, l_D, r_D, l_L, r_L + child pointers
+        s_a = n * (32 * 2 + 2 * nbits_bd + 2 * nbits_bl + 64)
+        bd = self.B_D.size_bits()["total"]
+        bl = self.B_L.size_bits()["total"]
+        pd = self.Psi_D.size_bits().total if self.Psi_D else 0
+        pl = self.Psi_L.size_bits().total if self.Psi_L else 0
+        return {"S_a": s_a, "S_b": bd + pd, "S_c": bl + pl,
+                "total": s_a + bd + pd + bl + pl}
+
+
+# --------------------------------------------------------------------------
+# query-side four-tuple
+# --------------------------------------------------------------------------
+
+@dataclass
+class QueryTuple:
+    """LD' of Algorithm 1 plus the degree sequence sigma_h."""
+
+    nv: int
+    ne: int
+    d_ids: np.ndarray
+    d_cnt: np.ndarray
+    l_ids: np.ndarray
+    l_cnt: np.ndarray
+    sigma: np.ndarray
+
+    @classmethod
+    def from_graph(cls, h, vocab: QGramVocab) -> "QueryTuple":
+        dc = vocab.encode_degree(h)
+        known = sorted(k for k in dc if k >= 0)
+        lc = vocab.encode_label(h)
+        lids = sorted(lc)
+        return cls(
+            nv=h.n,
+            ne=h.m,
+            d_ids=np.array(known, np.int64),
+            d_cnt=np.array([dc[k] for k in known], np.int64),
+            l_ids=np.array(lids, np.int64),
+            l_cnt=np.array([lc[k] for k in lids], np.int64),
+            sigma=h.degree_sequence().astype(np.int64),
+        )

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLMDataset, ShardedLoader,
+                                 StragglerSimulator)
+
+__all__ = ["SyntheticLMDataset", "ShardedLoader", "StragglerSimulator"]

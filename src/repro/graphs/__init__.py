@@ -1,0 +1,20 @@
+"""Attributed-graph substrate: containers, generators, batching, edits."""
+
+from repro.graphs.graph import Graph, GraphDB
+from repro.graphs.generators import (
+    aids_like_db,
+    graphgen_db,
+    random_graph,
+    perturb_graph,
+)
+from repro.graphs.batching import PaddedGraphBatch
+
+__all__ = [
+    "Graph",
+    "GraphDB",
+    "aids_like_db",
+    "graphgen_db",
+    "random_graph",
+    "perturb_graph",
+    "PaddedGraphBatch",
+]

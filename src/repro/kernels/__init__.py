@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the compute hot-spots (DESIGN.md §4):
+#   qgram_filter    — fused MSQ filter cascade (the paper's query hot path)
+#   bitunpack       — succinct block-packed frequency decode (TPU-adapted
+#                     hybrid encoding; see DESIGN.md §3)
+#   rank_popcount   — bitmap rank-dictionary construction
+#   flash_attention — blocked online-softmax attention for the LM stack
+#
+# Every kernel: kernel.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+# ops.py (jit'd public wrapper; interpret=True on CPU), ref.py (pure-jnp
+# oracle).  The dry-run model path uses the jnp/XLA implementations — Pallas
+# lowers only on real TPU; interpret mode validates kernel bodies on CPU.

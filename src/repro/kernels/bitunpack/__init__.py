@@ -1,0 +1,3 @@
+from repro.kernels.bitunpack.ops import pack_hybrid, unpack_hybrid
+
+__all__ = ["pack_hybrid", "unpack_hybrid"]

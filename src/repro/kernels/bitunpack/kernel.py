@@ -1,0 +1,83 @@
+"""Succinct block-decode Pallas kernel (the TPU hybrid encoding).
+
+TPU adaptation of the paper's per-block hybrid coding (DESIGN.md §3): each
+block of 128 entries is stored at the narrowest power-of-two bit width in
+{2, 4, 8, 16, 32} that fits its maximum value (the per-block *scheme choice*
+of the paper, with vectorisable fixed-width lanes instead of bit-serial
+Elias gamma).  Because 128 * w / 32 is an integer for every width, block
+payloads are word-aligned: SB[k] is a word offset and no entry straddles a
+word.
+
+Kernel layout:
+  * the packed word stream lives as a full-array VMEM ref — per-device
+    Psi shards are ~1-2 MB for PubChem-scale DBs (25M graphs / 256 chips),
+    comfortably inside the 16 MB VMEM budget (DESIGN.md §3);
+  * SB (word offsets) and widths live in SMEM (scalar memory);
+  * grid = one step per block; each step dynamic-slices its <=128-word
+    window, unpacks all five width hypotheses with static shift/mask
+    vector code, and selects by the block's width — pure VPU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_ENTRIES = 128
+WIDTHS = (2, 4, 8, 16, 32)
+MAX_WORDS = BLOCK_ENTRIES * 32 // 32  # width=32 worst case: 128 words
+
+
+def _unpack_width(win_u32: jax.Array, width: int) -> jax.Array:
+    """Static-width unpack of the first 128*width/32 words -> (128,) int32.
+
+    MSB-first within each word: entry e of word w sits at bit
+    32 - width - e*width.
+    """
+    per = 32 // width
+    n_words = BLOCK_ENTRIES // per
+    words = win_u32[:n_words]
+    shifts = (32 - width - jnp.arange(per, dtype=jnp.uint32) * width)
+    vals = jax.lax.shift_right_logical(
+        words[:, None], jnp.broadcast_to(shifts[None, :], (n_words, per)))
+    vals = vals & jnp.uint32((1 << width) - 1)
+    return vals.reshape(BLOCK_ENTRIES).astype(jnp.int32)
+
+
+def _kernel(sb_ref,        # SMEM (n_blocks,) int32 — word offset per block
+            w_ref,         # SMEM (n_blocks,) int32 — bit width per block
+            words_ref,     # VMEM (n_words_padded,) int32 — packed stream
+            out_ref):      # (1, 128) int32 — decoded block
+    k = pl.program_id(0)
+    start = sb_ref[k]
+    width = w_ref[k]
+    win = pl.load(words_ref, (pl.ds(start, MAX_WORDS),)).astype(jnp.uint32)
+    out = _unpack_width(win, WIDTHS[0])
+    for wbits in WIDTHS[1:]:
+        out = jnp.where(width == wbits, _unpack_width(win, wbits), out)
+    out_ref[0, :] = out
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "interpret"))
+def bitunpack_call(sb, widths, words, *, n_blocks: int,
+                   interpret: bool = False) -> jax.Array:
+    """Decode all blocks: returns (n_blocks, 128) int32.
+
+    ``words`` must be padded with >= MAX_WORDS trailing words so the last
+    window never reads out of bounds.
+    """
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_ENTRIES), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK_ENTRIES), jnp.int32),
+        interpret=interpret,
+    )(sb, widths, words)

@@ -1,0 +1,73 @@
+"""Public API: host packer + jit'd unpacker for the TPU hybrid encoding."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitunpack.kernel import (BLOCK_ENTRIES, MAX_WORDS, WIDTHS,
+                                            bitunpack_call)
+
+
+def pack_hybrid(values: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pack int values into the block-width hybrid format.
+
+    Returns (words int32, sb int32, widths int32, n_valid) where the last
+    block is zero-padded to 128 entries and ``words`` carries MAX_WORDS
+    trailing guard words.
+    """
+    values = np.asarray(values, np.int64)
+    if values.size and values.min() < 0:
+        raise ValueError("values must be non-negative")
+    n = int(values.size)
+    n_blocks = max((n + BLOCK_ENTRIES - 1) // BLOCK_ENTRIES, 1)
+    padded = np.zeros(n_blocks * BLOCK_ENTRIES, np.int64)
+    padded[:n] = values
+    sb = np.zeros(n_blocks, np.int32)
+    widths = np.zeros(n_blocks, np.int32)
+    words: list[int] = []
+    for k in range(n_blocks):
+        blk = padded[k * BLOCK_ENTRIES:(k + 1) * BLOCK_ENTRIES]
+        need = max(int(blk.max()).bit_length(), 1)
+        w = next(x for x in WIDTHS if x >= need)
+        widths[k] = w
+        sb[k] = len(words)
+        per = 32 // w
+        blk_u = blk.astype(np.uint64)
+        for i in range(BLOCK_ENTRIES // per):
+            word = 0
+            for e in range(per):
+                word = (word << w) | int(blk_u[i * per + e])
+            words.append(word)
+    words_arr = np.zeros(len(words) + MAX_WORDS, np.uint32)
+    words_arr[:len(words)] = np.asarray(words, np.uint32)
+    return words_arr.view(np.int32), sb, widths, n
+
+
+def unpack_hybrid(sb, widths, words, n_valid: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Decode to a flat (n_valid,) int32 array (kernel + trim)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_blocks = int(sb.shape[0])
+    out = bitunpack_call(jnp.asarray(sb), jnp.asarray(widths),
+                         jnp.asarray(words), n_blocks=n_blocks,
+                         interpret=interpret)
+    flat = out.reshape(-1)
+    if n_valid is not None:
+        flat = flat[:n_valid]
+    return flat
+
+
+def packed_size_bits(words: np.ndarray, sb: np.ndarray,
+                     widths: np.ndarray) -> int:
+    """Index footprint of the packed representation (excl. guard words)."""
+    payload = int(sb[-1]) * 32 if len(sb) else 0
+    # last block payload:
+    if len(sb):
+        payload += BLOCK_ENTRIES // (32 // int(widths[-1])) * 32
+    sb_bits = len(sb) * 32
+    w_bits = len(widths) * 3  # 5 widths -> 3 bits each
+    return payload + sb_bits + w_bits

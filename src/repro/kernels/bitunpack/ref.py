@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the bitunpack kernel (gather-based, independent)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitunpack.kernel import BLOCK_ENTRIES
+
+
+def unpack_hybrid_ref(sb: jax.Array, widths: jax.Array,
+                      words: jax.Array) -> jax.Array:
+    """(n_blocks, 128) int32 decode via absolute bit-offset gathers.
+
+    Entry e of block k starts at bit  sb[k]*32 + e*widths[k]; widths divide
+    32, so no entry straddles a word.
+    """
+    n_blocks = sb.shape[0]
+    e = jnp.arange(BLOCK_ENTRIES, dtype=jnp.int32)[None, :]
+    w = widths[:, None].astype(jnp.int32)
+    bit = sb[:, None].astype(jnp.int32) * 32 + e * w
+    word_idx = bit // 32
+    off = bit % 32
+    wvals = words.astype(jnp.uint32)[word_idx]
+    shift = (32 - w - off).astype(jnp.uint32)
+    mask = jax.lax.shift_left(jnp.uint32(1), w.astype(jnp.uint32)) - jnp.uint32(1)
+    return (jax.lax.shift_right_logical(wvals, shift) & mask).astype(jnp.int32)

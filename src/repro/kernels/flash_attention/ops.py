@@ -1,0 +1,63 @@
+"""Public jit'd flash-attention wrapper: padding, block sizing, backend
+selection (interpret off-TPU), and the XLA fallback used by the dry-run
+model path (Pallas lowers only on real TPU)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_axis(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "kv_offset", "bq", "bk",
+                     "impl"))
+def flash_attention(q, k, v, *, scale: Optional[float] = None,
+                    causal: bool = True, window: int = 0, kv_offset: int = 0,
+                    bq: int = 128, bk: int = 128,
+                    impl: str = "auto") -> jax.Array:
+    """Attention with GQA + causal + sliding-window.
+
+    impl: 'pallas' (real TPU), 'interpret' (kernel body on CPU — tests),
+    'xla' (jnp reference path — what the dry-run lowers), 'auto' (pallas on
+    TPU else xla).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, kv_offset=kv_offset)
+    B, Hq, Sq, D = q.shape
+    bq_eff = min(bq, Sq) if Sq % min(bq, Sq) == 0 else Sq
+    Skv = k.shape[2]
+    bk_eff = min(bk, Skv) if Skv % min(bk, Skv) == 0 else Skv
+    qp, pad_q = _pad_axis(q, bq_eff, 2)
+    kp, pad_k = _pad_axis(k, bk_eff, 2)
+    vp, _ = _pad_axis(v, bk_eff, 2)
+    if pad_k:
+        # padded kv columns must never win the softmax: causal mask handles
+        # rows; for padded cols rely on the window/causal mask — enforce by
+        # masking k with NEG via v zeros and q rows (handled in-kernel by
+        # causal); for non-causal padding we bail to exact sizes instead.
+        assert causal or window > 0, "non-causal inputs must be bk-aligned"
+    out = flash_attention_call(
+        qp, kp, vp, scale=scale, causal=causal, window=window,
+        kv_offset=kv_offset, bq=bq_eff, bk=bk_eff,
+        interpret=(impl == "interpret"))
+    return out[:, :, :Sq, :]

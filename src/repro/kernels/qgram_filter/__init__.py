@@ -1,0 +1,3 @@
+from repro.kernels.qgram_filter.ops import fused_filter_bounds
+
+__all__ = ["fused_filter_bounds"]

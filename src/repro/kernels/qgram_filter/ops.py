@@ -1,0 +1,99 @@
+"""Public jit'd wrapper for the fused filter kernel.
+
+Handles tile-padding, the scalar parameter vector, backend selection
+(interpret=True off-TPU), and the optional sparse-tail C_D correction that
+keeps the hot-prefix layout admissible (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.qgram_filter.kernel import N_SCALARS, fused_filter_call
+
+
+def _pad_to(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def make_scalars(q_nv: int, q_ne: int, tau: int, x0: int, y0: int,
+                 l: int) -> jnp.ndarray:
+    return jnp.asarray([q_nv, q_ne, tau, x0, y0, l], jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "bu", "interpret"))
+def fused_filter_bounds(scalars, fd, qfd, vhist, qvh, ehist, qeh, degseq,
+                        qsig, aux, *, bb: int = 128, bu: int = 512,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """(bounds, mask) for a database shard vs one query.
+
+    Pads B to ``bb`` (with impossible graphs: nv = -2**20 so every bound is
+    huge and the region test fails) and U to ``bu`` (zero counts: no-op for
+    min-sum).  Returns unpadded (B,) arrays.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    B, U = fd.shape
+    bb = min(bb, _next_mult(B, 8))
+    bu = min(bu, _next_mult(U, 128))
+    fd_p = _pad_to(_pad_to(fd, bb, 0), bu, 1)
+    qfd_p = _pad_to(qfd, bu, 0)
+    vhist_p = _pad_to(vhist, bb, 0)
+    ehist_p = _pad_to(ehist, bb, 0)
+    degseq_p = _pad_to(degseq, bb, 0)
+    aux_p = _pad_to(aux, bb, 0, value=-(2 ** 20))
+    bounds, mask = fused_filter_call(
+        scalars, fd_p, qfd_p, vhist_p, qvh, ehist_p, qeh, degseq_p, qsig,
+        aux_p, bb=bb, bu=bu, interpret=interpret)
+    return bounds[:B], mask[:B]
+
+
+def _next_mult(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def make_aux(nv, ne, region_i, region_j, cd_tail=None) -> jnp.ndarray:
+    """Pack the per-graph scalar columns; cd_tail is the host-computed
+    cold-vocabulary SUM(min(F_D, q_D)) when fd holds only the hot prefix
+    (zeros for the full-vocab layout)."""
+    if cd_tail is None:
+        cd_tail = jnp.zeros_like(nv)
+    return jnp.stack([nv, ne, region_i, region_j, cd_tail], axis=1
+                     ).astype(jnp.int32)
+
+
+def cd_tail_host(enc, q_ids: np.ndarray, q_cnt: np.ndarray, hot: int
+                 ) -> np.ndarray:
+    """Host CSR merge for the cold-vocabulary C_D contribution.
+
+    Only the query's ids >= hot participate; queries touch O(|V_h|) ids so
+    this is a cheap sparse sweep regardless of |G|.
+    """
+    sel = q_ids >= hot
+    q_map = {int(i): int(c) for i, c in zip(q_ids[sel], q_cnt[sel])}
+    out = np.zeros(len(enc), np.int32)
+    if not q_map:
+        return out
+    for g in range(len(enc)):
+        ids, cnt = enc.row_degree(g)
+        t = 0
+        for i, c in zip(ids, cnt):
+            if i >= hot:
+                t += min(int(c), q_map.get(int(i), 0))
+        out[g] = t
+    return out

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused filter kernel.
+
+Delegates to ``repro.core.filters_jax`` (which is itself tested against the
+scalar host filters and brute-force GED), so the kernel's chain of evidence
+reaches the paper's lemmas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import filters_jax as fj
+
+
+def fused_filter_bounds_ref(scalars, fd, qfd, vhist, qvh, ehist, qeh,
+                            degseq, qsig, aux):
+    """Same signature/semantics as the kernel: returns (bounds, mask)."""
+    q_nv, q_ne, tau, x0, y0, l = [scalars[i] for i in range(6)]
+    db = fj.DBArrays(nv=aux[:, 0], ne=aux[:, 1], degseq=degseq, vhist=vhist,
+                     ehist=ehist, fd=fd, region_i=aux[:, 2], region_j=aux[:, 3])
+    q = fj.QueryArrays(nv=q_nv, ne=q_ne, sigma=qsig, vhist=qvh, ehist=qeh,
+                       fd=qfd, tau=tau)
+    c_d = fj.min_sum(fd, qfd[None, :]).astype(jnp.int32) + aux[:, 4]
+    bounds = fj.batched_bounds(db, q, c_d=c_d)
+    # region mask with traced scalars (filters_jax.region_mask takes python
+    # ints for geometry; inline the traced version here)
+    s, dd = x0 + y0, y0 - x0
+    i1 = jnp.floor_divide(q.ne - q.tau + q.nv - s, l)
+    i2 = jnp.floor_divide(q.ne + q.tau + q.nv - s, l)
+    j1 = jnp.floor_divide(q.ne - q.tau - q.nv - dd, l)
+    j2 = jnp.floor_divide(q.ne + q.tau - q.nv - dd, l)
+    in_region = ((db.region_i >= i1) & (db.region_i <= i2)
+                 & (db.region_j >= j1) & (db.region_j <= j2))
+    mask = (in_region & (bounds <= q.tau)).astype(jnp.int32)
+    return bounds.astype(jnp.int32), mask

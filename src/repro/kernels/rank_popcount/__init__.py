@@ -1,0 +1,3 @@
+from repro.kernels.rank_popcount.ops import build_rank_dictionary, rank1_query
+
+__all__ = ["build_rank_dictionary", "rank1_query"]

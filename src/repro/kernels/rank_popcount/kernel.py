@@ -1,0 +1,52 @@
+"""Rank-dictionary construction Pallas kernel.
+
+The succinct tree's B_X bitmaps need O(1) rank1.  The dictionary is a
+two-level structure: per-block popcount sums (this kernel) + an exclusive
+prefix sum (host/XLA).  Popcount is SWAR bit arithmetic over uint32 lanes —
+pure VPU work, one HBM pass over the packed words.
+
+Grid: one step per block of BLK words; block popcounts reduce in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 256  # words per rank block (8192 bits)
+
+
+def popcount_u32(x: jax.Array) -> jax.Array:
+    """SWAR popcount over uint32 lanes."""
+    x = x.astype(jnp.uint32)
+    m1 = jnp.uint32(0x55555555)
+    m2 = jnp.uint32(0x33333333)
+    m4 = jnp.uint32(0x0F0F0F0F)
+    x = x - ((x >> jnp.uint32(1)) & m1)
+    x = (x & m2) + ((x >> jnp.uint32(2)) & m2)
+    x = (x + (x >> jnp.uint32(4))) & m4
+    return ((x * jnp.uint32(0x01010101)) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def _kernel(words_ref, out_ref):
+    out_ref[0] = popcount_u32(words_ref[...]).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_popcounts(words: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(n_words,) int32 (uint32 view) -> (n_blocks,) int32 block popcounts.
+
+    ``words`` must be zero-padded to a BLK multiple.
+    """
+    n = words.shape[0]
+    assert n % BLK == 0, n
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // BLK,),
+        in_specs=[pl.BlockSpec((BLK,), lambda k: (k,))],
+        out_specs=pl.BlockSpec((1,), lambda k: (k,)),
+        out_shape=jax.ShapeDtypeStruct((n // BLK,), jnp.int32),
+        interpret=interpret,
+    )(words)

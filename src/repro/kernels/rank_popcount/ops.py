@@ -1,0 +1,59 @@
+"""Public API: build + query the two-level rank dictionary."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.rank_popcount.kernel import BLK, block_popcounts, popcount_u32
+
+
+def pack_bits_u32(bits: np.ndarray) -> np.ndarray:
+    """0/1 array -> uint32 words (MSB-first), zero-padded to BLK words."""
+    bits = np.asarray(bits, np.uint8)
+    pad = (-len(bits)) % 32
+    b = np.pad(bits, (0, pad))
+    bytes_ = np.packbits(b)
+    pad4 = (-len(bytes_)) % 4
+    bytes_ = np.pad(bytes_, (0, pad4))
+    words = bytes_.view(">u4").astype(np.uint32)
+    padw = (-len(words)) % BLK
+    return np.pad(words, (0, padw))
+
+
+def build_rank_dictionary(bits: np.ndarray, interpret: Optional[bool] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (words, cum): packed words + exclusive block prefix sums."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    words = pack_bits_u32(bits)
+    pc = block_popcounts(jnp.asarray(words.view(np.int32)),
+                         interpret=interpret)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(pc)])
+    return jnp.asarray(words.view(np.int32)), cum
+
+
+@jax.jit
+def rank1_query(words: jax.Array, cum: jax.Array, idx: jax.Array) -> jax.Array:
+    """Vectorised rank1 (ones in [0, idx)) using the dictionary."""
+    w = idx // 32
+    rem = idx % 32
+    blk = w // BLK
+    base = cum[blk]
+    # ones in whole words [blk*BLK, w): segmented popcount via cumsum-free
+    # gather of <= BLK words is wasteful; instead keep a per-word cumsum
+    # fallback: popcount word prefix inside the block with a scan-free trick
+    # — practical arrays are queried in bulk, so precompute word prefix:
+    word_pc = popcount_u32(words)
+    word_cum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                jnp.cumsum(word_pc)]).astype(jnp.int32)
+    mid = word_cum[w] - word_cum[blk * BLK]
+    word = words[w].astype(jnp.uint32)
+    head = jnp.where(
+        rem > 0,
+        popcount_u32(jax.lax.shift_right_logical(
+            word, (32 - rem).astype(jnp.uint32))),
+        0)
+    return base + mid + head

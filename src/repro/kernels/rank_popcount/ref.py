@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the rank dictionary kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rank_popcount.kernel import BLK
+
+
+def popcount_u32_ref(x: jax.Array) -> jax.Array:
+    """Bit-by-bit popcount (independent of the SWAR trick)."""
+    x = x.astype(jnp.uint32)
+    total = jnp.zeros_like(x, jnp.int32)
+    for b in range(32):
+        total = total + ((x >> jnp.uint32(b)) & jnp.uint32(1)).astype(jnp.int32)
+    return total
+
+
+def block_popcounts_ref(words: jax.Array) -> jax.Array:
+    n = words.shape[0]
+    assert n % BLK == 0
+    return popcount_u32_ref(words).reshape(n // BLK, BLK).sum(axis=1)
+
+
+def rank1_query_ref(words: jax.Array, idx: jax.Array) -> jax.Array:
+    """rank1 by full bit expansion (MSB-first per word) — oracle only."""
+    w = words.astype(jnp.uint32)
+    shifts = jnp.uint32(31) - jnp.arange(32, dtype=jnp.uint32)
+    bits = ((w[:, None] >> shifts[None, :]) & jnp.uint32(1)).reshape(-1)
+    cum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                           jnp.cumsum(bits.astype(jnp.int32))])
+    return cum[idx]

@@ -1,0 +1,3 @@
+# Launch layer: production meshes, sharding rules, EP context, dry-run,
+# train/serve CLIs.  NOTE: repro.launch.dryrun sets XLA_FLAGS at import —
+# never import it from test code (tests and benches must see 1 device).

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (artifacts/dryrun/<arch>__<shape>__<mesh>.json):
+  * compile success of the WHOLE jitted step (scan-over-layers) with full
+    production shardings — the deliverable (e);
+  * memory_analysis() — bytes per device (args/temp/peak: proves it fits);
+  * cost_analysis() raw (XLA counts scan bodies ONCE — kept for reference);
+  * SEGMENT-accurate roofline terms: the scanned unit (fwd and fwd+bwd),
+    embed and head segments are compiled separately under the same
+    shardings; totals = n_units * unit + segments.  This sidesteps the
+    while-loop undercount exactly (DESIGN.md §7);
+  * collective bytes parsed from each compiled segment's HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+    scaled by trip counts, converted to seconds with the bidirectional-ring
+    model on the v5e constants.
+
+NOTE: XLA_FLAGS is set above, before any jax import, because jax locks the
+device count on first init.  Do not import this module from test code.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import hlo_costs
+from repro.launch.ep import make_parallel
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, dp_axes_of,
+                               make_production_mesh)
+from repro.launch.shapes import SHAPES, cell_supported, decode_specs, token_specs
+from repro.launch.shardings import (opt_state_shardings, param_shardings,
+                                    rules_for, spec_from_axes)
+from repro.models.config import ModelConfig
+from repro.models.layers import shapes_of
+from repro.models.transformer import model_spec
+from repro.optim.optimizers import adafactor, adamw, cosine_schedule
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# per-arch launch policy (microbatches, optimizer) — baseline values;
+# hillclimb overrides live in artifacts/perf/*.json experiments.
+# --------------------------------------------------------------------------
+
+def launch_policy(cfg: ModelConfig) -> Dict[str, Any]:
+    big = cfg.param_count()
+    return {
+        "optimizer": "adafactor" if big > 1e11 else "adamw",
+        "microbatches": (8 if big > 1e11 else
+                         4 if big > 2e10 else 1),
+    }
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# sharding helpers for batches and caches
+# --------------------------------------------------------------------------
+
+def batch_shardings(cfg, mesh, specs):
+    dp = dp_axes_of(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def one(s):
+        b = s.shape[0]
+        lead = dp if b % dp_total == 0 else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(s.shape) - 1))))
+
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(cfg, mesh, cache_specs_tree, shard_seq_over_data=False):
+    """batch dim -> dp when divisible; last dim -> model when divisible;
+    optionally the KV seq dim -> data (long-context mode)."""
+    dp = dp_axes_of(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+
+    def one(s):
+        nd = len(s.shape)
+        spec = [None] * nd
+        # batch dim: first dim of size B for prefix leaves, second for
+        # stacked-unit leaves — detect by rank convention (stacked leaves
+        # gained a leading n_units dim)
+        for cand in (0, 1):
+            if cand < nd and s.shape[cand] % dp_total == 0 and \
+                    s.shape[cand] >= dp_total:
+                spec[cand] = dp
+                bdim = cand
+                break
+        else:
+            bdim = -1
+        if nd >= 2 and s.shape[-1] % msize == 0:
+            spec[-1] = "model"
+        if shard_seq_over_data and nd >= 4 and bdim != 1:
+            # KV cache (units, B, H, L, D): shard L over data when batch
+            # could not use it (long_500k)
+            ldim = nd - 2
+            if s.shape[ldim] % dsize == 0 and spec[ldim] is None:
+                spec[ldim] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_specs_tree)
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None,
+               policy_overrides: Optional[Dict[str, Any]] = None,
+               do_segments: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch).replace(attn_impl="xla")
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "multi_pod": multi_pod, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_for(cfg, mesh, overrides=overrides)
+    policy = launch_policy(cfg)
+    if policy_overrides:
+        policy.update(policy_overrides)
+    if "capacity_factor" in policy:
+        cfg = cfg.replace(capacity_factor=policy["capacity_factor"])
+    if "remat_policy" in policy:
+        cfg = cfg.replace(remat_policy=policy["remat_policy"])
+    p_sh = param_shardings(cfg, mesh, overrides=overrides)
+    p_shapes = shapes_of(model_spec(cfg), _dt(cfg))
+    par = make_parallel(cfg, mesh, rules,
+                        attn_seq_shard=policy.get("attn_seq_shard", False),
+                        act_seq_shard=policy.get("act_seq_shard", False))
+
+    t0 = time.time()
+    seg = {}
+    if shape.kind == "train":
+        opt_kind = policy["optimizer"]
+        lr = cosine_schedule(3e-4, 100, 10000)
+        opt_init, opt_update = (adafactor(lr) if opt_kind == "adafactor"
+                                else adamw(lr))
+        o_shapes = jax.eval_shape(opt_init, p_shapes)
+        o_sh = opt_state_shardings(opt_kind, cfg, mesh, p_sh)
+        b_specs = token_specs(cfg, shape.global_batch, shape.seq_len)
+        b_sh = batch_shardings(cfg, mesh, b_specs)
+        step = make_train_step(cfg, opt_update, par=par,
+                               microbatches=policy["microbatches"])
+        lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                          out_shardings=(p_sh, o_sh, None)
+                          ).lower(p_shapes, o_shapes, b_specs)
+        compiled = lowered.compile()
+        result["optimizer"] = opt_kind
+        result["microbatches"] = policy["microbatches"]
+        if do_segments:
+            seg = hlo_costs.train_segments(cfg, mesh, rules, p_sh, p_shapes,
+                                           shape, par,
+                                           microbatches=policy["microbatches"])
+    elif shape.kind == "prefill":
+        b_specs = token_specs(cfg, shape.global_batch, shape.seq_len)
+        b_sh = batch_shardings(cfg, mesh, b_specs)
+        stepfn = make_prefill_step(cfg, par=par)
+        lowered = jax.jit(stepfn, in_shardings=(p_sh, b_sh)
+                          ).lower(p_shapes, b_specs)
+        compiled = lowered.compile()
+        if do_segments:
+            seg = hlo_costs.fwd_segments(cfg, mesh, rules, p_sh, p_shapes,
+                                         shape, par, batch=shape.global_batch,
+                                         seq=shape.seq_len)
+    else:  # decode
+        dspec = decode_specs(cfg, shape.global_batch, shape.seq_len)
+        long_ctx = shape_name == "long_500k"
+        c_sh = cache_shardings(cfg, mesh, dspec["cache"],
+                               shard_seq_over_data=long_ctx)
+        tok_sh = batch_shardings(cfg, mesh, {"t": dspec["token"]})["t"]
+        stepfn = make_decode_step(cfg, par=par)
+        args = [p_shapes, dspec["token"], dspec["cache"], dspec["pos"]]
+        in_sh = [p_sh, tok_sh, c_sh, NamedSharding(mesh, P())]
+        if cfg.is_encdec:
+            args.append(dspec["enc_out"])
+            in_sh.append(batch_shardings(cfg, mesh, {"e": dspec["enc_out"]})["e"])
+        lowered = jax.jit(stepfn, in_shardings=tuple(in_sh),
+                          out_shardings=(None, c_sh)).lower(*args)
+        compiled = lowered.compile()
+        if do_segments:
+            seg = hlo_costs.decode_segments(cfg, mesh, rules, p_sh, p_shapes,
+                                            shape, par, c_sh, dspec)
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = hlo_costs.collective_bytes(compiled.as_text(),
+                                      loop_trip_count=cfg.n_units)
+
+    result.update({
+        "status": "ok",
+        "compile_seconds": round(compile_s, 1),
+        "n_chips": n_chips,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis_raw": {
+            "flops": ca.get("flops", -1.0),
+            "bytes_accessed": ca.get("bytes accessed", -1.0),
+            "note": "XLA counts scan bodies once; see segments for "
+                    "trip-count-corrected totals",
+        },
+        "collectives_whole_graph": coll,
+        "segments": seg,
+        "model_params": cfg.param_count(),
+        "model_params_active": cfg.active_param_count(),
+        "rules": {str(k): str(v) for k, v in
+                  rules_for(cfg, mesh, overrides=overrides).items()},
+    })
+    result.update(hlo_costs.roofline_terms(result, cfg, shape, n_chips, mesh))
+    return result
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def artifact_path(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool = False,
+             tag: str = "", **kw) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    path = artifact_path(arch, shape, mesh_name, tag)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        res = lower_cell(arch, shape, multi_pod, **kw)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}"}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-segments", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                res = run_cell(arch, shape, mp, force=args.force,
+                               do_segments=not args.no_segments)
+                status = res.get("status")
+                extra = ""
+                if status == "ok":
+                    mem_gb = res["memory"]["argument_bytes"] / 2 ** 30
+                    dom = res.get("roofline", {}).get("dominant", "?")
+                    extra = f"args/dev={mem_gb:.2f}GiB dominant={dom}"
+                elif status == "error":
+                    extra = res.get("error", "")[:160]
+                else:
+                    extra = res.get("reason", "")[:80]
+                print(f"[{time.time() - t0:7.1f}s] {arch:24s} {shape:12s} "
+                      f"{'multi' if mp else 'single':6s} {status:8s} {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Expert-parallel MoE execution context (shard_map inside pjit).
+
+GSPMD handles every dense layer well, but MoE dispatch must be explicit:
+``EPParallel.moe`` wraps ``blocks.moe_apply_ep`` in a shard_map whose
+in_specs mirror the parameter shardings, gathers any FSDP-sharded
+(non-expert-axis) dims locally, and runs fixed-capacity all_to_all expert
+dispatch over the 'model' axis.  Threaded through the model as the ``par``
+argument.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import blocks as B
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class EPParallel:
+    """Parallel execution context threaded through the model as ``par``.
+
+    Besides the MoE shard_map, it carries optional activation-sharding
+    hints used by the §Perf hillclimbs:
+      * attn_seq_shard — context parallelism: q is sharded over 'model'
+        along the query-sequence dim inside self-attention (archs whose
+        head count does not divide the model axis, e.g. yi-34b's 56 heads,
+        otherwise replicate their attention work 16x);
+      * act_seq_shard — the scan-carry activations (the remat stash) are
+        sharded over 'model' along sequence, trading one gather per layer
+        for a 16x smaller checkpoint footprint (enables fewer microbatches
+        on the 1T MoE).
+    """
+
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    rules: Dict[str, Any]
+    ep_axis: str = "model"
+    attn_seq_shard: bool = False
+    act_seq_shard: bool = False
+
+    def _spec(self, axes: Tuple[Optional[str], ...]) -> P:
+        from repro.launch.shardings import spec_from_axes
+        return spec_from_axes(axes, self.rules)
+
+    def constrain(self, x, spec: P):
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def shard_attn_q(self, q):
+        """(B, H, S, D) -> S sharded over 'model' (context parallelism)."""
+        if not self.attn_seq_shard or q.shape[2] < 2:
+            return q
+        return self.constrain(q, P(self.dp_axes, None, "model", None))
+
+    def shard_attn_kv(self, k, v):
+        """Split the k/v projections by sequence too (they are gathered
+        back for the attention itself, but the matmuls stop replicating)."""
+        if not self.attn_seq_shard or k.shape[2] < 2:
+            return k, v
+        spec = P(self.dp_axes, None, "model", None)
+        return self.constrain(k, spec), self.constrain(v, spec)
+
+    def shard_attn_out(self, o):
+        if not self.attn_seq_shard or o.shape[2] < 2:
+            return o
+        return self.constrain(o, P(self.dp_axes, None, "model", None))
+
+    def shard_act(self, x):
+        """(B, S, d) scan carry -> S sharded over 'model'."""
+        if not self.act_seq_shard or x.shape[1] < 2:
+            return x
+        return self.constrain(x, P(self.dp_axes, "model", None))
+
+    def moe(self, params, x, cfg: ModelConfig) -> jax.Array:
+        assert cfg.shared_experts == 0, "EP path: shared experts unsupported"
+        from repro.models.blocks import moe_spec
+        from repro.models.layers import logical_axes
+        axes = logical_axes(moe_spec(cfg))
+        p_specs = jax.tree.map(self._spec, axes,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        # when the unit activations are sequence-sharded over the EP axis
+        # (act_seq_shard), hand the MoE body its local token slice directly
+        # — no entry re-gather, no exit all_gather (§Perf-B7)
+        pre_sharded = self.act_seq_shard
+        if pre_sharded:
+            x_spec = P(self.dp_axes, self.ep_axis, None)
+        else:
+            x_spec = P(self.dp_axes, None, None)
+        ep = self.ep_axis
+
+        def body(prm, xl):
+            # gather FSDP/non-EP dims so each device holds its full local
+            # experts; the EP (expert) dim stays sharded.
+            def gather(arr, spec):
+                for dim, ax in enumerate(tuple(spec)):
+                    if ax is None:
+                        continue
+                    axes_t = ax if isinstance(ax, tuple) else (ax,)
+                    for a in axes_t:
+                        if a != ep:
+                            arr = jax.lax.all_gather(arr, a, axis=dim,
+                                                     tiled=True)
+                return arr
+
+            gathered = jax.tree.map(gather, prm, p_specs,
+                                    is_leaf=lambda t: isinstance(t, P))
+            # router must see all experts
+            rspec = tuple(p_specs["router"])
+            if len(rspec) > 1 and rspec[1] == ep:
+                gathered["router"] = jax.lax.all_gather(
+                    gathered["router"], ep, axis=1, tiled=True)
+            return B.moe_apply_ep(gathered, xl, cfg, ep,
+                                  pre_sharded=pre_sharded)
+
+        fn = jax.shard_map(body, mesh=self.mesh, in_specs=(p_specs, x_spec),
+                           out_specs=x_spec, check_vma=False)
+        return fn(params, x)
+
+
+def make_parallel(cfg: ModelConfig, mesh: Mesh, rules: Dict[str, Any],
+                  attn_seq_shard: bool = False,
+                  act_seq_shard: bool = False) -> Optional[EPParallel]:
+    """Build the parallel ctx (None when neither MoE expert-parallelism nor
+    an activation-sharding flag needs it)."""
+    if "model" not in mesh.axis_names:
+        return None
+    if cfg.n_experts == 0 and not (attn_seq_shard or act_seq_shard):
+        return None
+    from repro.launch.mesh import dp_axes_of
+    return EPParallel(mesh=mesh, dp_axes=dp_axes_of(mesh), rules=rules,
+                      attn_seq_shard=attn_seq_shard,
+                      act_seq_shard=act_seq_shard)

@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: tagged dry-run variants of the three selected
+cells (worst-fraction / most-collective-bound / paper-representative), each
+implementing one hypothesis from EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.perf [--only A2,B1,...]
+"""
+import argparse
+import json
+from typing import Any, Dict, Optional
+
+from repro.launch.dryrun import artifact_path, run_cell
+
+# (id, arch, shape, tag, rules_overrides, policy_overrides, hypothesis)
+EXPERIMENTS = [
+    ("A2", "yi-34b", "prefill_32k", "ctxpar", None,
+     {"attn_seq_shard": True},
+     "56 heads don't divide model=16 so attention work replicates 16x; "
+     "context-parallel q (seq over 'model') should cut the attention "
+     "compute+score terms ~16x for one gather per layer"),
+    ("A4", "yi-34b", "prefill_32k", "ctxpar-act", None,
+     {"attn_seq_shard": True, "act_seq_shard": True},
+     "remaining 5.2s compute: FFN/projection replication along 'model'; "
+     "seq-sharding the unit activations should split all per-token matmuls"),
+    ("A6", "yi-34b", "prefill_32k", "actonly", None,
+     {"act_seq_shard": True},
+     "attn q/k/v constraints are redundant once the unit activations are "
+     "seq-sharded (propagation covers the projections); dropping them "
+     "should remove duplicate re-gathers"),
+    ("B1", "kimi-k2-1t-a32b", "train_4k", "cf10", None,
+     {"capacity_factor": 1.0},
+     "capacity factor 1.25->1.0 cuts A2A payload and EP einsum slots 20%"),
+    ("B2", "kimi-k2-1t-a32b", "train_4k", "mb4-actshard", None,
+     {"act_seq_shard": True, "microbatches": 4},
+     "seq-sharding the remat stash over 'model' shrinks it 16x, letting "
+     "microbatches drop 8->4; FSDP weight re-gathers (21s of the 59.6s "
+     "collective term) halve"),
+    ("B3", "kimi-k2-1t-a32b", "train_4k", "mb2-actshard", None,
+     {"act_seq_shard": True, "microbatches": 2},
+     "same, microbatches 8->2: weight re-gathers quarter; watch peak HBM"),
+    ("B4", "kimi-k2-1t-a32b", "train_4k", "mb2-cf10", None,
+     {"act_seq_shard": True, "microbatches": 2, "capacity_factor": 1.0},
+     "compose B1+B3"),
+    ("B6", "kimi-k2-1t-a32b", "train_4k", "mb1-cf10", None,
+     {"act_seq_shard": True, "microbatches": 1, "capacity_factor": 1.0},
+     "with the stash seq-sharded, microbatches=1 fits (est 11.6GiB): "
+     "weight re-gathers drop another 2x"),
+    ("B7", "kimi-k2-1t-a32b", "train_4k", "mb1-cf10-preshard", None,
+     {"act_seq_shard": True, "microbatches": 1, "capacity_factor": 1.0},
+     "act_seq_shard now hands the MoE its local token slice (in_spec "
+     "P(dp,'model',None)): the entry re-gather and exit all_gather of y "
+     "(~4x0.94GB/layer) disappear"),
+    ("B8", "kimi-k2-1t-a32b", "train_4k", "mb1-cf10-preshard-dots", None,
+     {"act_seq_shard": True, "microbatches": 1, "capacity_factor": 1.0,
+      "remat_policy": "dots"},
+     "memory now dominates (22.3s): checkpoint_dots keeps matmul outputs "
+     "instead of recomputing the whole unit in bwd — the remat re-read of "
+     "gathered expert weights (~6.3GB/layer) should drop to ~2/3"),
+]
+
+
+def summarize(rec: Dict[str, Any]) -> str:
+    if rec.get("status") != "ok":
+        return f"{rec.get('status')}: {rec.get('error', rec.get('reason', ''))[:120]}"
+    ro = rec.get("roofline_kernel") or rec.get("roofline", {})
+    mem = rec["memory"]
+    return (f"bound={ro.get('step_time_lower_bound_s', 0):8.3f}s "
+            f"dom={ro.get('dominant', '?'):12s} "
+            f"[c={ro.get('compute_s', 0):7.3f} m={ro.get('memory_s', 0):7.3f} "
+            f"x={ro.get('collective_s', 0):7.3f}] "
+            f"frac={ro.get('roofline_fraction', 0):.4f} "
+            f"peak={mem.get('peak_bytes', 0) / 2**30:.1f}GiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    for exp_id, arch, shape, tag, rules_ov, pol_ov, hyp in EXPERIMENTS:
+        if only and exp_id not in only:
+            continue
+        base_path = artifact_path(arch, shape, "pod16x16")
+        base = json.load(open(base_path)) if os.path.exists(base_path) else {}
+        print(f"\n=== {exp_id} {arch} x {shape} [{tag}] ===")
+        print(f"hypothesis: {hyp}")
+        if base:
+            print(f"baseline:  {summarize(base)}")
+        rec = run_cell(arch, shape, multi_pod=False, force=args.force,
+                       tag=tag, overrides=rules_ov, policy_overrides=pol_ov)
+        print(f"variant:   {summarize(rec)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Assigned input shapes (the x-axis of the 40-cell table) + input_specs.
+
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> prefill_step
+  decode_32k   seq 32768,   global_batch 128   -> decode_step (1 new token
+                                                  against a 32k KV cache)
+  long_500k    seq 524288,  global_batch 1     -> decode_step; only for
+               archs with a sub-quadratic decode state (skip noted in
+               DESIGN.md §6 otherwise)
+
+input_specs() returns ShapeDtypeStructs only — weak-type-correct,
+shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(supported, reason-if-not)."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k decode requires "
+                       "sub-quadratic attention (assignment: skip + note)")
+    return True, ""
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins."""
+    sds = jax.ShapeDtypeStruct
+    out = {"inputs": sds((batch, seq), jnp.int32),
+           "targets": sds((batch, seq), jnp.int32)}
+    if cfg.is_encdec:
+        # [audio] frontend stub: precomputed frame embeddings
+        out["enc_inputs"] = sds((batch, seq, cfg.d_model), _dt(cfg))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs mirroring init_cache (no allocation)."""
+    from repro.models.transformer import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_specs(cfg: ModelConfig, batch: int, ctx_len: int):
+    sds = jax.ShapeDtypeStruct
+    tok = sds((batch, 1), jnp.int32)
+    if cfg.frontend == "embed_stub" and not cfg.is_encdec:
+        tok = sds((batch, 1, cfg.d_model), _dt(cfg))
+    out = {"token": tok,
+           "cache": cache_specs(cfg, batch, ctx_len),
+           "pos": sds((), jnp.int32)}
+    if cfg.is_encdec:
+        out["enc_out"] = sds((batch, ctx_len, cfg.d_model), _dt(cfg))
+    return out

@@ -1,0 +1,115 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), per arch.
+
+Rules are computed from the config so that every sharded dim divides its
+mesh axis (GSPMD requirement):
+
+  vocab   -> 'model' when divisible (vocab-parallel embedding/head)
+  mlp     -> 'model' (column-parallel FFN / expert hidden)
+  heads   -> 'model' when n_heads divides (head-parallel attention)
+  kv_heads-> 'model' when divisible (else replicated KV: GQA kv=8 < 16)
+  experts -> 'model' (expert parallelism)
+  embed   -> 'data' when fsdp=True (FSDP parameter sharding; gathered at use)
+  layers / head_dim / None -> replicated
+
+Overridable per hillclimb experiment via the ``overrides`` argument.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import logical_axes
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
+              overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    msize = mesh.shape.get("model", 1)
+    dsize = mesh.shape.get("data", 1)
+    if fsdp is None:
+        # FSDP on for >= ~8B params (replicated copies would not fit HBM)
+        fsdp = cfg.param_count() >= 8e9
+
+    def div(n: int) -> bool:
+        return n > 0 and n % msize == 0
+
+    mlp_dims = [d for d in (cfg.d_ff, cfg.expert_d_ff, 2 * cfg.d_model,
+                            4 * cfg.d_model, cfg.lru_width or 0) if d]
+    rules: Dict[str, Any] = {
+        "vocab": "model" if div(cfg.vocab_size) else None,
+        "mlp": "model" if all(d % msize == 0 for d in mlp_dims) else None,
+        "heads": "model" if div(cfg.n_heads) else None,
+        "kv_heads": "model" if div(cfg.n_kv_heads) else None,
+        "experts": "model" if div(cfg.n_experts) else None,
+        "embed": ("data" if (fsdp and cfg.d_model % dsize == 0) else None),
+        "head_dim": None,
+        "layers": None,
+        None: None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def spec_from_axes(axes: Tuple[Optional[str], ...], rules: Dict[str, Any]) -> P:
+    """Map one param's logical axes to a PartitionSpec, dropping duplicate
+    mesh axes (a mesh axis may shard at most one dim)."""
+    used = set()
+    out = []
+    for a in axes:
+        m = rules.get(a)
+        if m is None or m in used:
+            out.append(None)
+        else:
+            out.append(m)
+            used.add(m)
+    return P(*out)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp: Optional[bool] = None,
+                    overrides: Optional[Dict[str, Any]] = None):
+    """NamedSharding tree mirroring the model params."""
+    rules = rules_for(cfg, mesh, fsdp=fsdp, overrides=overrides)
+    from repro.models.transformer import param_logical_axes
+    axes_tree = param_logical_axes(cfg)
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, spec_from_axes(axes, rules)),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_state_shardings(kind: str, cfg: ModelConfig, mesh: Mesh,
+                        param_sh_tree):
+    """Optimizer-state shardings (states shard exactly like their params;
+    adafactor's factored r/c keep the matching prefix/split of the spec)."""
+    from repro.optim.optimizers import OptState
+
+    scalar = NamedSharding(mesh, P())
+    if kind == "adamw":
+        return OptState(step=scalar,
+                        inner={"m": param_sh_tree, "v": param_sh_tree})
+    if kind == "adafactor":
+        def one(sh: NamedSharding):
+            spec = tuple(sh.spec)
+            if len(spec) >= 2:
+                return {"r": NamedSharding(mesh, P(*spec[:-1])),
+                        "c": NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))}
+            return {"v": sh}
+        inner = jax.tree.map(one, param_sh_tree,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+        return OptState(step=scalar, inner=inner)
+    raise ValueError(kind)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """Batch sharded over ('pod','data'); remaining dims replicated."""
+    from repro.launch.mesh import dp_axes_of
+    return P(dp_axes_of(mesh), *([None] * extra_dims))
+
+
+def logits_spec(mesh: Mesh) -> P:
+    from repro.launch.mesh import dp_axes_of
+    return P(dp_axes_of(mesh), None, "model" if "model" in mesh.axis_names
+             else None)

@@ -1,0 +1,18 @@
+"""Composable LM model stack (DESIGN.md §2): config, blocks, assembly."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (build_params, build_shapes, decode_step,
+                                      forward, init_cache, loss_fn,
+                                      model_spec, param_logical_axes)
+
+__all__ = [
+    "ModelConfig",
+    "build_params",
+    "build_shapes",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "loss_fn",
+    "model_spec",
+    "param_logical_axes",
+]

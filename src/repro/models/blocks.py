@@ -1,0 +1,596 @@
+"""Block library: mixers + FFNs, each with ParamSpec builder and apply fn.
+
+Every mixer supports two modes:
+  * full-sequence forward (train / prefill) — returns (y, cache)
+  * single-step decode — ``x`` is (B, 1, d); consumes + updates cache.
+
+Caches are dict pytrees with static shapes (ring buffers for local
+attention; constant-size recurrent states for RG-LRU / xLSTM), so decode
+steps lower to fixed-shape HLO for any context length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamSpec, apply_rope, dense, make_dense,
+                                 make_rmsnorm, rmsnorm)
+
+Cache = Optional[Dict[str, Any]]
+
+
+# ==========================================================================
+# attention (GQA + qk_norm + RoPE + optional sliding window + cross-attn)
+# ==========================================================================
+
+def attn_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd
+    spec = {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = ParamSpec((hd,), (None,), "ones")
+        spec["k_norm"] = ParamSpec((hd,), (None,), "ones")
+    return spec
+
+
+def _qk_normalize(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    window: int = 0) -> Dict[str, Any]:
+    """window > 0: ring buffer of that size; else full-length cache."""
+    length = min(window, max_len) if window > 0 else max_len
+    shape = (batch, cfg.n_kv_heads, length, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+        "v": jnp.zeros(shape, jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32),
+    }
+
+
+def attn_apply(params, x, cfg: ModelConfig, *, causal: bool = True,
+               window: int = 0, cache: Cache = None,
+               pos: Optional[jax.Array] = None,
+               kv_x: Optional[jax.Array] = None,
+               par=None) -> Tuple[jax.Array, Cache]:
+    """x: (B, S, d).  Decode mode iff ``cache`` is not None and S == 1 — the
+    new k/v are written at ``pos`` (ring position for local layers).
+    ``kv_x`` switches to cross-attention (no cache update semantics of
+    self-attn; encoder memory is precomputed once).
+    """
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    B, S, d = x.shape
+    hd = cfg.hd
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", src, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = _qk_normalize(q, params["q_norm"], cfg.norm_eps)
+        k = _qk_normalize(k, params["k_norm"], cfg.norm_eps)
+    if kv_x is None:  # rope only for self-attention
+        if pos is None:
+            positions = jnp.arange(S, dtype=jnp.int32)
+        else:
+            positions = pos + jnp.arange(S, dtype=jnp.int32)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and kv_x is None:
+        length = cache["k"].shape[2]
+        if pos is None:
+            raise ValueError("decode requires pos")
+        write_at = jnp.mod(pos, length) if window > 0 else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, write_at, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, write_at, 0))
+        new_cache = {"k": ck, "v": cv}
+        # decode attention over the cache (mask invalid/future slots)
+        scale = hd ** -0.5
+        s = jnp.einsum("bhsk,bhtk->bhst", q.astype(jnp.float32) * scale,
+                       ck.astype(jnp.float32).repeat(
+                           cfg.n_heads // cfg.n_kv_heads, axis=1))
+        slots = jnp.arange(length)
+        if window > 0:
+            # ring buffer slot t holds global position p iff p ≡ t (mod L)
+            # and pos - L < p <= pos; valid slots: within last min(pos+1, L)
+            age = jnp.mod(write_at - slots, length)  # 0 = newest
+            valid = (age < jnp.minimum(pos + 1, length)) & (age < window)
+        else:
+            valid = slots <= pos
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bhtk->bhsk", p.astype(jnp.float32),
+                       cv.astype(jnp.float32).repeat(
+                           cfg.n_heads // cfg.n_kv_heads, axis=1))
+        o = o.astype(x.dtype)
+    elif cfg.attn_impl == "skip":
+        # roofline instrumentation: identity attention (projections kept).
+        # The delta between 'xla' and 'skip' unit compiles isolates the
+        # attention-matrix cost, which the Pallas kernel replaces with its
+        # analytic VMEM-resident traffic (hlo_costs.attention_adjustment).
+        o = q
+    else:
+        if par is not None and kv_x is None:
+            q = par.shard_attn_q(q)   # context parallelism (§Perf-A)
+            k, v = par.shard_attn_kv(k, v)
+        o = flash_attention(q, k, v, causal=causal and kv_x is None,
+                            window=window, impl=cfg.attn_impl)
+        if par is not None and kv_x is None:
+            o = par.shard_attn_out(o)
+        if cache is not None:
+            new_cache = cache
+        elif kv_x is None:
+            # prefill: emit the cache for subsequent decode
+            new_cache = {"k": k, "v": v}
+    y = jnp.einsum("bhsk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ==========================================================================
+# SwiGLU FFN
+# ==========================================================================
+
+def swiglu_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def swiglu_apply(params, x):
+    g = dense(params["w_gate"], x)
+    u = dense(params["w_up"], x)
+    return dense(params["w_down"], jax.nn.silu(g) * u)
+
+
+# ==========================================================================
+# Mixture of Experts (token-choice top-k, dropless grouped matmul)
+# ==========================================================================
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, E = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    spec = {
+        "router": ParamSpec((d, E), ("embed", "experts")),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((E, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.shared_experts:
+        spec["shared"] = swiglu_spec(cfg, cfg.expert_d_ff * cfg.shared_experts)
+    return spec
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> jax.Array:
+    """Dropless token-choice MoE via sort + ragged grouped matmul.
+
+    Data-dependent values, static shapes: jit/pjit-safe.  Under GSPMD the
+    expert weights shard over ('expert' -> model axis); the EP all_to_all
+    variant lives in ``moe_apply_ep`` (explicit shard_map collectives).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    xt = x.reshape(N, d)
+    logits = dense(params["router"], xt).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (N, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    flat_e = expert_idx.reshape(-1)                          # (N*k,)
+    order = jnp.argsort(flat_e)
+    token_of = order // k
+    xs = jnp.take(xt, token_of, axis=0)                     # (N*k, d)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    g = jax.lax.ragged_dot(xs, params["w_gate"].astype(xs.dtype), group_sizes)
+    u = jax.lax.ragged_dot(xs, params["w_up"].astype(xs.dtype), group_sizes)
+    h = jax.nn.silu(g) * u
+    out = jax.lax.ragged_dot(h, params["w_down"].astype(xs.dtype), group_sizes)
+    gates = jnp.take(gate_vals.reshape(-1), order, axis=0)
+    y = jnp.zeros((N, d), x.dtype).at[token_of].add(
+        out * gates[:, None].astype(out.dtype))
+    if cfg.shared_experts:
+        y = y + swiglu_apply(params["shared"], xt)
+    return y.reshape(B, S, d)
+
+
+def moe_apply_ep(params, x, cfg: ModelConfig, ep_axis: str,
+                 capacity_factor: Optional[float] = None,
+                 pre_sharded: bool = False) -> jax.Array:
+    """Expert-parallel MoE body for use INSIDE shard_map (GShard-style).
+
+    ``x`` arrives batch-sharded over the DP axes and REPLICATED along
+    ``ep_axis`` — the body first takes this shard's 1/M token slice
+    (sequence-sharded MoE), so routing + dispatch work is divided across
+    the EP group instead of replicated.
+
+    Dispatch: per-(source, expert) capacity slots -> (E, cap, d) send
+    buffer -> all_to_all over the expert-owner dim -> per-local-expert
+    batched einsum (honest grouped-matmul FLOPs; ragged_dot lowers dense
+    per group off-TPU) -> all_to_all back -> gate-weighted combine ->
+    all_gather of the token slices.  Overflow beyond capacity is dropped
+    (standard capacity-factor semantics).
+    """
+    M = jax.lax.axis_size(ep_axis)
+    me = jax.lax.axis_index(ep_axis)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_local = params["w_gate"].shape[0]
+    assert E_local * M == E, (E_local, M, E)
+    N = B * S
+    cf = capacity_factor or cfg.capacity_factor
+
+    xt = x.reshape(N, d)
+    if pre_sharded:
+        # caller already sequence-sharded the activations over ep_axis
+        # (act_seq_shard): x IS this shard's token slice — no slice/gather.
+        n_loc = N
+        x_loc = xt
+        pad_n = 0
+    else:
+        pad_n = (-N) % M
+        if pad_n:
+            xt = jnp.pad(xt, ((0, pad_n), (0, 0)))
+        n_loc = (N + pad_n) // M
+        x_loc = jax.lax.dynamic_slice_in_dim(xt, me * n_loc, n_loc, axis=0)
+
+    logits = dense(params["router"], x_loc).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (n_loc, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(np.ceil(n_loc * k / E * cf)), 1)
+    flat_e = expert_idx.reshape(-1)                        # (n_loc*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = jnp.take(flat_e, order, axis=0)
+    start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(n_loc * k) - jnp.take(start, sorted_e, axis=0)
+    keep = rank < cap
+    tok = order // k                                       # local token id
+
+    # cap+1 column: dropped entries land in the spill slot, then sliced off
+    send_x = jnp.zeros((E, cap + 1, d), x.dtype)
+    send_tok = jnp.full((E, cap + 1), -1, jnp.int32)
+    send_gate = jnp.zeros((E, cap + 1), jnp.float32)
+    cidx = jnp.where(keep, rank, cap)
+    send_x = send_x.at[sorted_e, cidx].set(jnp.take(x_loc, tok, axis=0))
+    send_tok = send_tok.at[sorted_e, cidx].set(tok)
+    send_gate = send_gate.at[sorted_e, cidx].set(
+        jnp.take(gate_vals.reshape(-1), order, axis=0))
+    send_x = send_x[:, :cap]
+    send_tok = send_tok[:, :cap]
+    send_gate = send_gate[:, :cap]
+
+    # exchange: (M, E_local, cap, d) along the expert-owner dim
+    recv_x = jax.lax.all_to_all(send_x.reshape(M, E_local, cap, d), ep_axis,
+                                0, 0, tiled=False)
+    tokens_e = recv_x.transpose(1, 0, 2, 3).reshape(E_local, M * cap, d)
+
+    g = jnp.einsum("egd,edf->egf", tokens_e,
+                   params["w_gate"].astype(tokens_e.dtype))
+    u = jnp.einsum("egd,edf->egf", tokens_e,
+                   params["w_up"].astype(tokens_e.dtype))
+    h = jax.nn.silu(g) * u
+    o = jnp.einsum("egf,efd->egd", h,
+                   params["w_down"].astype(tokens_e.dtype))
+
+    back = jax.lax.all_to_all(
+        o.reshape(E_local, M, cap, d).transpose(1, 0, 2, 3), ep_axis,
+        0, 0, tiled=False)                                 # (M, E_local, cap, d)
+    back = back.reshape(E * cap, d)
+
+    flat_tok = send_tok.reshape(-1)
+    flat_gate = send_gate.reshape(-1)
+    contrib = back.astype(jnp.float32) * flat_gate[:, None]
+    safe_tok = jnp.where(flat_tok >= 0, flat_tok, 0)
+    y_loc = jnp.zeros((n_loc, d), jnp.float32).at[safe_tok].add(
+        jnp.where((flat_tok >= 0)[:, None], contrib, 0.0)).astype(x.dtype)
+
+    if pre_sharded:
+        y = y_loc
+    else:
+        y = jax.lax.all_gather(y_loc, ep_axis, axis=0, tiled=True)[:N]
+    if cfg.shared_experts:
+        y = y + swiglu_apply(params["shared"], xt[:N])
+    return y.reshape(B, S, d)
+
+
+# ==========================================================================
+# RG-LRU (RecurrentGemma recurrent block)
+# ==========================================================================
+
+def rglru_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_in_x": ParamSpec((d, w), ("embed", "mlp")),       # recurrence branch
+        "w_in_y": ParamSpec((d, w), ("embed", "mlp")),       # gate branch
+        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, "mlp")),
+        "w_a": ParamSpec((w, w), ("mlp", None)),             # recurrence gate
+        "w_i": ParamSpec((w, w), ("mlp", None)),             # input gate
+        "log_lambda": ParamSpec((w,), (None,), "zeros"),
+        "w_out": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def _rglru_coeffs(params, u, c: float = 8.0):
+    """Per-step decay a_t and input i_t from branch activations u (B,S,w)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["w_a"].astype(u.dtype))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, params["w_i"].astype(u.dtype))
+                       .astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(params["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gate = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, gate * i
+
+
+def rglru_apply(params, x, cfg: ModelConfig, cache: Cache = None
+                ) -> Tuple[jax.Array, Cache]:
+    """Full block: conv1d + linear recurrence (associative scan) + GLU out."""
+    B, S, d = x.shape
+    u = dense(params["w_in_x"], x)                      # (B,S,w) recurrence in
+    y_gate = jax.nn.gelu(dense(params["w_in_y"], x))    # (B,S,w)
+    # causal conv1d over the recurrence branch
+    K = params["conv_w"].shape[0]
+    if cache is not None and S == 1:
+        hist = jnp.concatenate([cache["conv"], u], axis=1)   # (B, K, w)
+        u_conv = jnp.einsum("bkw,kw->bw", hist,
+                            params["conv_w"].astype(u.dtype))[:, None]
+        new_conv = hist[:, 1:]
+    else:
+        pad = jnp.zeros((B, K - 1, u.shape[-1]), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+        u_conv = sum(
+            up[:, i:i + S] * params["conv_w"][i].astype(u.dtype)
+            for i in range(K))
+        new_conv = up[:, S:S + K - 1] if S >= K - 1 else up[:, -(K - 1):]
+    a, b = _rglru_coeffs(params, u_conv)
+    bx = b * u_conv.astype(jnp.float32)
+    if cache is not None and S == 1:
+        h = a[:, 0] * cache["state"] + bx[:, 0]
+        new_state = h
+        h = h[:, None]
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h = hh
+        new_state = hh[:, -1]
+    out = dense(params["w_out"], (h.astype(x.dtype) * y_gate))
+    return out, {"state": new_state, "conv": new_conv}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    w = cfg.lru_width or cfg.d_model
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"state": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dt)}
+
+
+# ==========================================================================
+# xLSTM: mLSTM (chunkwise-parallel) and sLSTM (sequential)
+# ==========================================================================
+
+def mlstm_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = 2 * d                       # up-projection factor 2 (xLSTM paper)
+    nh = cfg.mlstm_heads
+    dh = w // nh
+    return {
+        "w_up": ParamSpec((d, w), ("embed", "mlp")),
+        "w_gate_up": ParamSpec((d, w), ("embed", "mlp")),
+        "wq": ParamSpec((w, nh, dh), ("mlp", "heads", None)),
+        "wk": ParamSpec((w, nh, dh), ("mlp", "heads", None)),
+        "wv": ParamSpec((w, nh, dh), ("mlp", "heads", None)),
+        "w_i": ParamSpec((w, nh), ("mlp", "heads")),
+        "w_f": ParamSpec((w, nh), ("mlp", "heads")),
+        "out_norm": ParamSpec((w,), ("mlp",), "ones"),
+        "w_down": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def _headwise_norm(h, scale, nh: int, eps: float = 1e-6):
+    """GroupNorm-per-head on the cell output (xLSTM's out-norm)."""
+    B, S, w = h.shape
+    hh = h.reshape(B, S, nh, w // nh).astype(jnp.float32)
+    var = jnp.mean(jnp.square(hh), axis=-1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(var + eps)
+    return (hh.reshape(B, S, w) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, cache: Cache = None,
+                chunk: int = 256) -> Tuple[jax.Array, Cache]:
+    """mLSTM block: matrix memory with exponential gating.
+
+    Full-sequence mode uses a chunkwise formulation: recurrent (C, n, m)
+    state across chunks + quadratic in-chunk attention with log-space decay
+    (sub-quadratic overall: O(S * chunk)).  Decode mode is the plain
+    recurrence.
+    """
+    B, S, d = x.shape
+    nh = cfg.mlstm_heads
+    u = dense(params["w_up"], x)
+    gate = jax.nn.silu(dense(params["w_gate_up"], x))
+    w = u.shape[-1]
+    dh = w // nh
+    q = jnp.einsum("bsw,whk->bhsk", u, params["wq"].astype(u.dtype))
+    k = jnp.einsum("bsw,whk->bhsk", u, params["wk"].astype(u.dtype)) * (dh ** -0.5)
+    v = jnp.einsum("bsw,whk->bhsk", u, params["wv"].astype(u.dtype))
+    it = jnp.einsum("bsw,wh->bhs", u, params["w_i"].astype(u.dtype)).astype(jnp.float32)
+    ft = jnp.einsum("bsw,wh->bhs", u, params["w_f"].astype(u.dtype)).astype(jnp.float32)
+    logf = -jax.nn.softplus(-ft)     # log sigmoid(ft)
+
+    if cache is not None and S == 1:
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        m_new = jnp.maximum(logf[..., 0] + m, it[..., 0])
+        fprime = jnp.exp(logf[..., 0] + m - m_new)
+        iprime = jnp.exp(it[..., 0] - m_new)
+        C = fprime[..., None, None] * C + iprime[..., None, None] * \
+            jnp.einsum("bhk,bhv->bhkv", k[:, :, 0].astype(jnp.float32),
+                       v[:, :, 0].astype(jnp.float32))
+        n = fprime[..., None] * n + iprime[..., None] * k[:, :, 0].astype(jnp.float32)
+        hnum = jnp.einsum("bhk,bhkv->bhv", q[:, :, 0].astype(jnp.float32), C)
+        hden = jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, :, 0].astype(jnp.float32), n))
+        h = hnum / jnp.maximum(hden, jnp.exp(-m_new))[..., None]
+        h = h.reshape(B, 1, w).astype(x.dtype)
+        h = _headwise_norm(h, params["out_norm"], nh)
+        out = dense(params["w_down"], h * gate)
+        return out, {"C": C, "n": n, "m": m_new}
+
+    # ---- chunkwise parallel (training / prefill) --------------------------
+    pad = (-S) % chunk
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        it = jnp.pad(it, ((0, 0), (0, 0), (0, pad)))
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def resh(t):
+        return t.reshape(B, nh, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    ic = it.reshape(B, nh, nc, chunk).transpose(2, 0, 1, 3)
+    fc = logf.reshape(B, nh, nc, chunk).transpose(2, 0, 1, 3)
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qx, kx, vx, ix, fx = inp
+        qx = qx.astype(jnp.float32)
+        kx = kx.astype(jnp.float32)
+        vx = vx.astype(jnp.float32)
+        fcum = jnp.cumsum(fx, axis=-1)                  # (B,nh,T)
+        ftot = fcum[..., -1]
+        # stabiliser per position: max(inter m + fcum, running intra max)
+        intra = ix - fcum                                # log i_j - sum f<=j
+        intra_max = jax.lax.cummax(intra, axis=intra.ndim - 1)
+        m_t = jnp.maximum(fcum + m[..., None], fcum + intra_max)
+        # inter-chunk: h_inter = (q * exp(fcum + m - m_t)) @ C
+        w_inter = jnp.exp(fcum + m[..., None] - m_t)
+        hi = jnp.einsum("bhtk,bhkv->bhtv", qx * w_inter[..., None], C)
+        ni = jnp.einsum("bhtk,bhk->bht", qx * w_inter[..., None], n)
+        # intra-chunk: D_tj = exp(fcum_t - fcum_j + i_j - m_t) for j <= t
+        logD = (fcum[..., :, None] - fcum[..., None, :]
+                + ix[..., None, :] - m_t[..., :, None])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, None], jnp.exp(logD), 0.0)
+        s = jnp.einsum("bhtk,bhjk->bhtj", qx, kx) * D
+        ha = jnp.einsum("bhtj,bhjv->bhtv", s, vx)
+        na = s.sum(-1)
+        denom = jnp.maximum(jnp.abs(ni + na), jnp.exp(-m_t))
+        h = (hi + ha) / denom[..., None]
+        # carry update (stabilised at chunk end)
+        m_end = m_t[..., -1]
+        scale_old = jnp.exp(ftot + m - m_end)
+        wk_new = jnp.exp(ix - fcum + ftot[..., None] - m_end[..., None])
+        C_new = scale_old[..., None, None] * C + jnp.einsum(
+            "bhtk,bhtv->bhkv", kx * wk_new[..., None], vx)
+        n_new = scale_old[..., None] * n + (kx * wk_new[..., None]).sum(2)
+        return (C_new, n_new, m_end), h
+
+    if nc == 1:
+        # single chunk: skip the scan so HLO cost analysis sees the body
+        # (and decode-prefill of short prompts avoids while overhead)
+        _, hs = chunk_step((C0, n0, m0), (qc[0], kc[0], vc[0], ic[0], fc[0]))
+        hs = hs[None]
+    else:
+        (_, _, _), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                     (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, nh, Sp, dh)[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, w).astype(x.dtype)
+    h = _headwise_norm(h, params["out_norm"], nh)
+    out = dense(params["w_down"], h * gate)
+    return out, None
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    w = 2 * cfg.d_model
+    nh = cfg.mlstm_heads
+    dh = w // nh
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    # sLSTM weights are REPLICATED (axes None): the cell is inherently
+    # sequential (a matmul per timestep inside the scan), so sharding its
+    # weights over 'model' would emit one psum per token step.  At xLSTM
+    # scale the weights are small; replication is the sane layout
+    # (see EXPERIMENTS.md roofline notes for xlstm-1.3b).
+    d = cfg.d_model
+    return {
+        "w_gates": ParamSpec((d, 4 * d), (None, None)),       # i, f, z, o
+        "r_gates": ParamSpec((d, 4 * d), (None, None), scale=0.0),
+        "out_norm": ParamSpec((d,), (None,), "ones"),
+        "w_down": ParamSpec((d, d), (None, None)),
+    }
+
+
+def _slstm_step(params, carry, xt):
+    """One sLSTM step; xt: (B, d)."""
+    c, n, m, h = carry
+    z4 = dense(params["w_gates"], xt) + dense(params["r_gates"], h)
+    it, ft, zt, ot = jnp.split(z4.astype(jnp.float32), 4, axis=-1)
+    logf = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(logf + m, it)
+    iprime = jnp.exp(it - m_new)
+    fprime = jnp.exp(logf + m - m_new)
+    c_new = fprime * c + iprime * jnp.tanh(zt)
+    n_new = fprime * n + iprime
+    h_new = jax.nn.sigmoid(ot) * (c_new / jnp.maximum(n_new, 1e-6))
+    h_new = h_new.astype(xt.dtype)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(params, x, cfg: ModelConfig, cache: Cache = None
+                ) -> Tuple[jax.Array, Cache]:
+    B, S, d = x.shape
+    if cache is not None and S == 1:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+        carry, h = _slstm_step(params, carry, x[:, 0])
+        hn = _headwise_norm(h[:, None], params["out_norm"], nh=1)
+        out = dense(params["w_down"], hn)
+        return out, {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    c0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -1e30, jnp.float32)
+    h0 = jnp.zeros((B, d), x.dtype)
+    (c, n, m, h), hs = jax.lax.scan(
+        functools.partial(_slstm_step, params),
+        (c0, c0, m0, h0), x.transpose(1, 0, 2))
+    hn = _headwise_norm(hs.transpose(1, 0, 2), params["out_norm"], nh=1)
+    out = dense(params["w_down"], hn)
+    return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), dt)}

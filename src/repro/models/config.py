@@ -1,0 +1,141 @@
+"""Model configuration covering every assigned architecture family.
+
+A model is: optional modality frontend stub -> embedding -> a few unscanned
+``prefix`` blocks -> ``n_units`` repetitions of a block ``pattern`` (scanned;
+params stacked over units) -> final norm -> LM head.
+
+Block descriptor = (mixer, ffn):
+  mixer: 'ga' global attention | 'la' local (sliding-window) attention |
+         'rglru' RG-LRU recurrence | 'mlstm' | 'slstm' | 'xattn' (cross)
+  ffn:   'swiglu' | 'moe' | 'none'
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+Block = Tuple[str, str]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    # layer stack
+    pattern: Tuple[Block, ...] = (("ga", "swiglu"),)
+    n_units: int = 1                 # scanned repetitions of `pattern`
+    prefix: Tuple[Block, ...] = ()   # unscanned leading blocks
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    local_window: int = 1024
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # recurrent (RG-LRU / xLSTM)
+    lru_width: Optional[int] = None
+    conv1d_width: int = 4
+    mlstm_heads: int = 4
+    # encoder-decoder
+    n_enc_units: int = 0
+    enc_pattern: Tuple[Block, ...] = ()
+    # frontend stub for [audio]/[vlm]: inputs arrive as precomputed
+    # frame/patch embeddings when 'embed_stub'; 'tokens' = ordinary ids
+    frontend: str = "tokens"
+    # numerics / lowering
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    remat: bool = True
+    remat_policy: str = "full"       # full | dots (checkpoint_dots)
+    attn_impl: str = "auto"          # 'xla' for dry-run lowering; 'pallas' on TPU
+    tie_embeddings: bool = False
+    # skip flags (assignment notes)
+    supports_long_context: bool = False   # sub-quadratic decode path exists
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.prefix) + self.n_units * len(self.pattern)
+
+    @property
+    def num_enc_layers(self) -> int:
+        return self.n_enc_units * len(self.enc_pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_units > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- analytic parameter / FLOP model (for roofline §Roofline) ---------
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        qkvo = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+
+        def ffn_params(kind: str) -> int:
+            if kind == "swiglu":
+                return 3 * d * self.d_ff
+            if kind == "moe":
+                per = 3 * d * self.expert_d_ff
+                return (self.n_experts + self.shared_experts) * per \
+                    + d * self.n_experts  # router
+            return 0
+
+        def mixer_params(kind: str) -> int:
+            if kind in ("ga", "la", "xattn"):
+                return qkvo
+            if kind == "rglru":
+                w = self.lru_width or d
+                # in/out proj + gates + conv
+                return 2 * d * w + 2 * w * w // 1 + self.conv1d_width * w
+            if kind in ("mlstm",):
+                w = 2 * d  # up-projection factor 2
+                return (2 * d * w + w * d + 3 * w * w
+                        + 2 * w * self.mlstm_heads + w)
+            if kind == "slstm":
+                return 8 * d * d + d * d + d
+            return 0
+
+        def block_params(b: Block) -> int:
+            m, f = b
+            return mixer_params(m) + ffn_params(f) + 2 * d  # 2 norms
+
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        total += d  # final norm
+        for b in self.prefix:
+            total += block_params(b)
+        for b in self.pattern:
+            total += block_params(b) * self.n_units
+        for b in self.enc_pattern:
+            total += block_params(b) * self.n_enc_units
+        if self.is_encdec:
+            total += self.num_layers * qkvo  # decoder cross-attention
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        per_expert = 3 * d * self.expert_d_ff
+        inactive = (self.n_experts - self.top_k) * per_expert
+        n_moe_blocks = sum(1 for b in self.prefix if b[1] == "moe") \
+            + self.n_units * sum(1 for b in self.pattern if b[1] == "moe")
+        return self.param_count() - n_moe_blocks * inactive

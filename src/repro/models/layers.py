@@ -1,0 +1,136 @@
+"""Parameter machinery + primitive layers.
+
+Params are plain dict pytrees.  Every model first builds a ``ParamSpec``
+tree (shape + logical axes + init), from which we derive
+  * real initialised params (smoke tests, examples),
+  * ShapeDtypeStructs (dry-run: no allocation),
+  * NamedShardings via logical-axis rules (launch/shardings.py).
+This guarantees params / shapes / shardings never drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # default: 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def shapes_of(tree: Any, dtype: jnp.dtype) -> Any:
+    """ShapeDtypeStruct tree (dry-run path; no allocation)."""
+    return spec_tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+def init_params(tree: Any, key: jax.Array, dtype: jnp.dtype) -> Any:
+    """Materialise real parameters (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+        scale = s.scale if s.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dtype)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+def logical_axes(tree: Any) -> Any:
+    """Tree of logical-axes tuples mirroring the params."""
+    return spec_tree_map(lambda s: s.axes, tree)
+
+
+# --------------------------------------------------------------------------
+# primitive layers (apply functions over dict params)
+# --------------------------------------------------------------------------
+
+def rmsnorm_spec() -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((0,), (None,), "ones")}  # shape fixed later
+
+
+def make_rmsnorm(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("embed",), "ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_dense(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]]
+               ) -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes)
+
+
+def dense(w, x):
+    return jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+
+
+def make_embedding(vocab: int, d: int) -> ParamSpec:
+    return ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)
+
+
+def embed(w, ids):
+    return jnp.take(w, ids, axis=0)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# activation checkpointing policy
+# --------------------------------------------------------------------------
+
+def remat_policy(name: str):
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if name == "dots_no_batch":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    raise ValueError(name)

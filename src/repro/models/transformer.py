@@ -1,0 +1,321 @@
+"""Model assembly: spec tree, forward / prefill / decode, loss.
+
+Layer stack = unscanned ``prefix`` blocks + ``lax.scan`` over ``n_units``
+repetitions of the block ``pattern`` (params stacked over a leading
+'layers' axis).  Scan keeps the HLO (and compile time / memory) O(pattern)
+instead of O(depth) — the production norm for deep stacks; the dry-run's
+roofline extraction multiplies in-loop costs by the trip count
+(launch/dryrun.py).
+
+Caches mirror the stack: a dict {'prefix': [...], 'units': stacked-tree}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.config import Block, ModelConfig
+from repro.models.layers import (ParamSpec, dense, embed, init_params,
+                                 logical_axes, make_embedding, make_rmsnorm,
+                                 rmsnorm, shapes_of, spec_tree_map)
+
+
+# ==========================================================================
+# spec construction
+# ==========================================================================
+
+def _mixer_spec(cfg: ModelConfig, kind: str):
+    if kind in ("ga", "la", "xattn"):
+        return B.attn_spec(cfg)
+    if kind == "rglru":
+        return B.rglru_spec(cfg)
+    if kind == "mlstm":
+        return B.mlstm_spec(cfg)
+    if kind == "slstm":
+        return B.slstm_spec(cfg)
+    raise ValueError(kind)
+
+
+def _ffn_spec(cfg: ModelConfig, kind: str):
+    if kind == "swiglu":
+        return B.swiglu_spec(cfg)
+    if kind == "moe":
+        return B.moe_spec(cfg)
+    if kind == "none":
+        return None
+    raise ValueError(kind)
+
+
+def block_spec(cfg: ModelConfig, blk: Block, cross: bool = False) -> Dict[str, Any]:
+    mixer, ffn = blk
+    spec: Dict[str, Any] = {
+        "norm1": make_rmsnorm(cfg.d_model),
+        "mixer": _mixer_spec(cfg, mixer),
+    }
+    if cross:
+        spec["norm_x"] = make_rmsnorm(cfg.d_model)
+        spec["xattn"] = B.attn_spec(cfg)
+    f = _ffn_spec(cfg, ffn)
+    if f is not None:
+        spec["norm2"] = make_rmsnorm(cfg.d_model)
+        spec["ffn"] = f
+    return spec
+
+
+def stack_spec(tree: Any, n: int) -> Any:
+    return spec_tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale), tree)
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "embed": make_embedding(cfg.vocab_size, cfg.d_model),
+        "final_norm": make_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    if cfg.prefix:
+        spec["prefix"] = {str(i): block_spec(cfg, b, cross=cfg.is_encdec)
+                          for i, b in enumerate(cfg.prefix)}
+    unit = {f"b{i}": block_spec(cfg, b, cross=cfg.is_encdec)
+            for i, b in enumerate(cfg.pattern)}
+    spec["units"] = stack_spec(unit, cfg.n_units)
+    if cfg.is_encdec:
+        enc_unit = {f"b{i}": block_spec(cfg, b)
+                    for i, b in enumerate(cfg.enc_pattern)}
+        spec["enc"] = {
+            "units": stack_spec(enc_unit, cfg.n_enc_units),
+            "final_norm": make_rmsnorm(cfg.d_model),
+        }
+    return spec
+
+
+# ==========================================================================
+# block application
+# ==========================================================================
+
+def _apply_block(params, x, cfg: ModelConfig, blk: Block, *,
+                 cache=None, pos=None, enc_out=None, par=None):
+    mixer, ffn = blk
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if mixer in ("ga", "la"):
+        window = cfg.local_window if mixer == "la" else 0
+        att_cache = None if cache is None else cache.get("attn")
+        y, new_attn = B.attn_apply(params["mixer"], h, cfg, causal=True,
+                                   window=window, cache=att_cache, pos=pos,
+                                   par=par)
+        new_cache = {"attn": new_attn}
+    elif mixer == "rglru":
+        y, st = B.rglru_apply(params["mixer"], h, cfg,
+                              cache=None if cache is None else cache.get("rec"))
+        new_cache = {"rec": st}
+    elif mixer == "mlstm":
+        y, st = B.mlstm_apply(params["mixer"], h, cfg,
+                              cache=None if cache is None else cache.get("rec"))
+        new_cache = {"rec": st}
+    elif mixer == "slstm":
+        y, st = B.slstm_apply(params["mixer"], h, cfg,
+                              cache=None if cache is None else cache.get("rec"))
+        new_cache = {"rec": st}
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if enc_out is not None and "xattn" in params:
+        h = rmsnorm(params["norm_x"], x, cfg.norm_eps)
+        y, _ = B.attn_apply(params["xattn"], h, cfg, causal=False,
+                            kv_x=enc_out)
+        x = x + y
+    if ffn != "none":
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "swiglu":
+            y = B.swiglu_apply(params["ffn"], h)
+        elif ffn == "moe":
+            if par is not None:
+                y = par.moe(params["ffn"], h, cfg)
+            else:
+                y = B.moe_apply(params["ffn"], h, cfg)
+        else:
+            raise ValueError(ffn)
+        x = x + y
+    return x, new_cache
+
+
+def _apply_unit(params, x, cfg: ModelConfig, *, cache=None, pos=None,
+                enc_out=None, par=None, pattern=None):
+    pattern = pattern or cfg.pattern
+    if par is not None and cache is None:
+        x = par.shard_act(x)   # remat-stash sequence sharding (§Perf-B)
+    new_caches = {}
+    for i, blk in enumerate(pattern):
+        c = None if cache is None else cache.get(f"b{i}")
+        x, nc = _apply_block(params[f"b{i}"], x, cfg, blk, cache=c, pos=pos,
+                             enc_out=enc_out, par=par)
+        new_caches[f"b{i}"] = nc
+    return x, new_caches
+
+
+# ==========================================================================
+# forward passes
+# ==========================================================================
+
+def _embed_inputs(params, cfg: ModelConfig, inputs):
+    """inputs: token ids (B, S) or precomputed embeddings (B, S, d) for
+    the [audio]/[vlm] frontend stubs."""
+    if cfg.frontend == "embed_stub" and inputs.ndim == 3:
+        return inputs.astype(_dt(cfg))
+    return embed(params["embed"], inputs).astype(_dt(cfg))
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def encode(params, cfg: ModelConfig, enc_inputs) -> jax.Array:
+    x = _embed_inputs(params, cfg, enc_inputs)
+
+    def unit_fn(x, unit_params):
+        # encoder: bidirectional local attention pattern
+        for i, blk in enumerate(cfg.enc_pattern):
+            h = rmsnorm(unit_params[f"b{i}"]["norm1"], x, cfg.norm_eps)
+            y, _ = B.attn_apply(unit_params[f"b{i}"]["mixer"], h, cfg,
+                                causal=False)
+            x = x + y
+            h = rmsnorm(unit_params[f"b{i}"]["norm2"], x, cfg.norm_eps)
+            x = x + B.swiglu_apply(unit_params[f"b{i}"]["ffn"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(unit_fn, cfg), x,
+                        params["enc"]["units"])
+    return rmsnorm(params["enc"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, inputs, enc_inputs=None,
+            par=None) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, vocab)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, enc_inputs)
+    x = _embed_inputs(params, cfg, inputs)
+    for i, blk in enumerate(cfg.prefix):
+        x, _ = _apply_block(params["prefix"][str(i)], x, cfg, blk,
+                            enc_out=enc_out, par=par)
+
+    def unit_fn(x, unit_params):
+        y, _ = _apply_unit(unit_params, x, cfg, enc_out=enc_out,
+                           par=par)
+        return y, None
+
+    x, _ = jax.lax.scan(_maybe_remat(unit_fn, cfg), x, params["units"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"].astype(x.dtype))
+    else:
+        logits = dense(params["head"], x)
+    return logits
+
+
+def loss_fn(params, cfg: ModelConfig, batch, par=None) -> jax.Array:
+    """Mean next-token cross-entropy.  batch: {'inputs', 'targets',
+    optional 'enc_inputs'}; targets -100 = masked."""
+    logits = forward(params, cfg, batch["inputs"],
+                     enc_inputs=batch.get("enc_inputs"), par=par)
+    targets = batch["targets"]
+    valid = targets >= 0
+    tsafe = jnp.where(valid, targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, tsafe[..., None], axis=-1)[..., 0]
+    return -(ll * valid).sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ==========================================================================
+# serving: prefill + decode with structured caches
+# ==========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    def one_block(blk: Block):
+        mixer, _ = blk
+        if mixer == "ga":
+            return {"attn": B.init_attn_cache(cfg, batch, max_len)}
+        if mixer == "la":
+            return {"attn": B.init_attn_cache(cfg, batch, max_len,
+                                              window=cfg.local_window)}
+        if mixer == "rglru":
+            return {"rec": B.init_rglru_cache(cfg, batch)}
+        if mixer == "mlstm":
+            return {"rec": B.init_mlstm_cache(cfg, batch)}
+        if mixer == "slstm":
+            return {"rec": B.init_slstm_cache(cfg, batch)}
+        raise ValueError(mixer)
+
+    cache: Dict[str, Any] = {}
+    if cfg.prefix:
+        cache["prefix"] = {str(i): one_block(b)
+                           for i, b in enumerate(cfg.prefix)}
+    unit = {f"b{i}": one_block(b) for i, b in enumerate(cfg.pattern)}
+    cache["units"] = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_units,) + x.shape), unit)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos,
+                enc_out=None, par=None):
+    """One decode step.  token: (B, 1) ids (or (B, 1, d) stub embeddings);
+    pos: scalar int32 current position.  Returns (logits, new_cache)."""
+    x = _embed_inputs(params, cfg, token)
+    new_cache: Dict[str, Any] = {}
+    if cfg.prefix:
+        new_cache["prefix"] = {}
+        for i, blk in enumerate(cfg.prefix):
+            x, nc = _apply_block(params["prefix"][str(i)], x, cfg, blk,
+                                 cache=cache["prefix"][str(i)], pos=pos,
+                                 enc_out=enc_out, par=par)
+            new_cache["prefix"][str(i)] = nc
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        y, nc = _apply_unit(unit_params, x, cfg, cache=unit_cache, pos=pos,
+                            enc_out=enc_out, par=par)
+        return y, nc
+
+    x, new_unit_caches = jax.lax.scan(unit_fn, x,
+                                      (params["units"], cache["units"]))
+    new_cache["units"] = new_unit_caches
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = dense(params["head"], x)
+    return logits, new_cache
+
+
+# ==========================================================================
+# convenience
+# ==========================================================================
+
+def build_params(cfg: ModelConfig, key: jax.Array):
+    return init_params(model_spec(cfg), key, _dt(cfg))
+
+
+def build_shapes(cfg: ModelConfig):
+    return shapes_of(model_spec(cfg), _dt(cfg))
+
+
+def param_logical_axes(cfg: ModelConfig):
+    return logical_axes(model_spec(cfg))

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import (adamw, adafactor, OptState,
+                                    cosine_schedule, global_norm, clip_by_global_norm)
+from repro.optim.compression import (topk_compress, topk_decompress,
+                                     int8_quantize, int8_dequantize,
+                                     CompressionState, compressed_gradient)
+
+__all__ = [
+    "adamw", "adafactor", "OptState", "cosine_schedule", "global_norm",
+    "clip_by_global_norm", "topk_compress", "topk_decompress",
+    "int8_quantize", "int8_dequantize", "CompressionState",
+    "compressed_gradient",
+]

@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 2+ pods the DP all-reduce crosses the inter-pod links (the slowest hop),
+so we provide the standard toolkit:
+
+* top-k sparsification with error feedback (memory = one residual tree) —
+  provably convergent SGD-style compression; the all-reduce payload drops
+  from |g| to 2k (values + indices).
+* int8 linear quantization (per-tensor scale) — 4x payload reduction, used
+  for the pod-axis psum in train_step when enabled.
+
+Both are pure-jnp and composable with shard_map (see train.make_train_step's
+``compress_pod_axis`` option).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # error-feedback accumulator, same tree as grads
+
+
+def init_compression_state(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+
+
+def topk_compress(g: jax.Array, k_frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top k_frac fraction (by magnitude); returns (values, idx)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * k_frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return jnp.take(flat, idx), idx
+
+
+def topk_decompress(values: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+def compressed_gradient(g: jax.Array, residual: jax.Array, k_frac: float
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback top-k: returns (sparse-but-dense gradient to reduce,
+    new residual).  The dense representation keeps the collective a plain
+    psum (payload reduction is realised by the int8/sparse wire format on
+    real hardware; here we model the semantics + measure the error)."""
+    acc = g.astype(jnp.float32) + residual
+    vals, idx = topk_compress(acc, k_frac)
+    dense = topk_decompress(vals, idx, acc.shape)
+    return dense, acc - dense
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,145 @@
+"""Optimizers: AdamW and Adafactor (factored states for the 1T MoE).
+
+Hand-rolled (no optax dependency) as functional (init, update) pairs over
+arbitrary param pytrees.  States live in the same sharding as the params
+(the launch layer shards them identically), so optimizer memory scales
+down with model parallelism.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32):
+    """Returns (init, update).  update(grads, state, params) -> (new_params,
+    new_state)."""
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"m": jax.tree.map(zeros, params),
+                               "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * g * g)
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * upd).astype(p.dtype),
+                    m.astype(state_dtype), v.astype(state_dtype))
+
+        flat_out = jax.tree.map(upd, grads, state.inner["m"],
+                                state.inner["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], flat_out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], flat_out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], flat_out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    return init, update
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment; the 1T-param MoE default)
+# --------------------------------------------------------------------------
+
+def adafactor(lr: Callable, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              state_dtype=jnp.float32):
+    """Factored Adafactor: matrices store row+col second-moment factors
+    (O(n+m) memory instead of O(nm)); vectors store full v."""
+
+    def init(params) -> OptState:
+        def one(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], state_dtype),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], state_dtype)}
+            return {"v": jnp.zeros(p.shape, state_dtype)}
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner=jax.tree.map(one, params))
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                r = beta * s["r"].astype(jnp.float32) + (1 - beta) * g2.mean(-1)
+                c = beta * s["c"].astype(jnp.float32) + (1 - beta) * g2.mean(-2)
+                denom = (r[..., None] * c[..., None, :]
+                         / jnp.maximum(r.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"r": r.astype(state_dtype), "c": c.astype(state_dtype)}
+            else:
+                v = beta * s["v"].astype(jnp.float32) + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v.astype(state_dtype)}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            newp = (p.astype(jnp.float32) * (1 - lr_t * weight_decay)
+                    - lr_t * u)
+            return newp.astype(p.dtype), new_s
+
+        is_state_leaf = lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
+        out = jax.tree.map(upd, grads, state.inner, params,
+                           is_leaf=lambda x: is_state_leaf(x))
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_inner = jax.tree.map(lambda o: o[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, inner=new_inner)
+
+    return init, update

