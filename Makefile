@@ -1,0 +1,14 @@
+.PHONY: check check-slow bench-throughput
+
+# Tier-1 tests, offline-safe, with per-test + total timeouts (fail fast
+# instead of wedging CI). Override budgets via REPRO_TEST_TIMEOUT /
+# REPRO_TOTAL_TIMEOUT.
+check:
+	bash scripts/check.sh
+
+# Everything, including @pytest.mark.slow model cases.
+check-slow:
+	bash scripts/check.sh --runslow
+
+bench-throughput:
+	PYTHONPATH=src python -m benchmarks.query_throughput --n 5000 --q 64

@@ -21,13 +21,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale dataset sizes (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,fig8,scal,kernels,roofline")
+                    help="comma list: table2,table3,fig8,scal,throughput,"
+                         "kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks.common import Csv, art_path
     from benchmarks import (encoding_bits, filter_quality, index_size,
-                            kernels_bench, roofline, scalability)
+                            kernels_bench, query_throughput, roofline,
+                            scalability)
 
     csv = Csv()
     full = args.full
@@ -57,6 +59,9 @@ def main() -> None:
             csv, (2000, 8000, 20000, 50000) if full else (500, 1000, 2000))
         scalability.vary_labels(csv, 2000 if full else 600)
         scalability.vary_density(csv, 2000 if full else 600)
+    if want("throughput"):
+        query_throughput.run(csv, n_db=5000 if full else 1000,
+                             n_queries=64 if full else 16)
     if want("kernels"):
         kernels_bench.bench_qgram_filter(csv)
         kernels_bench.bench_bitunpack(csv)

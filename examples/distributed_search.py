@@ -16,6 +16,7 @@ import numpy as np
 
 def main() -> None:
     from repro.core import filters_jax as fj
+    from repro.core import jax_compat as jc
     from repro.core.distributed import (gather_candidates, make_sharded_search,
                                         pad_db_to_shards, pad_vocab)
     from repro.core.search import FlatMSQIndex
@@ -28,8 +29,7 @@ def main() -> None:
     print(f"DB: {len(db)} graphs; dense F_D is "
           f"{dbar.fd.shape} ({dbar.fd.nbytes / 2**20:.1f} MiB)")
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     rng = np.random.default_rng(3)
@@ -40,7 +40,7 @@ def main() -> None:
     dbp, qp = pad_vocab(pad_db_to_shards(dbar, 2), q, 4)
     fn, _, _ = make_sharded_search(mesh, part.x0, part.y0, part.l, k=256,
                                    batch_axes=("data",), model_axis="model")
-    with jax.sharding.set_mesh(mesh):
+    with jc.set_mesh(mesh):
         args = (jax.tree.map(jnp.asarray, dbp), jax.tree.map(jnp.asarray, qp))
         gids, bnds, cnts = fn(*args)           # compile
         t0 = time.perf_counter()

@@ -1,7 +1,8 @@
 """Batched LM serving with the MSQ-Index as a retrieval pre-filter
-(DESIGN.md §6c): each request carries a molecule graph; the index retrieves
-its GED neighbourhood from the database; retrieved ids condition the
-prompt; the LM decodes batched.
+(DESIGN.md §6c): each request carries a molecule graph; the batched
+``GraphQueryEngine`` retrieves every request's GED neighbourhood in ONE
+bucketed filter pass; retrieved ids condition the prompt; the LM decodes
+batched.
 
     PYTHONPATH=src python examples/serve_requests.py
 """
@@ -12,13 +13,14 @@ from repro.configs import get_config, reduced
 from repro.core.search import MSQIndex
 from repro.graphs.generators import aids_like_db, perturb_graph
 from repro.models import build_params
-from repro.serve import Request, ServeEngine
+from repro.serve import GraphQuery, GraphQueryEngine, Request, ServeEngine
 
 
 def main() -> None:
-    # retrieval side: molecule database + index
+    # retrieval side: molecule database + index + batched query engine
     db = aids_like_db(1000, seed=2)
     index = MSQIndex(db)
+    retriever = GraphQueryEngine(index)
 
     # serving side: small LM
     cfg = reduced(get_config("granite-moe-1b-a400m"))
@@ -26,11 +28,13 @@ def main() -> None:
     engine = ServeEngine(cfg, params, batch_size=4, max_len=64)
 
     rng = np.random.default_rng(0)
+    mols = [perturb_graph(db[int(rng.integers(0, len(db)))], 2, rng,
+                          db.n_vlabels, db.n_elabels) for _ in range(8)]
+    # one batched retrieval pass for all 8 requests
+    retrieved = retriever.submit([GraphQuery(m, 3, verify=False)
+                                  for m in mols])
     requests = []
-    for i in range(8):
-        mol = perturb_graph(db[int(rng.integers(0, len(db)))], 2, rng,
-                            db.n_vlabels, db.n_elabels)
-        res = index.query(mol, 3, verify=False)
+    for i, res in enumerate(retrieved):
         neighbours = res.candidates[:4]
         # prompt = [BOS=1] + retrieved neighbour ids folded into vocab
         prompt = np.array([1] + [2 + (g % (cfg.vocab_size - 2))
@@ -38,6 +42,9 @@ def main() -> None:
         requests.append(Request(prompt=prompt, max_new_tokens=8))
         print(f"req{i}: |candidates|={len(res.candidates)} "
               f"-> prompt {prompt.tolist()}")
+    print(f"retrieval: {retriever.stats['filter_s']:.3f}s filter for "
+          f"{retriever.stats['queries']} queries "
+          f"(backend={retriever.backend})")
     engine.run(requests)
     for i, r in enumerate(requests):
         print(f"req{i}: generated {r.out_tokens}")

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 check with hang protection: every test gets a per-test SIGALRM
+# budget (tests/conftest.py reads REPRO_TEST_TIMEOUT) and the whole run a
+# hard wall-clock cap, so a wedged test fails fast instead of hanging CI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PER_TEST_TIMEOUT="${REPRO_TEST_TIMEOUT:-120}"
+TOTAL_TIMEOUT="${REPRO_TOTAL_TIMEOUT:-1500}"
+
+export REPRO_TEST_TIMEOUT="$PER_TEST_TIMEOUT"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec timeout --signal=INT --kill-after=30 "$TOTAL_TIMEOUT" \
+    python -m pytest -q "$@"

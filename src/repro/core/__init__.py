@@ -9,6 +9,11 @@
 #   baselines  — C-Star / Branch / path q-grams / kappa-AT competitors
 #   filters_jax, distributed — accelerator + multi-pod paths
 
-from repro.core.search import MSQIndex, FlatMSQIndex, QueryResult
+#   engine     — batched multi-query candidate generation (CandidateSource)
 
-__all__ = ["MSQIndex", "FlatMSQIndex", "QueryResult"]
+from repro.core.search import MSQIndex, FlatMSQIndex, QueryResult
+from repro.core.engine import (BatchedFilterEval, CandidateBatch,
+                               CandidateSource, bucket_queries)
+
+__all__ = ["MSQIndex", "FlatMSQIndex", "QueryResult", "BatchedFilterEval",
+           "CandidateBatch", "CandidateSource", "bucket_queries"]

@@ -1,0 +1,100 @@
+"""Array containers + host-side builders for the vectorised filter paths.
+
+jax-free on purpose: the tree index, the numpy filter backend, and
+``repro.core.search`` import this module without paying the jax import /
+backend-init cost.  The containers hold numpy arrays on host and jax
+arrays on device (NamedTuple is layout-only); ``repro.core.filters_jax``
+re-exports everything here for the accelerator code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # only for annotations; never imported at runtime here
+    import jax
+
+
+class DBArrays(NamedTuple):
+    """Device-side database shard (all (B, ...) along the graph axis)."""
+
+    nv: "jax.Array"         # (B,)   int32
+    ne: "jax.Array"         # (B,)   int32
+    degseq: "jax.Array"     # (B, Vmax) int32, non-increasing, zero-padded
+    vhist: "jax.Array"      # (B, n_vlabels) int32
+    ehist: "jax.Array"      # (B, n_elabels) int32
+    fd: "jax.Array"         # (B, U) int32 dense degree-q-gram frequencies
+    region_i: "jax.Array"   # (B,)   int32
+    region_j: "jax.Array"   # (B,)   int32
+
+
+class QueryArrays(NamedTuple):
+    nv: "jax.Array"         # () int32
+    ne: "jax.Array"         # () int32
+    sigma: "jax.Array"      # (Vmax,) int32
+    vhist: "jax.Array"      # (n_vlabels,) int32
+    ehist: "jax.Array"      # (n_elabels,) int32
+    fd: "jax.Array"         # (U,) int32
+    tau: "jax.Array"        # () int32
+
+
+# --------------------------------------------------------------------------
+# host-side builders
+# --------------------------------------------------------------------------
+
+def db_arrays_from_encoded(enc, partition, hot: Optional[int] = None,
+                           vmax: Optional[int] = None) -> DBArrays:
+    """Materialise DBArrays (numpy) from an EncodedDB + RegionPartition."""
+    B = len(enc)
+    if vmax is None:
+        vmax = int(max(enc.nv.max(), 1))
+    U = enc.vocab.n_degree_ids if hot is None else min(hot, enc.vocab.n_degree_ids)
+    fd = np.zeros((B, max(U, 1)), np.int32)
+    for i in range(B):
+        ids, cnt = enc.row_degree(i)
+        sel = ids < U
+        fd[i, ids[sel]] = cnt[sel]
+    ri, rj = partition.region_of(enc.nv, enc.ne)
+    # degseq/vhist/ehist recomputed from CSR data:
+    degs = np.zeros((B, vmax), np.int32)
+    t_d = enc.vocab.degree_id_table()
+    for i in range(B):
+        ids, cnt = enc.row_degree(i)
+        d = np.repeat(t_d[ids], cnt)
+        d = np.sort(d)[::-1][:vmax]
+        degs[i, :len(d)] = d
+    nvl, nel = enc.vocab.n_vlabels, enc.vocab.n_elabels
+    vhist = np.zeros((B, nvl), np.int32)
+    ehist = np.zeros((B, nel), np.int32)
+    for i in range(B):
+        ids, cnt = enc.row_label(i)
+        vsel = ids < nvl
+        vhist[i, ids[vsel]] = cnt[vsel]
+        esel = ~vsel
+        ehist[i, ids[esel] - nvl] = cnt[esel]
+    return DBArrays(
+        nv=enc.nv.astype(np.int32), ne=enc.ne.astype(np.int32),
+        degseq=degs, vhist=vhist, ehist=ehist, fd=fd,
+        region_i=ri.astype(np.int32), region_j=rj.astype(np.int32))
+
+
+def query_arrays_from_graph(h, vocab, partition, tau: int, vmax: int,
+                            hot: Optional[int] = None,
+                            qt=None) -> QueryArrays:
+    """Query-side arrays; pass a precomputed ``QueryTuple`` as ``qt`` to
+    skip re-encoding (the engine's LRU cache does)."""
+    from repro.core.tree import QueryTuple
+
+    q = QueryTuple.from_graph(h, vocab) if qt is None else qt
+    U = vocab.n_degree_ids if hot is None else min(hot, vocab.n_degree_ids)
+    fd = np.zeros(max(U, 1), np.int32)
+    sel = q.d_ids < U
+    fd[q.d_ids[sel]] = q.d_cnt[sel]
+    sigma = np.zeros(vmax, np.int32)
+    sigma[:min(len(q.sigma), vmax)] = q.sigma[:vmax]
+    return QueryArrays(
+        nv=np.int32(h.n), ne=np.int32(h.m), sigma=sigma,
+        vhist=h.vertex_label_hist(vocab.n_vlabels).astype(np.int32),
+        ehist=h.edge_label_hist(vocab.n_elabels).astype(np.int32),
+        fd=fd, tau=np.int32(tau))

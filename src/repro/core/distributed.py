@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import filters_jax as fj
+from repro.core import jax_compat as jc
 
 
 def _device_bounds(db: fj.DBArrays, q: fj.QueryArrays, x0: int, y0: int,
@@ -77,14 +78,14 @@ def make_sharded_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
         stride = 1
         for a in reversed(batch_axes):
             axis_index = axis_index + jax.lax.axis_index(a) * stride
-            stride *= jax.lax.axis_size(a)
+            stride *= jc.axis_size(mesh, a)
         shard_b = db.nv.shape[0]
         gids = jnp.where(ids >= 0, ids + axis_index * shard_b, -1)
         return gids[None, :], bnd[None, :], cnt[None]
 
-    shmap = jax.shard_map(
+    shmap = jc.shard_map(
         local_step, mesh=mesh, in_specs=(db_spec, q_spec),
-        out_specs=out_spec, check_vma=False)
+        out_specs=out_spec)
 
     in_shardings = (
         jax.tree.map(lambda s: NamedSharding(mesh, s), db_spec,

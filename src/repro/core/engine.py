@@ -1,0 +1,270 @@
+"""Batched multi-query candidate generation — the GraphQueryEngine core.
+
+The per-query path (``MSQIndex.query`` / ``FlatMSQIndex.query``) walks the
+index once per request: region reduction, then a Python sweep over the
+region's graphs.  Serving batches of queries, that repeats all of the
+region bookkeeping and — worse — re-touches every region graph once per
+query.  This module amortises both (Nass / EmbAssi style):
+
+Stage 1 — ``bucket_queries``: group requests by their reduced query region
+  rectangle (formula (1)).  Every query in a bucket prunes against the
+  *identical* set of region graphs, so that set is gathered once per batch.
+
+Stage 2 — ``BatchedFilterEval``: evaluate the full leaf-level filter
+  cascade for a whole bucket in one padded (Q, N) pass.  Backends:
+  ``jax`` (jit + vmap over ``filters_jax.batched_bounds``), ``numpy``
+  (vectorised per-query rows, no device round-trip), and ``pallas``
+  (the fused q-gram filter kernel per query; interpret mode off-TPU).
+
+Stage 3 (shared verification worklist) lives in
+``repro.serve.graph_engine``; the ``CandidateSource`` protocol below is
+what lets that engine run tree-backed (``MSQIndex``) or flat
+(``FlatMSQIndex``) without caring which.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core import arrays, filters
+from repro.core.arrays import DBArrays, QueryArrays
+from repro.core.qgrams import EncodedDB, QGramVocab
+from repro.core.region import RegionPartition
+from repro.core.tree import QueryTuple
+from repro.graphs.graph import Graph, GraphDB
+
+Rect = Tuple[int, int, int, int]          # inclusive (i1, i2, j1, j2)
+
+# shape buckets for the jit'd (Q, N) pass: pad to these multiples so the
+# number of distinct compiled programs stays small across buckets
+_Q_PAD = 8
+_N_PAD = 512
+_IMPOSSIBLE = -(2 ** 20)
+
+
+@runtime_checkable
+class CandidateSource(Protocol):
+    """What the serving engine needs from an index (tree or flat)."""
+
+    db: GraphDB
+    vocab: QGramVocab
+    partition: RegionPartition
+
+    def candidate_ids(self, h: Graph, tau: int) -> List[int]:
+        """Sorted candidate graph ids for one query."""
+        ...
+
+    def batched_candidates(self, graphs: Sequence[Graph],
+                           taus: Sequence[int],
+                           qtuples: Optional[Sequence[QueryTuple]] = None
+                           ) -> "CandidateBatch":
+        """Candidates for a whole batch; per-query order preserved."""
+        ...
+
+
+@dataclass
+class CandidateBatch:
+    """Per-query candidate ids plus (when the source computes them) the
+    filter lower bounds, used to order the shared verification worklist."""
+
+    ids: List[List[int]]
+    bounds: List[Optional[np.ndarray]]     # aligned with ids; None for trees
+
+
+def bucket_queries(partition: RegionPartition, graphs: Sequence[Graph],
+                   taus: Sequence[int]) -> Dict[Rect, List[int]]:
+    """Stage 1: query indices grouped by reduced-query-region rectangle."""
+    buckets: Dict[Rect, List[int]] = {}
+    for qi, (h, tau) in enumerate(zip(graphs, taus)):
+        rect = partition.query_region(h.n, h.m, int(tau))
+        buckets.setdefault(rect, []).append(qi)
+    return buckets
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def resolve_backend() -> str:
+    """Best default for the host: the jit/vmap pass on an accelerator,
+    plain vectorised numpy on CPU (no compile latency, same candidates)."""
+    from repro.kernels.qgram_filter.ops import on_tpu
+    return "jax" if on_tpu() else "numpy"
+
+
+@functools.lru_cache(maxsize=None)
+def _bounds_multi_jit():
+    """jit'd (Q, N) filter pass: vmap of the single-query cascade."""
+    import jax
+
+    from repro.core import filters_jax as fj
+
+    def multi(db: DBArrays, qb: QueryArrays) -> "jax.Array":
+        return jax.vmap(lambda q: fj.batched_bounds(db, q))(qb)
+
+    return jax.jit(multi)
+
+
+class BatchedFilterEval:
+    """Stage 2: the padded (Q, N) leaf-level filter pass.
+
+    Holds the database-side arrays (built once, reused across batches) and
+    evaluates the combined admissible bound for every (query, graph) pair
+    of a bucket.  Inputs are bit-identical to what ``FlatMSQIndex`` feeds
+    ``filters.batched_bounds_np``, so candidate sets match exactly.
+    """
+
+    def __init__(self, db: GraphDB, enc: EncodedDB,
+                 partition: RegionPartition, backend: str = "auto"):
+        if backend == "auto":
+            backend = resolve_backend()
+        if backend not in ("jax", "numpy", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.vocab = enc.vocab
+        self.partition = partition
+        from repro.graphs.batching import PaddedGraphBatch
+        nv, ne = db.sizes()
+        self.vmax = int(max(nv.max(), 1)) if len(nv) else 1
+        batch = PaddedGraphBatch.from_db(db, vmax=self.vmax)
+        U = max(self.vocab.n_degree_ids, 1)
+        fd, _ = enc.dense_hot(U)
+        ri, rj = partition.region_of(nv, ne)
+        self.arrays = DBArrays(
+            nv=batch.nv.astype(np.int32), ne=batch.ne.astype(np.int32),
+            degseq=batch.degseq.astype(np.int32),
+            vhist=batch.vlabel_hist.astype(np.int32),
+            ehist=batch.elabel_hist.astype(np.int32),
+            fd=fd.astype(np.int32),
+            region_i=ri.astype(np.int32), region_j=rj.astype(np.int32))
+
+    # ---- query-side arrays ------------------------------------------------
+    def query_arrays(self, h: Graph, tau: int,
+                     qt: Optional[QueryTuple] = None) -> QueryArrays:
+        return arrays.query_arrays_from_graph(h, self.vocab, self.partition,
+                                              tau, self.vmax, qt=qt)
+
+    def stack_queries(self, qs: Sequence[QueryArrays]) -> QueryArrays:
+        """(Q, ...) stacked query arrays (leading axis = query)."""
+        return QueryArrays(*[np.stack([np.asarray(getattr(q, f))
+                                       for q in qs])
+                             for f in QueryArrays._fields])
+
+    def graphs_in_rect(self, rect: Rect) -> np.ndarray:
+        i1, i2, j1, j2 = rect
+        m = ((self.arrays.region_i >= i1) & (self.arrays.region_i <= i2)
+             & (self.arrays.region_j >= j1) & (self.arrays.region_j <= j2))
+        return np.flatnonzero(m)
+
+    # ---- the (Q, N) pass --------------------------------------------------
+    def bounds(self, idx: np.ndarray,
+               qs: Sequence[QueryArrays]) -> np.ndarray:
+        """(Q, len(idx)) combined lower bounds for the bucket."""
+        Q, N = len(qs), len(idx)
+        if Q == 0 or N == 0:
+            return np.zeros((Q, N), np.int32)
+        if self.backend == "numpy":
+            return self._bounds_np(idx, qs)
+        if self.backend == "pallas":
+            return self._bounds_pallas(idx, qs)
+        return self._bounds_jax(idx, qs)
+
+    def _gather(self, idx: np.ndarray, n_pad: int) -> DBArrays:
+        a = self.arrays
+        pad = n_pad - len(idx)
+
+        def take(x, fill=0):
+            sub = np.asarray(x)[idx]
+            if pad:
+                widths = [(0, pad)] + [(0, 0)] * (sub.ndim - 1)
+                sub = np.pad(sub, widths, constant_values=fill)
+            return sub
+
+        # pad rows are sliced off after the pass; values don't matter as
+        # long as the arithmetic stays in int32 range
+        return DBArrays(nv=take(a.nv), ne=take(a.ne),
+                        degseq=take(a.degseq), vhist=take(a.vhist),
+                        ehist=take(a.ehist), fd=take(a.fd),
+                        region_i=take(a.region_i, _IMPOSSIBLE),
+                        region_j=take(a.region_j, _IMPOSSIBLE))
+
+    def _bounds_jax(self, idx: np.ndarray,
+                    qs: Sequence[QueryArrays]) -> np.ndarray:
+        import jax.numpy as jnp
+
+        Q, N = len(qs), len(idx)
+        qp = _pad_to(Q, _Q_PAD)
+        np_ = _pad_to(N, _N_PAD)
+        db = self._gather(idx, np_)
+        qs = list(qs) + [qs[-1]] * (qp - Q)          # pad with a repeat
+        qb = self.stack_queries(qs)
+        out = _bounds_multi_jit()(
+            DBArrays(*[jnp.asarray(x) for x in db]),
+            QueryArrays(*[jnp.asarray(x) for x in qb]))
+        return np.asarray(out)[:Q, :N]
+
+    def _bounds_np(self, idx: np.ndarray,
+                   qs: Sequence[QueryArrays]) -> np.ndarray:
+        db = self._gather(idx, len(idx))
+        out = np.empty((len(qs), len(idx)), np.int64)
+        for i, q in enumerate(qs):
+            c_d = np.minimum(db.fd, np.asarray(q.fd)[None, :]).sum(axis=1)
+            b = filters.batched_bounds_np(
+                db.nv, db.ne, db.degseq, db.vhist, db.ehist, c_d,
+                int(q.nv), int(q.ne), np.asarray(q.sigma),
+                np.asarray(q.vhist), np.asarray(q.ehist))
+            out[i] = b["combined"]
+        return out
+
+    def _bounds_pallas(self, idx: np.ndarray,
+                       qs: Sequence[QueryArrays]) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.qgram_filter.ops import (fused_filter_bounds,
+                                                    make_aux, make_scalars)
+        db = self._gather(idx, len(idx))
+        aux = make_aux(jnp.asarray(db.nv), jnp.asarray(db.ne),
+                       jnp.asarray(db.region_i), jnp.asarray(db.region_j))
+        p = self.partition
+        out = np.empty((len(qs), len(idx)), np.int64)
+        for i, q in enumerate(qs):
+            sc = make_scalars(int(q.nv), int(q.ne), int(q.tau), p.x0, p.y0,
+                              p.l)
+            b, _ = fused_filter_bounds(
+                sc, jnp.asarray(db.fd), jnp.asarray(q.fd),
+                jnp.asarray(db.vhist), jnp.asarray(q.vhist),
+                jnp.asarray(db.ehist), jnp.asarray(q.ehist),
+                jnp.asarray(db.degseq), jnp.asarray(q.sigma), aux)
+            out[i] = np.asarray(b)
+        return out
+
+
+def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
+                            taus: Sequence[int],
+                            qtuples: Optional[Sequence[QueryTuple]] = None
+                            ) -> CandidateBatch:
+    """Stages 1+2 for a flat source: bucket, gather once, one padded pass
+    per bucket, threshold per query."""
+    Qn = len(graphs)
+    ids: List[List[int]] = [[] for _ in range(Qn)]
+    bnds: List[Optional[np.ndarray]] = [None] * Qn
+    for rect, qis in bucket_queries(ev.partition, graphs, taus).items():
+        idx = ev.graphs_in_rect(rect)
+        if len(idx) == 0:
+            for qi in qis:
+                ids[qi] = []
+                bnds[qi] = np.zeros(0, np.int64)
+            continue
+        qs = [ev.query_arrays(graphs[qi], int(taus[qi]),
+                              None if qtuples is None else qtuples[qi])
+              for qi in qis]
+        bounds = ev.bounds(idx, qs)
+        for row, qi in enumerate(qis):
+            keep = bounds[row] <= int(taus[qi])
+            # idx is ascending (flatnonzero), so the kept ids stay sorted
+            ids[qi] = [int(g) for g in idx[keep]]
+            bnds[qi] = np.asarray(bounds[row][keep])
+    return CandidateBatch(ids=ids, bounds=bnds)

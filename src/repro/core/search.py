@@ -25,6 +25,9 @@ from repro.core.tree import (QGramTree, QueryTuple, SuccinctQGramTree,
 from repro.core.verify import ged_upto
 from repro.graphs.graph import Graph, GraphDB
 
+from repro.core.engine import (BatchedFilterEval, CandidateBatch,
+                               batched_flat_candidates, bucket_queries)
+
 
 @dataclass
 class QueryResult:
@@ -77,6 +80,30 @@ class MSQIndex:
                 c = tree.search(q, tau)
             cand.extend(c)
         return sorted(cand), stats
+
+    # ---- CandidateSource protocol -----------------------------------------
+    def candidate_ids(self, h: Graph, tau: int) -> List[int]:
+        return self.candidates(h, tau)[0]
+
+    def batched_candidates(self, graphs: Sequence[Graph],
+                           taus: Sequence[int],
+                           qtuples: Optional[Sequence[QueryTuple]] = None
+                           ) -> CandidateBatch:
+        """Region-major batched search: each region's tree is visited once
+        per batch, serving every query whose rectangle covers it."""
+        if qtuples is None:
+            qtuples = [QueryTuple.from_graph(h, self.vocab) for h in graphs]
+        ids: List[List[int]] = [[] for _ in graphs]
+        buckets = bucket_queries(self.partition, graphs, taus)
+        for (i, j), tree in self.trees.items():
+            for (i1, i2, j1, j2), qis in buckets.items():
+                if not (i1 <= i <= i2 and j1 <= j <= j2):
+                    continue
+                for qi in qis:
+                    ids[qi].extend(tree.search(qtuples[qi], int(taus[qi])))
+        for qi in range(len(graphs)):
+            ids[qi] = sorted(ids[qi])
+        return CandidateBatch(ids=ids, bounds=[None] * len(graphs))
 
     def query(self, h: Graph, tau: int, verify: bool = True,
               collect_stats: bool = False) -> QueryResult:
@@ -138,6 +165,28 @@ class FlatMSQIndex:
         from repro.graphs.batching import PaddedGraphBatch
         self.batch = PaddedGraphBatch.from_db(db, vmax=vmax)
         self.build_time_s = time.perf_counter() - t0
+
+    # ---- CandidateSource protocol -----------------------------------------
+    def candidate_ids(self, h: Graph, tau: int) -> List[int]:
+        return self.candidates(h, tau)
+
+    def filter_eval(self, backend: str = "auto") -> BatchedFilterEval:
+        """The batched (Q, N) filter evaluator over this index's arrays
+        (built lazily once per backend, then reused across batches)."""
+        cache = getattr(self, "_filter_evals", None)
+        if cache is None:
+            cache = self._filter_evals = {}
+        if backend not in cache:
+            cache[backend] = BatchedFilterEval(self.db, self.enc,
+                                               self.partition, backend)
+        return cache[backend]
+
+    def batched_candidates(self, graphs: Sequence[Graph],
+                           taus: Sequence[int],
+                           qtuples: Optional[Sequence[QueryTuple]] = None,
+                           backend: str = "auto") -> CandidateBatch:
+        return batched_flat_candidates(self.filter_eval(backend), graphs,
+                                       taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:
         i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import jax_compat as jc
 from repro.models import blocks as B
 from repro.models.config import ModelConfig
 
@@ -118,8 +119,8 @@ class EPParallel:
             return B.moe_apply_ep(gathered, xl, cfg, ep,
                                   pre_sharded=pre_sharded)
 
-        fn = jax.shard_map(body, mesh=self.mesh, in_specs=(p_specs, x_spec),
-                           out_specs=x_spec, check_vma=False)
+        fn = jc.shard_map(body, mesh=self.mesh, in_specs=(p_specs, x_spec),
+                          out_specs=x_spec)
         return fn(params, x)
 
 

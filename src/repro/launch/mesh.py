@@ -11,6 +11,8 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+from repro.core import jax_compat as jc
+
 # ---- TPU v5e hardware constants (assignment-specified) ---------------------
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
@@ -20,15 +22,12 @@ ICI_BW = 50e9                   # bytes/s per link (one direction)
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jc.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh (tests use small ones, e.g. (2, 4))."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jc.make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> Tuple[str, ...]:

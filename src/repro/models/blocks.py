@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import jax_compat as jc
 from repro.models.config import ModelConfig
 from repro.models.layers import (ParamSpec, apply_rope, dense, make_dense,
                                  make_rmsnorm, rmsnorm)
@@ -227,7 +228,7 @@ def moe_apply_ep(params, x, cfg: ModelConfig, ep_axis: str,
     all_gather of the token slices.  Overflow beyond capacity is dropped
     (standard capacity-factor semantics).
     """
-    M = jax.lax.axis_size(ep_axis)
+    M = jc.named_axis_size(ep_axis)
     me = jax.lax.axis_index(ep_axis)
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k

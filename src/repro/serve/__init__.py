@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine"]

@@ -1,0 +1,193 @@
+"""GraphQueryEngine: batched multi-query graph similarity serving.
+
+Answers a batch of (query graph, tau) requests over any ``CandidateSource``
+(tree-backed ``MSQIndex`` or flat ``FlatMSQIndex``) in three stages:
+
+  1. bucket queries by reduced query region (``core.engine.bucket_queries``)
+     so each region's graphs are gathered once per batch,
+  2. one padded (Q, N) leaf-filter pass per bucket
+     (``core.engine.BatchedFilterEval`` — jax / numpy / pallas backends),
+  3. a shared verification worklist drained cheapest-candidate-first
+     through ``ged_upto`` (low filter bounds are both likelier matches and
+     cheaper A* runs, so early results stream out first).
+
+Repeat queries hit two LRU caches: query *encodings* (the q-gram
+``QueryTuple``, reusable across taus) and whole *results* (exact
+(graph, tau, verify) hits).  The single-query ``query()`` is a thin
+wrapper over a one-element batch.
+"""
+from __future__ import annotations
+
+import inspect
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import CandidateSource, resolve_backend
+from repro.core.search import QueryResult
+from repro.core.tree import QueryTuple
+from repro.core.verify import ged_upto
+from repro.graphs.graph import Graph
+
+
+@dataclass
+class GraphQuery:
+    """One similarity-search request."""
+
+    graph: Graph
+    tau: int
+    verify: bool = True
+
+
+def _graph_key(g: Graph) -> bytes:
+    """Content key for the caches (exact array equality, not isomorphism)."""
+    e = np.asarray(g.edges, np.int64).reshape(-1)
+    return b"|".join((np.asarray(g.vlabels, np.int64).tobytes(),
+                      e.tobytes(),
+                      np.asarray(g.elabels, np.int64).tobytes()))
+
+
+class _LRU:
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+
+class GraphQueryEngine:
+    """Batched filter-and-verify serving over a ``CandidateSource``."""
+
+    def __init__(self, source: CandidateSource, backend: str = "auto",
+                 encoding_cache_size: int = 1024,
+                 result_cache_size: int = 256):
+        self.source = source
+        self.backend = resolve_backend() if backend == "auto" else backend
+        self._enc_cache = _LRU(encoding_cache_size)
+        self._res_cache = _LRU(result_cache_size)
+        self.stats: Dict[str, float] = {
+            "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
+            "verified_pairs": 0}
+
+    # ---- encoding cache ----------------------------------------------------
+    def _qtuple(self, g: Graph) -> Tuple[bytes, QueryTuple]:
+        key = _graph_key(g)
+        qt = self._enc_cache.get(key)
+        if qt is None:
+            qt = QueryTuple.from_graph(g, self.source.vocab)
+            self._enc_cache.put(key, qt)
+        return key, qt
+
+    # ---- the batched path --------------------------------------------------
+    def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
+        """Answer a batch; results align with ``requests`` order."""
+        self.stats["batches"] += 1
+        self.stats["queries"] += len(requests)
+        results: List[Optional[QueryResult]] = [None] * len(requests)
+
+        # whole-result cache + encoding cache + in-batch duplicate coalescing
+        fresh: List[int] = []
+        aliases: List[Tuple[int, int]] = []      # (request idx, source idx)
+        pending: Dict[Tuple, int] = {}
+        keys: List[Optional[bytes]] = [None] * len(requests)
+        qtuples: List[Optional[QueryTuple]] = [None] * len(requests)
+        for i, r in enumerate(requests):
+            key, qt = self._qtuple(r.graph)
+            k3 = (key, int(r.tau), bool(r.verify))
+            hit = self._res_cache.get(k3)
+            if hit is not None:
+                results[i] = hit
+            elif k3 in pending:
+                aliases.append((i, pending[k3]))  # duplicate in this batch
+            else:
+                pending[k3] = i
+                fresh.append(i)
+                keys[i] = key
+                qtuples[i] = qt
+        if not fresh:
+            return results  # type: ignore[return-value]
+
+        graphs = [requests[i].graph for i in fresh]
+        taus = [int(requests[i].tau) for i in fresh]
+
+        # stages 1+2: bucketed, padded filter pass (source-specific)
+        t0 = time.perf_counter()
+        kwargs = {"qtuples": [qtuples[i] for i in fresh]}
+        params = inspect.signature(
+            self.source.batched_candidates).parameters
+        if "backend" in params:     # tree sources take no backend
+            kwargs["backend"] = self.backend
+        batch = self.source.batched_candidates(graphs, taus, **kwargs)
+        t1 = time.perf_counter()
+        self.stats["filter_s"] += t1 - t0
+
+        # stage 3: shared verification worklist, cheapest candidate first
+        matches: List[List[Tuple[int, int]]] = [[] for _ in fresh]
+        verify_s = [0.0] * len(fresh)
+        work: List[Tuple[int, int, int]] = []      # (bound, row, gid)
+        for row, i in enumerate(fresh):
+            if not requests[i].verify:
+                continue
+            bnd = batch.bounds[row]
+            for k, gid in enumerate(batch.ids[row]):
+                b = int(bnd[k]) if bnd is not None else 0
+                work.append((b, row, gid))
+        work.sort()
+        db = self.source.db
+        for b, row, gid in work:
+            tv0 = time.perf_counter()
+            d = ged_upto(db[gid], graphs[row], taus[row])
+            verify_s[row] += time.perf_counter() - tv0
+            if d <= taus[row]:
+                matches[row].append((gid, d))
+        self.stats["verify_s"] += sum(verify_s)
+        self.stats["verified_pairs"] += len(work)
+
+        n_db = len(db)
+        per_q_filter = (t1 - t0) / max(len(fresh), 1)
+        for row, i in enumerate(fresh):
+            cand = batch.ids[row]
+            res = QueryResult(
+                candidates=cand,
+                matches=sorted(matches[row]),
+                n_filtered=n_db - len(cand),
+                filter_time_s=per_q_filter,
+                verify_time_s=verify_s[row],
+                stats={"batched": 1},
+            )
+            results[i] = res
+            self._res_cache.put(
+                (keys[i], taus[row], bool(requests[i].verify)), res)
+        # resolve from results, not the cache: small caches may already
+        # have evicted the entry by the time the batch finishes
+        for i, src in aliases:
+            results[i] = results[src]
+        return results  # type: ignore[return-value]
+
+    # ---- single-query wrapper ----------------------------------------------
+    def query(self, graph: Graph, tau: int, verify: bool = True) -> QueryResult:
+        return self.submit([GraphQuery(graph, tau, verify)])[0]
+
+    @property
+    def cache_info(self) -> Dict[str, int]:
+        return {"encoding_hits": self._enc_cache.hits,
+                "encoding_misses": self._enc_cache.misses,
+                "result_hits": self._res_cache.hits,
+                "result_misses": self._res_cache.misses}

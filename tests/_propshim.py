@@ -1,0 +1,139 @@
+"""Offline fallback for ``hypothesis``: deterministic seeded example draws.
+
+The CI container has no network access, so the real hypothesis package can
+never be installed there.  This shim implements the tiny subset of the API
+the test-suite uses — ``given``, ``settings`` and the ``integers`` /
+``sampled_from`` / ``lists`` strategies — by drawing a fixed number of
+examples from a PRNG seeded with the test's qualified name.  Runs are fully
+deterministic across processes and machines; no shrinking, no example
+database.  When hypothesis *is* importable the test modules use it instead
+(see the try/except import in each module).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+from typing import Any, Callable, List, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+_MAX_EXAMPLES_ATTR = "_propshim_max_examples"
+
+# Allow CI to globally scale example counts (e.g. PROPSHIM_EXAMPLE_SCALE=0.5
+# halves every test's draw count) without touching the tests.
+_SCALE = float(os.environ.get("PROPSHIM_EXAMPLE_SCALE", "1.0"))
+
+
+class SearchStrategy:
+    """Base strategy: subclasses implement ``draw(rng)``."""
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def draw(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+
+    def draw(self, rng: np.random.Generator) -> List[Any]:
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.draw(rng) for _ in range(n)]
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording the example budget (deadline etc. are no-ops).
+
+    Works in either stacking order with ``given``: the attribute is read at
+    call time by the ``given`` wrapper.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        setattr(fn, _MAX_EXAMPLES_ATTR, int(max_examples))
+        return fn
+
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    """Run the test once per deterministically drawn example tuple."""
+
+    def deco(fn: Callable) -> Callable:
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)]
+        # hypothesis semantics: positional strategies bind the RIGHTMOST
+        # parameters; anything to their left (e.g. pytest fixtures) is
+        # supplied by the caller
+        drawn_names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _MAX_EXAMPLES_ATTR, None)
+            if n is None:
+                n = getattr(fn, _MAX_EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES)
+            n = max(1, int(round(n * _SCALE)))
+            seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strats)}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example {i}: "
+                        f"args={drawn!r}") from e
+
+        # The drawn parameters are filled by the wrapper, not by pytest:
+        # hide them so pytest doesn't go looking for same-named fixtures
+        # (functools.wraps' __wrapped__ would expose the original signature).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(
+            params[:len(params) - len(strats)])
+        return wrapper
+
+    return deco
+
+
+st = strategies

@@ -42,8 +42,8 @@ def test_sharded_msq_filter_matches_flat():
     dbar = fj.db_arrays_from_encoded(flat.enc, flat.partition)
     rng = np.random.default_rng(0)
     part = flat.partition
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
     for qi, tau in [(3, 1), (20, 3), (50, 5)]:
         h = perturb_graph(db[qi], tau, rng, db.n_vlabels, db.n_elabels)
         q = fj.query_arrays_from_graph(h, flat.vocab, part, tau,
@@ -52,7 +52,7 @@ def test_sharded_msq_filter_matches_flat():
         dbp, qp = pad_vocab(pad_db_to_shards(dbar, 2), q, 4)
         fn, _, _ = make_sharded_search(mesh, part.x0, part.y0, part.l, k=64,
                                        batch_axes=("data",), model_axis="model")
-        with jax.sharding.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             gids, b, c = fn(jax.tree.map(jnp.asarray, dbp),
                             jax.tree.map(jnp.asarray, qp))
         assert gather_candidates(np.asarray(gids), np.asarray(b),
@@ -61,7 +61,7 @@ def test_sharded_msq_filter_matches_flat():
                                         batch_axes=("data", "model"),
                                         model_axis=None)
         dbp8 = pad_db_to_shards(dbar, 8)
-        with jax.sharding.set_mesh(mesh):
+        with jc.set_mesh(mesh):
             gids, b, c = fn2(jax.tree.map(jnp.asarray, dbp8),
                              jax.tree.map(jnp.asarray, q))
         assert gather_candidates(np.asarray(gids), np.asarray(b),
@@ -82,15 +82,15 @@ def test_ep_moe_matches_dense():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
     y_ref = B.moe_apply(params, x, cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
     specs = {"router": P(None, None), "w_gate": P("model", None, None),
              "w_up": P("model", None, None), "w_down": P("model", None, None)}
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(jc.shard_map(
         lambda p, xl: B.moe_apply_ep(p, xl, cfg, "model"), mesh=mesh,
         in_specs=(specs, P(("data",), None, None)),
-        out_specs=P(("data",), None, None), check_vma=False))
-    with jax.sharding.set_mesh(mesh):
+        out_specs=P(("data",), None, None)))
+    with jc.set_mesh(mesh):
         y = fn(params, x)
     err = float(jnp.abs(y - y_ref).max())
     assert err < 2e-4, err
@@ -112,15 +112,15 @@ def test_ep_moe_pre_sharded_matches_dense():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(4, 16, cfg.d_model)), jnp.float32)
     y_ref = B.moe_apply(params, x, cfg)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
     specs = {"router": P(None, None), "w_gate": P("model", None, None),
              "w_up": P("model", None, None), "w_down": P("model", None, None)}
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(jc.shard_map(
         lambda p, xl: B.moe_apply_ep(p, xl, cfg, "model", pre_sharded=True),
         mesh=mesh, in_specs=(specs, P(("data",), "model", None)),
-        out_specs=P(("data",), "model", None), check_vma=False))
-    with jax.sharding.set_mesh(mesh):
+        out_specs=P(("data",), "model", None)))
+    with jc.set_mesh(mesh):
         y = fn(params, x)
     err = float(jnp.abs(y - y_ref).max())
     assert err < 2e-4, err
@@ -147,13 +147,13 @@ def test_pjit_train_step_matches_single_device():
     step = make_train_step(cfg, opt_update)
     p1, o1, m1 = jax.jit(step)(params, opt0, batch)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
     p_sh = param_shardings(cfg, mesh)
     b_sh = {"inputs": NamedSharding(mesh, P(("data",), None)),
             "targets": NamedSharding(mesh, P(("data",), None))}
     f = jax.jit(step, in_shardings=(p_sh, None, b_sh))
-    with jax.sharding.set_mesh(mesh):
+    with jc.set_mesh(mesh):
         p2, o2, m2 = f(jax.device_put(params, p_sh), opt0, batch)
     assert abs(float(m1['loss']) - float(m2['loss'])) < 2e-4
     d = max(float(jnp.abs(a - b).max()) for a, b in
@@ -171,8 +171,8 @@ def test_elastic_checkpoint_reshard():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.train import CheckpointManager
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((8,), ("data",))
     sh = NamedSharding(mesh, P("data", None))
     w = jax.device_put(jnp.arange(64.0).reshape(16, 4), sh)
     CheckpointManager("{tmp}").save(1, {{"w": w}})
@@ -182,8 +182,8 @@ def test_elastic_checkpoint_reshard():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.train import CheckpointManager
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import jax_compat as jc
+    mesh = jc.make_mesh((4,), ("data",))
     sh = {{"w": NamedSharding(mesh, P("data", None))}}
     like = {{"w": jnp.zeros((16, 4))}}
     state, step = CheckpointManager("{tmp}").restore(like, shardings=sh)

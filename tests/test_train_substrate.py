@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: deterministic fallback (tests/_propshim.py)
+    from _propshim import given, settings, strategies as st
 
 from repro.data import ShardedLoader, StragglerSimulator, SyntheticLMDataset
 from repro.optim import (adafactor, adamw, clip_by_global_norm,
@@ -168,7 +171,8 @@ def test_trainer_runs_and_checkpoints(tmp_path):
     assert out["restarts"] == 0
     assert tr.ckpt.latest_step() == 12
     losses = [m["loss"] for m in out["metrics"]]
-    assert losses[-1] < losses[0]
+    # per-batch loss on synthetic data is noisy; compare windowed means
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
 
 
 def test_trainer_recovers_from_failures(tmp_path):
