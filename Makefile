@@ -1,10 +1,14 @@
-.PHONY: check check-slow bench-throughput
+.PHONY: check check-docs check-slow bench-throughput
 
 # Tier-1 tests, offline-safe, with per-test + total timeouts (fail fast
 # instead of wedging CI). Override budgets via REPRO_TEST_TIMEOUT /
 # REPRO_TOTAL_TIMEOUT.
 check:
 	bash scripts/check.sh
+
+# Just the DESIGN.md citation gate (also part of `check`).
+check-docs:
+	python scripts/check_docs.py
 
 # Everything, including @pytest.mark.slow model cases.
 check-slow:

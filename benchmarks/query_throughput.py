@@ -5,6 +5,14 @@ graph DB answers at >= 2x the queries/sec of looping ``FlatMSQIndex.query``
 — with *identical* candidate sets (asserted here, not assumed).
 
     PYTHONPATH=src python -m benchmarks.query_throughput [--n 5000] [--q 64]
+
+``--sharded`` additionally runs the ``ShardedGraphQueryEngine`` on a
+simulated multi-device CPU mesh (``--devices``, default 8) in both the
+graph- and vocab-sharded layouts, asserts candidate parity against the
+single-host engine, and records single-host vs sharded numbers to
+``artifacts/bench/query_throughput_sharded.{csv,json}`` (same schema).
+On fake CPU devices this measures the orchestration overhead floor, not a
+speedup — the per-device win needs real accelerators (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -44,9 +52,9 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
             for g, t in zip(graphs, taus)]
     t_loop = time.perf_counter() - t0
 
-    engine = GraphQueryEngine(flat, backend=backend)
+    # result_cache_size=0: every timed submit does the real filter work
+    engine = GraphQueryEngine(flat, backend=backend, result_cache_size=0)
     engine.submit(reqs)                      # warm: builds DBArrays, jits
-    engine._res_cache = type(engine._res_cache)(0)   # defeat result cache
     t_batch = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -74,17 +82,104 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     return rec
 
 
+def run_sharded(csv: Csv, n_db: int = 5000, n_queries: int = 64,
+                layout: str = "graph", model_parallel: int = 1,
+                repeats: int = 3) -> Dict:
+    """Single-host (numpy) vs sharded engine on the host's device mesh;
+    identical candidates asserted, both rates recorded."""
+    from repro.core.search import FlatMSQIndex
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = dataset("aids", n_db)
+    graphs, taus = make_queries(db, n_queries)
+    reqs = [GraphQuery(g, t, verify=False) for g, t in zip(graphs, taus)]
+
+    def rate(engine) -> float:
+        engine.submit(reqs)                  # warm: builds arrays, jits
+        best = min(_timed(engine, reqs) for _ in range(repeats))
+        return n_queries / best
+
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy",
+                              result_cache_size=0)
+    sharded = ShardedGraphQueryEngine(
+        FlatMSQIndex(db), make_serving_mesh(model_parallel), layout=layout,
+        result_cache_size=0)
+    qps_single = rate(single)
+    qps_sharded = rate(sharded)
+    ref = single.submit(reqs)
+    got = sharded.submit(reqs)
+    for a, b in zip(got, ref):
+        assert a.candidates == b.candidates, "candidate sets diverged"
+
+    import jax
+    devices = len(jax.devices())
+    speedup = qps_sharded / qps_single
+    csv.add(f"throughput_single_host_n{n_db}_q{n_queries}",
+            1.0 / qps_single, f"{qps_single:.1f} q/s")
+    csv.add(f"throughput_sharded_{layout}_d{devices}_n{n_db}_q{n_queries}",
+            1.0 / qps_sharded, f"{qps_sharded:.1f} q/s ({speedup:.2f}x)")
+    rec = {"n_db": n_db, "n_queries": n_queries, "devices": devices,
+           "layout": layout, "model_parallel": model_parallel,
+           "qps_single_host": qps_single, "qps_sharded": qps_sharded,
+           "speedup": speedup, "identical_candidates": True,
+           "shard_stats": sharded.shard_stats}
+    print(f"sharded engine [{layout}, {devices} devices]: "
+          f"{qps_sharded:.1f} q/s vs single-host {qps_single:.1f} q/s "
+          f"-> {speedup:.2f}x (identical candidate sets)")
+    return rec
+
+
+def _timed(engine, reqs) -> float:
+    t0 = time.perf_counter()
+    engine.submit(reqs)
+    return time.perf_counter() - t0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=5000)
     ap.add_argument("--q", type=int, default=64)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "numpy", "jax", "pallas"])
+    ap.add_argument("--sharded", action="store_true",
+                    help="also measure ShardedGraphQueryEngine on a "
+                         "multi-device CPU mesh (both layouts)")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--layout", default="both",
+                    choices=["both", "graph", "vocab"])
     args = ap.parse_args()
+    if args.sharded:
+        # must land before the first jax import: jax locks the device
+        # count on backend init.  Append to any pre-set XLA_FLAGS — a
+        # setdefault would silently drop the device-count override.
+        import os
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        have = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in have:
+            os.environ["XLA_FLAGS"] = f"{have} {flag}".strip()
     csv = Csv()
     rec = run(csv, n_db=args.n, n_queries=args.q, backend=args.backend)
     save_json("query_throughput.json", rec)
     csv.dump(art_path("query_throughput.csv"))
+    if args.sharded:
+        layouts = {"both": ["graph", "vocab"], "graph": ["graph"],
+                   "vocab": ["vocab"]}[args.layout]
+        sharded_csv = Csv()
+        recs = []
+        for lay in layouts:
+            # vocab sharding needs a 'model' axis of >= 2 devices
+            mp = max(args.devices // 2, 2) if lay == "vocab" else 1
+            if lay == "vocab" and (args.devices < 2 or args.devices % mp):
+                print(f"skipping vocab layout: {args.devices} devices "
+                      f"don't split into a (data, model={mp}) mesh")
+                continue
+            recs.append(run_sharded(sharded_csv, n_db=args.n,
+                                    n_queries=args.q, layout=lay,
+                                    model_parallel=mp))
+        save_json("query_throughput_sharded.json", recs)
+        sharded_csv.dump(art_path("query_throughput_sharded.csv"))
 
 
 if __name__ == "__main__":

@@ -20,6 +20,14 @@ class MSQConfig:
     num_edges: int = 30
     density: float = 0.5
     seed: int = 0
+    # sharded serving (ShardedGraphQueryEngine, DESIGN.md §10):
+    # 'graph' block-partitions graphs over every mesh axis; 'vocab'
+    # additionally splits the dense F_D matrix over 'model' (for wide
+    # q-gram vocabularies).  shard_topk sizes the fixed per-device
+    # candidate block (overflow falls back to exact ids, so this is a
+    # performance knob, not a recall knob).
+    sharded_layout: str = "graph"
+    shard_topk: int = 256
 
 
 def get_config() -> MSQConfig:

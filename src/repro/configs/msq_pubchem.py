@@ -5,6 +5,9 @@ from repro.configs.msq_aids import MSQConfig
 
 
 def get_config() -> MSQConfig:
+    # vocab-sharded serving: PubChem's 101 vertex labels produce a degree
+    # q-gram vocabulary wide enough that replicating dense F_D per device
+    # wastes HBM — split it over 'model' instead (DESIGN.md §5/§10).
     return MSQConfig(name="msq_pubchem", num_graphs=500_000,
                      generator="aids_like", n_vlabels=101, n_elabels=3,
-                     seed=7)
+                     seed=7, sharded_layout="vocab")

@@ -14,6 +14,16 @@ Layouts (DESIGN.md §5):
 
 Both paths are pure jnp + lax collectives inside shard_map, so they lower
 and compile for any mesh (exercised by the multi-pod dry-run).
+
+Two entry points share the layouts:
+
+* ``make_sharded_search`` — one query, the dry-run / example unit;
+* ``make_sharded_multi_search`` — a whole *padded query block* (Q, ...)
+  replicated to every device, the batched engine's per-bucket step
+  (DESIGN.md §10): every device runs the full cascade for all Q queries
+  of a bucket against its slab shard and emits per-query fixed-size
+  candidate blocks plus the true per-shard pass count, so the host can
+  detect block overflow and fall back to exact per-device ids.
 """
 from __future__ import annotations
 
@@ -39,6 +49,96 @@ def _device_bounds(db: fj.DBArrays, q: fj.QueryArrays, x0: int, y0: int,
     else:
         c_d = None
     return fj.filter_pass(db, q, x0, y0, l, c_d=c_d)
+
+
+def layout_axes(mesh: Mesh, layout: str) -> Tuple[Tuple[str, ...], Optional[str]]:
+    """(batch_axes, model_axis) for a serving layout on this mesh.
+
+    ``graph``: every mesh axis block-partitions the graph dim (the model
+    axis, when present, just adds more graph shards).  ``vocab``: graphs
+    shard over the ('pod', 'data') axes and the dense F_D vocabulary dim
+    shards over 'model'.
+    """
+    if layout == "graph":
+        return tuple(mesh.axis_names), None
+    if layout == "vocab":
+        if "model" not in mesh.axis_names:
+            raise ValueError("vocab-sharded layout needs a 'model' mesh axis")
+        return tuple(a for a in mesh.axis_names if a != "model"), "model"
+    raise ValueError(f"unknown layout {layout!r} (graph | vocab)")
+
+
+def multi_search_specs(batch_axes: Sequence[str], model_axis: Optional[str]
+                       ) -> Tuple[fj.DBArrays, fj.QueryArrays, Tuple]:
+    """PartitionSpecs for the multi-query step: DB slab shards, the
+    replicated stacked (Q, ...) query block, and the per-device candidate
+    blocks (ids, bounds, pass counts)."""
+    batch_axes = tuple(batch_axes)
+    spec_b = P(batch_axes)
+    spec_b2 = P(batch_axes, None)
+    if model_axis is not None:
+        spec_fd = P(batch_axes, model_axis)
+        spec_qfd = P(None, model_axis)
+    else:
+        spec_fd = spec_b2
+        spec_qfd = P(None, None)
+    db_spec = fj.DBArrays(nv=spec_b, ne=spec_b, degseq=spec_b2,
+                          vhist=spec_b2, ehist=spec_b2, fd=spec_fd,
+                          region_i=spec_b, region_j=spec_b)
+    q_spec = fj.QueryArrays(nv=P(None), ne=P(None), sigma=P(None, None),
+                            vhist=P(None, None), ehist=P(None, None),
+                            fd=spec_qfd, tau=P(None))
+    out_spec = (P(batch_axes, None, None), P(batch_axes, None, None),
+                P(batch_axes, None))
+    return db_spec, q_spec, out_spec
+
+
+def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
+                              batch_axes: Sequence[str] = ("data",),
+                              model_axis: Optional[str] = None):
+    """Build the jitted per-bucket step of the sharded engine.
+
+    ``fn(db, qb)`` takes slab-sharded ``DBArrays`` and a replicated stacked
+    query block (every ``QueryArrays`` field with a leading Q axis) and
+    returns, all-gathered over the S batch shards:
+
+      slab_ids (S, Q, k) int32 — positions into the *padded slab* of the
+               (up to) k lowest-bound passing graphs per shard (-1 = empty);
+      bounds   (S, Q, k) int32 — their filter lower bounds;
+      n_pass   (S, Q)    int32 — the TRUE number of passing graphs on that
+               shard, so ``n_pass > k`` flags a truncated (overflowing)
+               block and the host falls back to exact per-device ids
+               instead of silently dropping candidates.
+    """
+    batch_axes = tuple(batch_axes)
+    db_spec, q_spec, out_spec = multi_search_specs(batch_axes, model_axis)
+
+    def local_step(db: fj.DBArrays, qb: fj.QueryArrays):
+        shard_b = db.nv.shape[0]
+        axis_index = jnp.int32(0)
+        stride = 1
+        for a in reversed(batch_axes):
+            axis_index = axis_index + jax.lax.axis_index(a) * stride
+            stride *= jc.axis_size(mesh, a)
+
+        def one(q: fj.QueryArrays):
+            mask, bounds = _device_bounds(db, q, x0, y0, l, model_axis)
+            ids, bnd, _ = fj.topk_candidates(mask, bounds, k)
+            pad = k - ids.shape[0]          # shard smaller than k
+            if pad:
+                ids = jnp.concatenate(
+                    [ids, jnp.full((pad,), -1, ids.dtype)])
+                bnd = jnp.concatenate(
+                    [bnd, jnp.full((pad,), 2 ** 30, bnd.dtype)])
+            sids = jnp.where(ids >= 0, ids + axis_index * shard_b, -1)
+            return sids, bnd, mask.sum().astype(jnp.int32)
+
+        sids, bnd, n_pass = jax.vmap(one)(qb)
+        return sids[None], bnd[None], n_pass[None]
+
+    shmap = jc.shard_map(local_step, mesh=mesh, in_specs=(db_spec, q_spec),
+                         out_specs=out_spec)
+    return jax.jit(shmap), (db_spec, q_spec), out_spec
 
 
 def make_sharded_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,

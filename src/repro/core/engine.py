@@ -6,17 +6,28 @@ region's graphs.  Serving batches of queries, that repeats all of the
 region bookkeeping and — worse — re-touches every region graph once per
 query.  This module amortises both (Nass / EmbAssi style):
 
-Stage 1 — ``bucket_queries``: group requests by their reduced query region
-  rectangle (formula (1)).  Every query in a bucket prunes against the
-  *identical* set of region graphs, so that set is gathered once per batch.
+Stage 1 — **bucket** (``bucket_queries``): group requests by their reduced
+  query region rectangle (formula (1)).  Every query in a bucket prunes
+  against the *identical* set of region graphs, so that set is gathered
+  once per batch.
 
-Stage 2 — ``BatchedFilterEval``: evaluate the full leaf-level filter
-  cascade for a whole bucket in one padded (Q, N) pass.  Backends:
-  ``jax`` (jit + vmap over ``filters_jax.batched_bounds``), ``numpy``
-  (vectorised per-query rows, no device round-trip), and ``pallas``
-  (the fused q-gram filter kernel per query; interpret mode off-TPU).
+Stage 2 — **shard**: lay the bucket's slab of ``DBArrays`` out for the
+  filter pass.  Single-host backends gather the slab into one padded
+  (Q, N) block; the ``distributed`` backend block-partitions the slab over
+  the mesh's batch axes and replicates the padded query block to every
+  device (graph-sharded), optionally also splitting the dense F_D matrix
+  over the ``'model'`` axis (vocab-sharded) — see DESIGN.md §10.
 
-Stage 3 (shared verification worklist) lives in
+Stage 3 — **filter** (``BatchedFilterEval``): evaluate the full leaf-level
+  filter cascade for the whole bucket.  Backends: ``jax`` (jit + vmap over
+  ``filters_jax.batched_bounds``), ``numpy`` (vectorised per-query rows,
+  no device round-trip), ``pallas`` (the fused q-gram filter kernel per
+  query; interpret mode off-TPU), and ``distributed`` (the cascade inside
+  shard_map per device, all-gathering fixed-size top-k candidate blocks;
+  overflowing blocks fall back to exact per-device ids so truncation is
+  recall-safe).
+
+Stage 4 — **worklist** (shared verification) lives in
 ``repro.serve.graph_engine``; the ``CandidateSource`` protocol below is
 what lets that engine run tree-backed (``MSQIndex``) or flat
 (``FlatMSQIndex``) without caring which.
@@ -43,6 +54,8 @@ Rect = Tuple[int, int, int, int]          # inclusive (i1, i2, j1, j2)
 _Q_PAD = 8
 _N_PAD = 512
 _IMPOSSIBLE = -(2 ** 20)
+# per-device candidate-block size of the distributed backend
+_K_DEFAULT = 256
 
 
 @runtime_checkable
@@ -109,20 +122,29 @@ def _bounds_multi_jit():
 
 
 class BatchedFilterEval:
-    """Stage 2: the padded (Q, N) leaf-level filter pass.
+    """Stages 2+3: slab layout plus the leaf-level filter pass per bucket.
 
     Holds the database-side arrays (built once, reused across batches) and
     evaluates the combined admissible bound for every (query, graph) pair
     of a bucket.  Inputs are bit-identical to what ``FlatMSQIndex`` feeds
     ``filters.batched_bounds_np``, so candidate sets match exactly.
+
+    The ``distributed`` backend additionally needs a ``mesh``; it shards
+    each bucket slab over the mesh (``layout``: 'graph' | 'vocab', see
+    DESIGN.md §10) and drains fixed-size per-device top-k candidate blocks
+    of size ``k`` instead of materialising the full (Q, N) bounds matrix.
     """
 
     def __init__(self, db: GraphDB, enc: EncodedDB,
-                 partition: RegionPartition, backend: str = "auto"):
+                 partition: RegionPartition, backend: str = "auto", *,
+                 mesh=None, layout: str = "graph", k: int = _K_DEFAULT,
+                 shard_pad: int = _N_PAD):
         if backend == "auto":
             backend = resolve_backend()
-        if backend not in ("jax", "numpy", "pallas"):
+        if backend not in ("jax", "numpy", "pallas", "distributed"):
             raise ValueError(f"unknown backend {backend!r}")
+        if backend == "distributed" and mesh is None:
+            raise ValueError("backend='distributed' needs a mesh")
         self.backend = backend
         self.vocab = enc.vocab
         self.partition = partition
@@ -140,6 +162,27 @@ class BatchedFilterEval:
             ehist=batch.elabel_hist.astype(np.int32),
             fd=fd.astype(np.int32),
             region_i=ri.astype(np.int32), region_j=rj.astype(np.int32))
+        if backend == "distributed":
+            self._init_distributed(mesh, layout, k, shard_pad)
+
+    # ---- distributed slab-shard bookkeeping -------------------------------
+    def _init_distributed(self, mesh, layout: str, k: int,
+                          shard_pad: int) -> None:
+        from repro.core import distributed as dist
+        self.mesh = mesh
+        self.layout = layout
+        self.k = int(k)
+        self.shard_pad = int(shard_pad)
+        batch_axes, model_axis = dist.layout_axes(mesh, layout)
+        self._batch_axes = batch_axes
+        self._model_axis = model_axis
+        self.n_shards = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        self._model_size = (1 if model_axis is None
+                            else int(mesh.shape[model_axis]))
+        self._dist_fn, _, _ = dist.make_sharded_multi_search(
+            mesh, self.partition.x0, self.partition.y0, self.partition.l,
+            self.k, batch_axes=batch_axes, model_axis=model_axis)
+        self.dist_stats: Dict[str, int] = {"blocks": 0, "overflow_blocks": 0}
 
     # ---- query-side arrays ------------------------------------------------
     def query_arrays(self, h: Graph, tau: int,
@@ -166,11 +209,34 @@ class BatchedFilterEval:
         Q, N = len(qs), len(idx)
         if Q == 0 or N == 0:
             return np.zeros((Q, N), np.int32)
+        if self.backend == "distributed":
+            raise ValueError("the distributed backend emits candidate "
+                             "blocks, not dense bounds; use "
+                             "bucket_candidates()")
         if self.backend == "numpy":
             return self._bounds_np(idx, qs)
         if self.backend == "pallas":
             return self._bounds_pallas(idx, qs)
         return self._bounds_jax(idx, qs)
+
+    def bucket_candidates(self, idx: np.ndarray, qs: Sequence[QueryArrays],
+                          taus: Sequence[int]
+                          ) -> List[Tuple[List[int], np.ndarray]]:
+        """Per-query (sorted candidate ids, aligned bounds) for one bucket.
+
+        Single-host backends threshold the dense (Q, N) bounds; the
+        distributed backend drains the all-gathered candidate blocks.
+        """
+        if self.backend == "distributed":
+            return self._bucket_candidates_dist(idx, qs, taus)
+        bounds = self.bounds(idx, qs)
+        out: List[Tuple[List[int], np.ndarray]] = []
+        for row in range(len(qs)):
+            keep = bounds[row] <= int(taus[row])
+            # idx is ascending (flatnonzero), so the kept ids stay sorted
+            out.append(([int(g) for g in idx[keep]],
+                        np.asarray(bounds[row][keep])))
+        return out
 
     def _gather(self, idx: np.ndarray, n_pad: int) -> DBArrays:
         a = self.arrays
@@ -241,13 +307,93 @@ class BatchedFilterEval:
             out[i] = np.asarray(b)
         return out
 
+    # ---- the distributed per-bucket step ----------------------------------
+    def _bucket_candidates_dist(self, idx: np.ndarray,
+                                qs: Sequence[QueryArrays],
+                                taus: Sequence[int]
+                                ) -> List[Tuple[List[int], np.ndarray]]:
+        """Shard the bucket slab, run the cascade per device, drain the
+        all-gathered candidate blocks (DESIGN.md §10).
+
+        Recall safety: a device block holds at most k ids.  ``n_pass`` is
+        the true per-shard pass count, so ``n_pass > k`` (a truncated
+        block) triggers an exact host-side re-evaluation of that shard's
+        slab rows for that query — candidates are never silently dropped.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import jax_compat as jc
+
+        S = self.n_shards
+        Q = len(qs)
+        n_pad = _pad_to(max(len(idx), 1), S * self.shard_pad)
+        db = self._gather(idx, n_pad)
+        qp = _pad_to(Q, _Q_PAD)
+        qb = self.stack_queries(list(qs) + [qs[-1]] * (qp - Q))
+        if self._model_axis is not None:   # vocab dim must divide 'model'
+            upad = (-db.fd.shape[1]) % self._model_size
+            if upad:
+                db = db._replace(fd=np.pad(db.fd, [(0, 0), (0, upad)]))
+                qb = qb._replace(fd=np.pad(qb.fd, [(0, 0), (0, upad)]))
+        with jc.set_mesh(self.mesh):
+            sids, bnds, n_pass = self._dist_fn(
+                DBArrays(*[jnp.asarray(x) for x in db]),
+                QueryArrays(*[jnp.asarray(x) for x in qb]))
+        sids = np.asarray(sids)
+        bnds = np.asarray(bnds)
+        n_pass = np.asarray(n_pass)
+        shard_b = n_pad // S
+
+        # overflow fallback, batched per shard: one exact numpy pass over a
+        # shard's slab rows covers every query whose block truncated there
+        self.dist_stats["blocks"] += S * Q
+        fallback: Dict[int, Dict[int, np.ndarray]] = {}
+        for s in range(S):
+            rows = [r for r in range(Q) if int(n_pass[s, r]) > self.k]
+            if not rows:
+                continue
+            self.dist_stats["overflow_blocks"] += len(rows)
+            lo, hi = s * shard_b, min((s + 1) * shard_b, len(idx))
+            b = self._bounds_np(idx[lo:hi], [qs[r] for r in rows])
+            fallback[s] = {r: np.asarray(b[i]) for i, r in enumerate(rows)}
+
+        out: List[Tuple[List[int], np.ndarray]] = []
+        for row in range(Q):
+            tau = int(taus[row])
+            pos_parts: List[np.ndarray] = []
+            bnd_parts: List[np.ndarray] = []
+            for s in range(S):
+                fb = fallback.get(s, {}).get(row)
+                if fb is not None:
+                    lo = s * shard_b
+                    keep = fb <= tau
+                    pos_parts.append(np.arange(lo, lo + len(fb))[keep])
+                    bnd_parts.append(fb[keep])
+                else:
+                    g = sids[s, row]
+                    sel = g >= 0
+                    pos_parts.append(g[sel].astype(np.int64))
+                    bnd_parts.append(bnds[s, row][sel].astype(np.int64))
+            pos = np.concatenate(pos_parts)
+            bnd = np.concatenate(bnd_parts)
+            # slab positions -> global ids: shards are disjoint contiguous
+            # ranges of the ascending idx, so sorting by position restores
+            # the single-host ascending-id order; pad rows never pass the
+            # region mask, so every position indexes a real slab row
+            order = np.argsort(pos, kind="stable")
+            gids = idx[pos[order].astype(np.int64)]
+            out.append(([int(g) for g in gids],
+                        np.asarray(bnd[order], np.int64)))
+        return out
+
 
 def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
                             taus: Sequence[int],
                             qtuples: Optional[Sequence[QueryTuple]] = None
                             ) -> CandidateBatch:
-    """Stages 1+2 for a flat source: bucket, gather once, one padded pass
-    per bucket, threshold per query."""
+    """Stages 1-3 for a flat source: bucket, lay the slab out (gathered or
+    sharded), one filter pass per bucket, per-query candidate lists."""
     Qn = len(graphs)
     ids: List[List[int]] = [[] for _ in range(Qn)]
     bnds: List[Optional[np.ndarray]] = [None] * Qn
@@ -261,10 +407,7 @@ def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
         qs = [ev.query_arrays(graphs[qi], int(taus[qi]),
                               None if qtuples is None else qtuples[qi])
               for qi in qis]
-        bounds = ev.bounds(idx, qs)
+        cands = ev.bucket_candidates(idx, qs, [int(taus[qi]) for qi in qis])
         for row, qi in enumerate(qis):
-            keep = bounds[row] <= int(taus[qi])
-            # idx is ascending (flatnonzero), so the kept ids stay sorted
-            ids[qi] = [int(g) for g in idx[keep]]
-            bnds[qi] = np.asarray(bounds[row][keep])
+            ids[qi], bnds[qi] = cands[row]
     return CandidateBatch(ids=ids, bounds=bnds)

@@ -177,9 +177,21 @@ class FlatMSQIndex:
         if cache is None:
             cache = self._filter_evals = {}
         if backend not in cache:
+            if backend == "distributed":
+                raise ValueError(
+                    "the distributed evaluator carries a mesh; register it "
+                    "with set_filter_eval (ShardedGraphQueryEngine does)")
             cache[backend] = BatchedFilterEval(self.db, self.enc,
                                                self.partition, backend)
         return cache[backend]
+
+    def set_filter_eval(self, backend: str, ev: BatchedFilterEval) -> None:
+        """Register a preconstructed evaluator (e.g. the sharded engine's
+        mesh-bound one) under a backend name."""
+        cache = getattr(self, "_filter_evals", None)
+        if cache is None:
+            cache = self._filter_evals = {}
+        cache[backend] = ev
 
     def batched_candidates(self, graphs: Sequence[Graph],
                            taus: Sequence[int],

@@ -30,6 +30,20 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return jc.make_mesh(shape, axes)
 
 
+def make_serving_mesh(model_parallel: int = 1, devices: Optional[int] = None):
+    """Mesh over the host's visible devices for the sharded query engine
+    (DESIGN.md §10): ('data', 'model') when the vocab-sharded layout needs
+    a model axis, plain ('data',) otherwise."""
+    n = devices if devices is not None else len(jax.devices())
+    if model_parallel <= 1:
+        return jc.make_mesh((n,), ("data",))
+    if n % model_parallel:
+        raise ValueError(f"{n} devices not divisible by "
+                         f"model_parallel={model_parallel}")
+    return jc.make_mesh((n // model_parallel, model_parallel),
+                        ("data", "model"))
+
+
 def dp_axes_of(mesh) -> Tuple[str, ...]:
     """The batch-sharding axes for a mesh: ('pod','data') or ('data',)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

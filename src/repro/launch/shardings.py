@@ -113,3 +113,19 @@ def logits_spec(mesh: Mesh) -> P:
     from repro.launch.mesh import dp_axes_of
     return P(dp_axes_of(mesh), None, "model" if "model" in mesh.axis_names
              else None)
+
+
+def serving_specs(mesh: Mesh, layout: str = "graph"):
+    """NamedSharding trees for the sharded GraphQueryEngine's arrays
+    (DESIGN.md §10): (db, query-block, candidate-block) for the DB slab
+    shards, the replicated stacked (Q, ...) query block, and the
+    all-gathered per-device top-k candidate blocks."""
+    from repro.core import distributed as dist
+    db_spec, q_spec, out_spec = dist.multi_search_specs(
+        *dist.layout_axes(mesh, layout))
+
+    def named(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return named(db_spec), named(q_spec), named(out_spec)

@@ -1,4 +1,6 @@
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                      ShardedGraphQueryEngine)
 
-__all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine"]
+__all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine",
+           "ShardedGraphQueryEngine"]

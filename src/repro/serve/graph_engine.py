@@ -1,15 +1,23 @@
 """GraphQueryEngine: batched multi-query graph similarity serving.
 
 Answers a batch of (query graph, tau) requests over any ``CandidateSource``
-(tree-backed ``MSQIndex`` or flat ``FlatMSQIndex``) in three stages:
+(tree-backed ``MSQIndex`` or flat ``FlatMSQIndex``) in four stages
+(DESIGN.md §10):
 
-  1. bucket queries by reduced query region (``core.engine.bucket_queries``)
-     so each region's graphs are gathered once per batch,
-  2. one padded (Q, N) leaf-filter pass per bucket
-     (``core.engine.BatchedFilterEval`` — jax / numpy / pallas backends),
-  3. a shared verification worklist drained cheapest-candidate-first
-     through ``ged_upto`` (low filter bounds are both likelier matches and
-     cheaper A* runs, so early results stream out first).
+  1. **bucket** queries by reduced query region
+     (``core.engine.bucket_queries``) so each region's graphs are gathered
+     once per batch,
+  2. **shard** each bucket's slab: single-host backends gather it into one
+     padded block; ``ShardedGraphQueryEngine`` block-partitions it over
+     the mesh and replicates the padded query block,
+  3. **filter**: the leaf-level cascade per bucket
+     (``core.engine.BatchedFilterEval`` — jax / numpy / pallas backends on
+     one host; the ``distributed`` backend runs it inside shard_map per
+     device and all-gathers fixed-size top-k candidate blocks),
+  4. **worklist**: candidate blocks from all queries drain into one shared
+     verification worklist, cheapest-candidate-first through ``ged_upto``
+     (low filter bounds are both likelier matches and cheaper A* runs, so
+     early results stream out first).
 
 Repeat queries hit two LRU caches: query *encodings* (the q-gram
 ``QueryTuple``, reusable across taus) and whole *results* (exact
@@ -95,6 +103,15 @@ class GraphQueryEngine:
             self._enc_cache.put(key, qt)
         return key, qt
 
+    # ---- candidate generation hook (overridden by the sharded engine) ------
+    def _batched_candidates(self, graphs, taus, qtuples):
+        kwargs = {"qtuples": qtuples}
+        params = inspect.signature(
+            self.source.batched_candidates).parameters
+        if "backend" in params:     # tree sources take no backend
+            kwargs["backend"] = self.backend
+        return self.source.batched_candidates(graphs, taus, **kwargs)
+
     # ---- the batched path --------------------------------------------------
     def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
         """Answer a batch; results align with ``requests`` order."""
@@ -127,18 +144,14 @@ class GraphQueryEngine:
         graphs = [requests[i].graph for i in fresh]
         taus = [int(requests[i].tau) for i in fresh]
 
-        # stages 1+2: bucketed, padded filter pass (source-specific)
+        # stages 1-3: bucket, shard the slab, filter (source-specific)
         t0 = time.perf_counter()
-        kwargs = {"qtuples": [qtuples[i] for i in fresh]}
-        params = inspect.signature(
-            self.source.batched_candidates).parameters
-        if "backend" in params:     # tree sources take no backend
-            kwargs["backend"] = self.backend
-        batch = self.source.batched_candidates(graphs, taus, **kwargs)
+        batch = self._batched_candidates(graphs, taus,
+                                         [qtuples[i] for i in fresh])
         t1 = time.perf_counter()
         self.stats["filter_s"] += t1 - t0
 
-        # stage 3: shared verification worklist, cheapest candidate first
+        # stage 4: shared verification worklist, cheapest candidate first
         matches: List[List[Tuple[int, int]]] = [[] for _ in fresh]
         verify_s = [0.0] * len(fresh)
         work: List[Tuple[int, int, int]] = []      # (bound, row, gid)
@@ -191,3 +204,60 @@ class GraphQueryEngine:
                 "encoding_misses": self._enc_cache.misses,
                 "result_hits": self._res_cache.hits,
                 "result_misses": self._res_cache.misses}
+
+
+class ShardedGraphQueryEngine(GraphQueryEngine):
+    """GraphQueryEngine whose filter stage runs over a device mesh.
+
+    Each bucket's region slab of ``DBArrays`` is block-partitioned over
+    the mesh's batch axes (('pod', 'data') on the production meshes), the
+    padded query block is replicated, every device runs the full leaf
+    cascade inside shard_map, and fixed-size per-device top-k candidate
+    blocks are all-gathered into the shared cheapest-first GED worklist
+    (stage 4 is unchanged — the blocks drain through ``submit``'s
+    worklist exactly like single-host candidates).
+
+    ``layout`` picks the DESIGN.md §5 layout: ``'graph'`` (default; every
+    mesh axis shards graphs) or ``'vocab'`` (graphs over ('pod', 'data'),
+    the dense F_D vocabulary dim over 'model' with a psum'd partial
+    min-sum — the fit for very wide PubChem-scale vocabularies).
+    Candidate sets are bit-identical to the single-host engine
+    (``tests/test_sharded_engine.py``): block truncation is recall-safe
+    because overflowing blocks fall back to exact per-device ids.
+    """
+
+    def __init__(self, source: CandidateSource, mesh, layout: str = "graph",
+                 k: int = 256, shard_pad: int = 512, **kw):
+        for attr in ("enc", "set_filter_eval"):
+            if not hasattr(source, attr):
+                raise TypeError(
+                    "ShardedGraphQueryEngine needs a flat-style source "
+                    "(FlatMSQIndex); tree sources have no slab arrays")
+        super().__init__(source, backend="distributed", **kw)
+        from repro.core.engine import BatchedFilterEval
+        self.mesh = mesh
+        self.layout = layout
+        self.evaluator = BatchedFilterEval(
+            source.db, source.enc, source.partition, backend="distributed",
+            mesh=mesh, layout=layout, k=k, shard_pad=shard_pad)
+        # also visible to plain GraphQueryEngine(source, "distributed") users
+        source.set_filter_eval("distributed", self.evaluator)
+
+    @classmethod
+    def from_config(cls, source: CandidateSource, mesh, cfg,
+                    **kw) -> "ShardedGraphQueryEngine":
+        """Layout/top-k from an MSQConfig (msq_pubchem defaults to the
+        vocab-sharded layout for its wide q-gram vocabulary)."""
+        return cls(source, mesh,
+                   layout=getattr(cfg, "sharded_layout", "graph"),
+                   k=int(getattr(cfg, "shard_topk", 256)), **kw)
+
+    def _batched_candidates(self, graphs, taus, qtuples):
+        from repro.core.engine import batched_flat_candidates
+        return batched_flat_candidates(self.evaluator, graphs, taus, qtuples)
+
+    @property
+    def shard_stats(self) -> Dict[str, int]:
+        """Candidate-block accounting (overflow_blocks counts recall-safe
+        exact-id fallbacks, not drops)."""
+        return dict(self.evaluator.dist_stats)

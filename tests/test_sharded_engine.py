@@ -1,0 +1,140 @@
+"""Single-host vs sharded GraphQueryEngine parity (multi-device CPU mesh).
+
+The acceptance invariant of the distributed serving path: on a >= 2-device
+mesh, in BOTH layouts (graph-sharded and vocab-sharded), the
+``ShardedGraphQueryEngine``'s candidate ids and final ``QueryResult``s are
+IDENTICAL to the single-host engine for mixed-tau batches — including
+buckets whose fixed-size candidate blocks overflow (the recall-safe exact
+fallback, never a silent drop).
+
+The main test process must keep seeing 1 device (the dry-run owns the
+512-device override), so each scenario runs as a child python with
+XLA_FLAGS=--xla_force_host_platform_device_count set in its environment,
+same pattern as tests/test_distributed_subprocess.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_sharded_engine_parity_both_layouts():
+    """Mixed-tau batch (some verified): candidates, matches and n_filtered
+    match the single-host engine in graph- and vocab-sharded layouts."""
+    run_child("""
+    import numpy as np
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = aids_like_db(150, seed=11)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i in range(10):
+        tau = int(rng.integers(1, 5))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=(i % 3 == 0)))
+    ref = single.submit(reqs)
+
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
+    for layout in ("graph", "vocab"):
+        eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh, layout=layout,
+                                      k=64, shard_pad=64)
+        out = eng.submit(reqs)
+        for a, b in zip(out, ref):
+            assert a.candidates == b.candidates, layout
+            assert a.matches == b.matches, layout
+            assert a.n_filtered == b.n_filtered, layout
+    print("OK")
+    """)
+
+
+def test_sharded_engine_overflow_falls_back_exactly():
+    """k=1 forces per-device candidate-block overflow; the exact fallback
+    must keep candidate sets bit-identical (and must actually trigger)."""
+    run_child("""
+    import numpy as np
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = aids_like_db(300, seed=11)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(2)
+    reqs = []
+    for _ in range(8):
+        tau = int(rng.integers(4, 7))       # wide taus -> crowded buckets
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], 2, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=False))
+    ref = single.submit(reqs)
+    assert max(len(r.candidates) for r in ref) > 1   # something to overflow
+
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
+    for layout in ("graph", "vocab"):
+        eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh, layout=layout,
+                                      k=1, shard_pad=64)
+        out = eng.submit(reqs)
+        for a, b in zip(out, ref):
+            assert a.candidates == b.candidates, layout
+        assert eng.shard_stats["overflow_blocks"] > 0, layout
+    print("OK")
+    """)
+
+
+def test_sharded_engine_two_device_mesh_and_config():
+    """Minimum mesh (2 devices, 'data' only) + layout selection from the
+    MSQConfig (msq_pubchem -> vocab-sharded needs a model axis, so the
+    2-device case exercises the graph-sharded config default)."""
+    run_child("""
+    import numpy as np
+    from repro.configs.msq_aids import get_config as aids_cfg
+    from repro.configs.msq_pubchem import get_config as pubchem_cfg
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    assert aids_cfg().sharded_layout == "graph"
+    assert pubchem_cfg().sharded_layout == "vocab"
+
+    db = aids_like_db(120, seed=5)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(7)
+    reqs = []
+    for _ in range(6):
+        tau = int(rng.integers(1, 4))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=True))
+    ref = single.submit(reqs)
+
+    mesh = jc.make_mesh((2,), ("data",))
+    eng = ShardedGraphQueryEngine.from_config(FlatMSQIndex(db), mesh,
+                                              aids_cfg(), shard_pad=64)
+    out = eng.submit(reqs)
+    for a, b in zip(out, ref):
+        assert a.candidates == b.candidates
+        assert a.matches == b.matches
+    print("OK")
+    """, devices=2)
