@@ -1,6 +1,11 @@
 """Table 3 + Figure 7: index storage (T_Q vs T_SQ decomposed into
 S_a/S_b/S_c), construction time, and the size-vs-|G| sweep against the
-C-Star / Branch(Mixed) / path-q-gram baselines."""
+C-Star / Branch(Mixed) / path-q-gram baselines.
+
+Also measures the *serving* formats: bits-per-graph of the F_D carrier
+for each FilterSlab layout (dense vs hot vs packed, DESIGN.md §11) — the
+space-reduction claim on the form the filter pass actually runs against,
+not just the archival trees."""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -8,6 +13,23 @@ from typing import Dict, List
 from benchmarks.common import Csv, dataset, save_json, timer
 from repro.core import baselines
 from repro.core.search import MSQIndex
+from repro.core.slab import FilterSlab
+
+
+def serving_slab_sizes(idx: MSQIndex, hot_d: int = 128) -> Dict:
+    """Bits-per-graph of the three serving slab layouts over one DB."""
+    out: Dict[str, Dict] = {}
+    for layout in ("dense", "hot", "packed"):
+        slab = FilterSlab.build(idx.db, idx.enc, idx.partition,
+                                layout=layout, hot_d=hot_d)
+        bits = slab.size_bits()
+        out[layout] = {"bits_per_graph": round(slab.bits_per_graph(), 1),
+                       "parts_bits": bits}
+    dense_bpg = out["dense"]["bits_per_graph"]
+    for layout in ("hot", "packed"):
+        out[layout]["vs_dense"] = round(
+            out[layout]["bits_per_graph"] / max(dense_bpg, 1e-9), 4)
+    return out
 
 
 def run(csv: Csv, sizes: Dict[str, int], sweep: List[int] = ()) -> Dict:
@@ -32,11 +54,17 @@ def run(csv: Csv, sizes: Dict[str, int], sweep: List[int] = ()) -> Dict:
                 "path_gsimjoin": round(baselines.path_index_bits(db) * mb, 4),
             },
         }
+        rec["serving_slab"] = serving_slab_sizes(idx)
         out[kind] = rec
         csv.add(f"table3/{kind}/tsq_total_MB", build_s, rec["T_SQ_MB"]["total"])
         csv.add(f"table3/{kind}/space_reduction", 0.0, rec["reduction"])
         csv.add(f"table3/{kind}/vs_branch_ratio", 0.0,
                 round(sq["total"] * mb / rec["baseline_MB"]["branch_mixed"], 4))
+        for layout, s in rec["serving_slab"].items():
+            csv.add(f"table3/{kind}/slab_{layout}_bits_per_graph", 0.0,
+                    s["bits_per_graph"])
+        csv.add(f"table3/{kind}/slab_packed_vs_dense", 0.0,
+                rec["serving_slab"]["packed"]["vs_dense"])
     if sweep:
         rows = []
         for n in sweep:
@@ -55,9 +83,11 @@ def run(csv: Csv, sizes: Dict[str, int], sweep: List[int] = ()) -> Dict:
 
 
 def main() -> None:
+    from benchmarks.common import art_path
     csv = Csv()
     run(csv, {"aids": 3000, "s100k": 2000, "pubchem": 3000},
         sweep=[500, 1000, 2000, 4000])
+    csv.dump(art_path("table3_index_size.csv"))
 
 
 if __name__ == "__main__":

@@ -6,13 +6,20 @@ graph DB answers at >= 2x the queries/sec of looping ``FlatMSQIndex.query``
 
     PYTHONPATH=src python -m benchmarks.query_throughput [--n 5000] [--q 64]
 
+``--layout {dense,hot,packed,all}`` picks the serving FilterSlab layout
+(DESIGN.md §11); ``all`` measures every layout with identical-candidate
+assertions and records the space/speed comparison (bits-per-graph of the
+resident F_D carrier vs q/s) to
+``artifacts/bench/query_throughput_layouts.{csv,json}``.
+
 ``--sharded`` additionally runs the ``ShardedGraphQueryEngine`` on a
 simulated multi-device CPU mesh (``--devices``, default 8) in both the
-graph- and vocab-sharded layouts, asserts candidate parity against the
-single-host engine, and records single-host vs sharded numbers to
-``artifacts/bench/query_throughput_sharded.{csv,json}`` (same schema).
-On fake CPU devices this measures the orchestration overhead floor, not a
-speedup — the per-device win needs real accelerators (DESIGN.md §10).
+graph- and vocab-sharded layouts (``--sharded-layout``), asserts candidate
+parity against the single-host engine, and records single-host vs sharded
+numbers to ``artifacts/bench/query_throughput_sharded.{csv,json}`` (same
+schema).  On fake CPU devices this measures the orchestration overhead
+floor, not a speedup — the per-device win needs real accelerators
+(DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -36,7 +43,8 @@ def make_queries(db, num: int, seed: int = 1):
 
 
 def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
-        backend: str = "auto", repeats: int = 3) -> Dict:
+        backend: str = "auto", repeats: int = 3,
+        slab: str = "dense", hot_d: int = 128) -> Dict:
     from repro.core.search import FlatMSQIndex
     from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
 
@@ -53,8 +61,9 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     t_loop = time.perf_counter() - t0
 
     # result_cache_size=0: every timed submit does the real filter work
-    engine = GraphQueryEngine(flat, backend=backend, result_cache_size=0)
-    engine.submit(reqs)                      # warm: builds DBArrays, jits
+    engine = GraphQueryEngine(flat, backend=backend, result_cache_size=0,
+                              slab_layout=slab, hot_d=hot_d)
+    engine.submit(reqs)                      # warm: builds the slab, jits
     t_batch = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -65,26 +74,31 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     for got, want in zip(out, base):
         assert got.candidates == want, "candidate sets diverged"
 
+    slab_bits = flat.filter_eval(engine.backend, slab=slab,
+                                 hot_d=hot_d).slab.bits_per_graph()
     qps_loop = n_queries / t_loop
     qps_eng = n_queries / t_eng
     speedup = qps_eng / qps_loop
     csv.add(f"throughput_loop_n{n_db}_q{n_queries}", t_loop / n_queries,
             f"{qps_loop:.1f} q/s")
-    csv.add(f"throughput_batched_{engine.backend}_n{n_db}_q{n_queries}",
+    csv.add(f"throughput_batched_{engine.backend}_{slab}_n{n_db}"
+            f"_q{n_queries}",
             t_eng / n_queries, f"{qps_eng:.1f} q/s ({speedup:.1f}x)")
     rec = {"n_db": n_db, "n_queries": n_queries,
-           "backend": engine.backend,
+           "backend": engine.backend, "slab": slab,
+           "slab_bits_per_graph": slab_bits,
            "qps_loop": qps_loop, "qps_batched": qps_eng,
            "speedup": speedup, "identical_candidates": True}
-    print(f"batched engine [{engine.backend}]: {qps_eng:.1f} q/s vs "
+    print(f"batched engine [{engine.backend}/{slab}]: {qps_eng:.1f} q/s vs "
           f"looped {qps_loop:.1f} q/s -> {speedup:.2f}x "
-          f"(identical candidate sets)")
+          f"({slab_bits:.0f} slab bits/graph, identical candidate sets)")
     return rec
 
 
 def run_sharded(csv: Csv, n_db: int = 5000, n_queries: int = 64,
                 layout: str = "graph", model_parallel: int = 1,
-                repeats: int = 3) -> Dict:
+                repeats: int = 3, slab: str = "dense",
+                hot_d: int = 128) -> Dict:
     """Single-host (numpy) vs sharded engine on the host's device mesh;
     identical candidates asserted, both rates recorded."""
     from repro.core.search import FlatMSQIndex
@@ -105,7 +119,7 @@ def run_sharded(csv: Csv, n_db: int = 5000, n_queries: int = 64,
                               result_cache_size=0)
     sharded = ShardedGraphQueryEngine(
         FlatMSQIndex(db), make_serving_mesh(model_parallel), layout=layout,
-        result_cache_size=0)
+        slab_layout=slab, hot_d=hot_d, result_cache_size=0)
     qps_single = rate(single)
     qps_sharded = rate(sharded)
     ref = single.submit(reqs)
@@ -118,14 +132,16 @@ def run_sharded(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     speedup = qps_sharded / qps_single
     csv.add(f"throughput_single_host_n{n_db}_q{n_queries}",
             1.0 / qps_single, f"{qps_single:.1f} q/s")
-    csv.add(f"throughput_sharded_{layout}_d{devices}_n{n_db}_q{n_queries}",
+    csv.add(f"throughput_sharded_{layout}_{slab}_d{devices}_n{n_db}"
+            f"_q{n_queries}",
             1.0 / qps_sharded, f"{qps_sharded:.1f} q/s ({speedup:.2f}x)")
     rec = {"n_db": n_db, "n_queries": n_queries, "devices": devices,
-           "layout": layout, "model_parallel": model_parallel,
+           "layout": layout, "slab": slab,
+           "model_parallel": model_parallel,
            "qps_single_host": qps_single, "qps_sharded": qps_sharded,
            "speedup": speedup, "identical_candidates": True,
            "shard_stats": sharded.shard_stats}
-    print(f"sharded engine [{layout}, {devices} devices]: "
+    print(f"sharded engine [{layout}/{slab}, {devices} devices]: "
           f"{qps_sharded:.1f} q/s vs single-host {qps_single:.1f} q/s "
           f"-> {speedup:.2f}x (identical candidate sets)")
     return rec
@@ -143,11 +159,18 @@ def main() -> None:
     ap.add_argument("--q", type=int, default=64)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "numpy", "jax", "pallas"])
+    ap.add_argument("--layout", default="dense",
+                    choices=["dense", "hot", "packed", "all"],
+                    help="serving FilterSlab layout (DESIGN.md §11); "
+                         "'all' measures every layout and records the "
+                         "space/speed comparison")
+    ap.add_argument("--hot-d", type=int, default=128,
+                    help="hot-prefix width of the 'hot' slab layout")
     ap.add_argument("--sharded", action="store_true",
                     help="also measure ShardedGraphQueryEngine on a "
-                         "multi-device CPU mesh (both layouts)")
+                         "multi-device CPU mesh (both sharding layouts)")
     ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--layout", default="both",
+    ap.add_argument("--sharded-layout", default="both",
                     choices=["both", "graph", "vocab"])
     args = ap.parse_args()
     if args.sharded:
@@ -160,14 +183,28 @@ def main() -> None:
         if "xla_force_host_platform_device_count" not in have:
             os.environ["XLA_FLAGS"] = f"{have} {flag}".strip()
     csv = Csv()
-    rec = run(csv, n_db=args.n, n_queries=args.q, backend=args.backend)
-    save_json("query_throughput.json", rec)
+    slabs = (["dense", "hot", "packed"] if args.layout == "all"
+             else [args.layout])
+    recs = [run(csv, n_db=args.n, n_queries=args.q, backend=args.backend,
+                slab=s, hot_d=args.hot_d) for s in slabs]
+    save_json("query_throughput.json", recs[0])
     csv.dump(art_path("query_throughput.csv"))
+    if len(recs) > 1:
+        # the space/speed trade-off on the serving format, one row per
+        # layout (bits-per-graph of the resident F_D carrier vs q/s)
+        save_json("query_throughput_layouts.json", recs)
+        lcsv = Csv()
+        for r in recs:
+            lcsv.add(f"layout_{r['slab']}_n{args.n}_q{args.q}",
+                     1.0 / r["qps_batched"],
+                     f"{r['qps_batched']:.1f} q/s @ "
+                     f"{r['slab_bits_per_graph']:.0f} bits/graph")
+        lcsv.dump(art_path("query_throughput_layouts.csv"))
     if args.sharded:
         layouts = {"both": ["graph", "vocab"], "graph": ["graph"],
-                   "vocab": ["vocab"]}[args.layout]
+                   "vocab": ["vocab"]}[args.sharded_layout]
         sharded_csv = Csv()
-        recs = []
+        srecs = []
         for lay in layouts:
             # vocab sharding needs a 'model' axis of >= 2 devices
             mp = max(args.devices // 2, 2) if lay == "vocab" else 1
@@ -175,10 +212,20 @@ def main() -> None:
                 print(f"skipping vocab layout: {args.devices} devices "
                       f"don't split into a (data, model={mp}) mesh")
                 continue
-            recs.append(run_sharded(sharded_csv, n_db=args.n,
-                                    n_queries=args.q, layout=lay,
-                                    model_parallel=mp))
-        save_json("query_throughput_sharded.json", recs)
+            if len(slabs) > 1:
+                print(f"sharded section measures slab {slabs[0]!r} only "
+                      f"(one slab per --sharded run)")
+            slab = slabs[0]
+            if lay == "vocab" and slab == "packed":
+                # packed has no vocab dim to shard over 'model'
+                print("vocab sharding cannot split the packed slab; "
+                      "measuring dense instead for this layout")
+                slab = "dense"
+            srecs.append(run_sharded(sharded_csv, n_db=args.n,
+                                     n_queries=args.q, layout=lay,
+                                     model_parallel=mp, slab=slab,
+                                     hot_d=args.hot_d))
+        save_json("query_throughput_sharded.json", srecs)
         sharded_csv.dump(art_path("query_throughput_sharded.csv"))
 
 

@@ -77,19 +77,24 @@ def batched_engine(db, flat, mesh) -> None:
     single = GraphQueryEngine(flat, backend="numpy")
     ref = single.submit(reqs)
 
-    for layout in ("graph", "vocab"):
-        db_sh, _, _ = serving_specs(mesh, layout)
-        print(f"layout {layout!r}: F_D sharded {db_sh.fd.spec}")
+    # sharding layout x FilterSlab layout (DESIGN.md §11); packed slabs
+    # have no vocab dim to split over 'model', so they stay graph-sharded
+    for layout, slab in (("graph", "dense"), ("vocab", "dense"),
+                         ("vocab", "hot"), ("graph", "packed")):
+        db_sh, _, _, extra_sh = serving_specs(mesh, layout, slab=slab)
+        print(f"layout {layout!r}/{slab!r}: F_D sharded {db_sh.fd.spec}, "
+              f"{len(jax.tree.leaves(extra_sh))} slab extras")
         eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh, layout=layout,
+                                      slab_layout=slab, hot_d=32,
                                       result_cache_size=0)
         eng.submit(reqs)                       # warm (compiles per shape)
         t0 = time.perf_counter()
         out = eng.submit(reqs)
         dt = time.perf_counter() - t0
         ok = all(a.candidates == b.candidates for a, b in zip(out, ref))
-        print(f"engine [{layout:5s}]: {len(reqs)} queries in {dt * 1e3:.1f} "
-              f"ms ({len(reqs) / dt:.0f} q/s); identical to single-host: "
-              f"{ok}; blocks={eng.shard_stats}")
+        print(f"engine [{layout:5s}/{slab:6s}]: {len(reqs)} queries in "
+              f"{dt * 1e3:.1f} ms ({len(reqs) / dt:.0f} q/s); identical to "
+              f"single-host: {ok}; blocks={eng.shard_stats}")
 
 
 def main() -> None:

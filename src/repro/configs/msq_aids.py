@@ -28,6 +28,13 @@ class MSQConfig:
     # performance knob, not a recall knob).
     sharded_layout: str = "graph"
     shard_topk: int = 256
+    # serving FilterSlab layout (DESIGN.md §11): 'dense' keeps the full
+    # (B, U) F_D matrix resident, 'hot' keeps only the first hot_d
+    # frequency-ordered columns dense (CSR tail corrected per batch),
+    # 'packed' keeps the hybrid bit-packed rows and decodes on device.
+    # Candidate sets are bit-identical across all three.
+    slab_layout: str = "dense"
+    hot_d: int = 128
 
 
 def get_config() -> MSQConfig:

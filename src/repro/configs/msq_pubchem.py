@@ -7,7 +7,10 @@ from repro.configs.msq_aids import MSQConfig
 def get_config() -> MSQConfig:
     # vocab-sharded serving: PubChem's 101 vertex labels produce a degree
     # q-gram vocabulary wide enough that replicating dense F_D per device
-    # wastes HBM — split it over 'model' instead (DESIGN.md §5/§10).
+    # wastes HBM — split it over 'model' instead (DESIGN.md §5/§10), and
+    # keep only the hot prefix of the frequency-ordered vocabulary
+    # resident (the 'hot' FilterSlab, DESIGN.md §11; the CSR tail is
+    # corrected per batch on host).
     return MSQConfig(name="msq_pubchem", num_graphs=500_000,
                      generator="aids_like", n_vlabels=101, n_elabels=3,
-                     seed=7, sharded_layout="vocab")
+                     seed=7, sharded_layout="vocab", slab_layout="hot")

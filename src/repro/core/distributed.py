@@ -24,6 +24,12 @@ Two entry points share the layouts:
   of a bucket against its slab shard and emits per-query fixed-size
   candidate blocks plus the true per-shard pass count, so the host can
   detect block overflow and fall back to exact per-device ids.
+
+The multi-search step is FilterSlab-aware (DESIGN.md §11): the sharded
+F_D carrier is the dense matrix, the hot prefix (with the batched CSR
+tail correction row-sharded alongside and added to C_D after the psum),
+or the hybrid bit-packed words rows (decoded per device inside
+shard_map; graph-sharded only).
 """
 from __future__ import annotations
 
@@ -40,12 +46,19 @@ from repro.core import jax_compat as jc
 
 
 def _device_bounds(db: fj.DBArrays, q: fj.QueryArrays, x0: int, y0: int,
-                   l: int, model_axis: Optional[str]) -> Tuple[jax.Array, jax.Array]:
-    """Per-shard filter cascade; psums partial C_D over the model axis."""
-    if model_axis is not None:
-        # fd is vocab-sharded: partial min-sum then psum.
-        c_d_partial = fj.min_sum(db.fd, q.fd[None, :]).astype(jnp.int32)
-        c_d = jax.lax.psum(c_d_partial, model_axis)
+                   l: int, model_axis: Optional[str],
+                   cd_extra: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard filter cascade; psums partial C_D over the model axis and
+    adds ``cd_extra`` (the hot slab's CSR tail correction) afterwards, so
+    the correction lands exactly once per C_D."""
+    if model_axis is not None or cd_extra is not None:
+        c_d = fj.min_sum(db.fd, q.fd[None, :]).astype(jnp.int32)
+        if model_axis is not None:
+            # fd is vocab-sharded: partial min-sum then psum.
+            c_d = jax.lax.psum(c_d, model_axis)
+        if cd_extra is not None:
+            c_d = c_d + cd_extra.astype(jnp.int32)
     else:
         c_d = None
     return fj.filter_pass(db, q, x0, y0, l, c_d=c_d)
@@ -68,20 +81,30 @@ def layout_axes(mesh: Mesh, layout: str) -> Tuple[Tuple[str, ...], Optional[str]
     raise ValueError(f"unknown layout {layout!r} (graph | vocab)")
 
 
-def multi_search_specs(batch_axes: Sequence[str], model_axis: Optional[str]
-                       ) -> Tuple[fj.DBArrays, fj.QueryArrays, Tuple]:
+def multi_search_specs(batch_axes: Sequence[str], model_axis: Optional[str],
+                       slab: str = "dense"
+                       ) -> Tuple[fj.DBArrays, fj.QueryArrays, Tuple, Tuple]:
     """PartitionSpecs for the multi-query step: DB slab shards, the
-    replicated stacked (Q, ...) query block, and the per-device candidate
-    blocks (ids, bounds, pass counts)."""
+    replicated stacked (Q, ...) query block, the per-device candidate
+    blocks (ids, bounds, pass counts), and the slab layout's extra
+    operands (DESIGN.md §11) — ``()`` for dense, the (Q, B) tail
+    correction for ``hot``, the (B, ...) packed words/sb/widths triple
+    for ``packed``.
+    """
     batch_axes = tuple(batch_axes)
     spec_b = P(batch_axes)
     spec_b2 = P(batch_axes, None)
     if model_axis is not None:
+        if slab == "packed":
+            raise ValueError("packed slab has no vocab dim to shard over "
+                             "'model'; use the hot or dense slab")
         spec_fd = P(batch_axes, model_axis)
         spec_qfd = P(None, model_axis)
     else:
         spec_fd = spec_b2
         spec_qfd = P(None, None)
+    if slab == "packed":
+        spec_fd = spec_b2                 # (B, 1) placeholder rides along
     db_spec = fj.DBArrays(nv=spec_b, ne=spec_b, degseq=spec_b2,
                           vhist=spec_b2, ehist=spec_b2, fd=spec_fd,
                           region_i=spec_b, region_j=spec_b)
@@ -90,16 +113,28 @@ def multi_search_specs(batch_axes: Sequence[str], model_axis: Optional[str]
                             fd=spec_qfd, tau=P(None))
     out_spec = (P(batch_axes, None, None), P(batch_axes, None, None),
                 P(batch_axes, None))
-    return db_spec, q_spec, out_spec
+    if slab == "hot":
+        extra_spec: Tuple = (P(None, batch_axes),)
+    elif slab == "packed":
+        extra_spec = (spec_b2, spec_b2, spec_b2)
+    else:
+        extra_spec = ()
+    return db_spec, q_spec, out_spec, extra_spec
 
 
 def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
                               batch_axes: Sequence[str] = ("data",),
-                              model_axis: Optional[str] = None):
+                              model_axis: Optional[str] = None,
+                              slab: str = "dense",
+                              n_entries: Optional[int] = None):
     """Build the jitted per-bucket step of the sharded engine.
 
-    ``fn(db, qb)`` takes slab-sharded ``DBArrays`` and a replicated stacked
-    query block (every ``QueryArrays`` field with a leading Q axis) and
+    ``fn(db, qb, *extra)`` takes slab-sharded ``DBArrays``, a replicated
+    stacked query block (every ``QueryArrays`` field with a leading Q
+    axis), and the slab layout's extra operands — nothing for ``dense``,
+    the (Q, B) row-sharded CSR tail correction for ``hot``, the packed
+    words/sb/widths rows for ``packed`` (``n_entries`` = decoded F_D
+    width; decoded per device inside shard_map, DESIGN.md §11) — and
     returns, all-gathered over the S batch shards:
 
       slab_ids (S, Q, k) int32 — positions into the *padded slab* of the
@@ -111,9 +146,10 @@ def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
                instead of silently dropping candidates.
     """
     batch_axes = tuple(batch_axes)
-    db_spec, q_spec, out_spec = multi_search_specs(batch_axes, model_axis)
+    db_spec, q_spec, out_spec, extra_spec = multi_search_specs(
+        batch_axes, model_axis, slab)
 
-    def local_step(db: fj.DBArrays, qb: fj.QueryArrays):
+    def _step(db: fj.DBArrays, qb: fj.QueryArrays, cdt):
         shard_b = db.nv.shape[0]
         axis_index = jnp.int32(0)
         stride = 1
@@ -121,8 +157,9 @@ def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
             axis_index = axis_index + jax.lax.axis_index(a) * stride
             stride *= jc.axis_size(mesh, a)
 
-        def one(q: fj.QueryArrays):
-            mask, bounds = _device_bounds(db, q, x0, y0, l, model_axis)
+        def one(q: fj.QueryArrays, t):
+            mask, bounds = _device_bounds(db, q, x0, y0, l, model_axis,
+                                          cd_extra=t)
             ids, bnd, _ = fj.topk_candidates(mask, bounds, k)
             pad = k - ids.shape[0]          # shard smaller than k
             if pad:
@@ -133,12 +170,30 @@ def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
             sids = jnp.where(ids >= 0, ids + axis_index * shard_b, -1)
             return sids, bnd, mask.sum().astype(jnp.int32)
 
-        sids, bnd, n_pass = jax.vmap(one)(qb)
+        if cdt is None:
+            sids, bnd, n_pass = jax.vmap(lambda q: one(q, None))(qb)
+        else:
+            sids, bnd, n_pass = jax.vmap(one)(qb, cdt)
         return sids[None], bnd[None], n_pass[None]
 
-    shmap = jc.shard_map(local_step, mesh=mesh, in_specs=(db_spec, q_spec),
+    if slab == "hot":
+        def local_step(db, qb, cdt):
+            return _step(db, qb, cdt)
+    elif slab == "packed":
+        from repro.kernels.bitunpack.ref import unpack_rows_ref
+
+        def local_step(db, qb, words, sb, widths):
+            # the resident shard is the packed form; decode in-device
+            fd = unpack_rows_ref(words, sb, widths)[:, :n_entries]
+            return _step(db._replace(fd=fd), qb, None)
+    else:
+        def local_step(db, qb):
+            return _step(db, qb, None)
+
+    shmap = jc.shard_map(local_step, mesh=mesh,
+                         in_specs=(db_spec, q_spec) + extra_spec,
                          out_specs=out_spec)
-    return jax.jit(shmap), (db_spec, q_spec), out_spec
+    return jax.jit(shmap), (db_spec, q_spec) + extra_spec, out_spec
 
 
 def make_sharded_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,

@@ -11,12 +11,17 @@ Stage 1 — **bucket** (``bucket_queries``): group requests by their reduced
   against the *identical* set of region graphs, so that set is gathered
   once per batch.
 
-Stage 2 — **shard**: lay the bucket's slab of ``DBArrays`` out for the
-  filter pass.  Single-host backends gather the slab into one padded
-  (Q, N) block; the ``distributed`` backend block-partitions the slab over
-  the mesh's batch axes and replicates the padded query block to every
-  device (graph-sharded), optionally also splitting the dense F_D matrix
-  over the ``'model'`` axis (vocab-sharded) — see DESIGN.md §10.
+Stage 2 — **shard**: lay the bucket's ``FilterSlab`` out for the filter
+  pass.  The slab's F_D carrier is one of three layouts (DESIGN.md §11):
+  ``dense`` (full-vocab matrix), ``hot`` (hot prefix + batched CSR tail
+  correction added to C_D before thresholding), or ``packed`` (hybrid
+  bit-packed rows decoded on device inside the pass).  Single-host
+  backends gather the slab into one padded (Q, N) block; the
+  ``distributed`` backend block-partitions the slab (hot prefixes /
+  packed words instead of dense F_D) over the mesh's batch axes and
+  replicates the padded query block to every device (graph-sharded),
+  optionally also splitting the dense/hot F_D over the ``'model'`` axis
+  (vocab-sharded) — see DESIGN.md §10.
 
 Stage 3 — **filter** (``BatchedFilterEval``): evaluate the full leaf-level
   filter cascade for the whole bucket.  Backends: ``jax`` (jit + vmap over
@@ -44,6 +49,7 @@ from repro.core import arrays, filters
 from repro.core.arrays import DBArrays, QueryArrays
 from repro.core.qgrams import EncodedDB, QGramVocab
 from repro.core.region import RegionPartition
+from repro.core.slab import FilterSlab
 from repro.core.tree import QueryTuple
 from repro.graphs.graph import Graph, GraphDB
 
@@ -53,7 +59,6 @@ Rect = Tuple[int, int, int, int]          # inclusive (i1, i2, j1, j2)
 # number of distinct compiled programs stays small across buckets
 _Q_PAD = 8
 _N_PAD = 512
-_IMPOSSIBLE = -(2 ** 20)
 # per-device candidate-block size of the distributed backend
 _K_DEFAULT = 256
 
@@ -109,14 +114,40 @@ def resolve_backend() -> str:
 
 
 @functools.lru_cache(maxsize=None)
-def _bounds_multi_jit():
-    """jit'd (Q, N) filter pass: vmap of the single-query cascade."""
+def _bounds_multi_jit(layout: str = "dense"):
+    """jit'd (Q, N) filter pass per slab layout: vmap of the single-query
+    cascade, with the layout's C_D construction fused in (DESIGN.md §11)."""
     import jax
+    import jax.numpy as jnp
 
     from repro.core import filters_jax as fj
 
-    def multi(db: DBArrays, qb: QueryArrays) -> "jax.Array":
-        return jax.vmap(lambda q: fj.batched_bounds(db, q))(qb)
+    if layout == "dense":
+        def multi(db: DBArrays, qb: QueryArrays) -> "jax.Array":
+            return jax.vmap(lambda q: fj.batched_bounds(db, q))(qb)
+    elif layout == "hot":
+        # db.fd is the (N, H) hot prefix, qb.fd the (Q, H) hot slice, and
+        # cdt the host-computed (Q, N) CSR tail correction — added to C_D
+        # before thresholding so the bound stays admissible (DESIGN.md §3)
+        def multi(db: DBArrays, qb: QueryArrays, cdt) -> "jax.Array":
+            def one(q, t):
+                c_d = fj.min_sum(db.fd, q.fd[None, :]).astype(jnp.int32) + t
+                return fj.batched_bounds(db, q, c_d=c_d)
+            return jax.vmap(one)(qb, cdt)
+    elif layout == "packed":
+        # the resident slab is the packed form; decode on device, then the
+        # usual cascade.  db.fd is a (N, 1) placeholder — C_D is supplied.
+        def multi(words, sb, widths, db: DBArrays,
+                  qb: QueryArrays) -> "jax.Array":
+            from repro.kernels.bitunpack.ref import unpack_rows_ref
+            fd = unpack_rows_ref(words, sb, widths)[:, :qb.fd.shape[1]]
+
+            def one(q):
+                c_d = fj.min_sum(fd, q.fd[None, :]).astype(jnp.int32)
+                return fj.batched_bounds(db, q, c_d=c_d)
+            return jax.vmap(one)(qb)
+    else:
+        raise ValueError(f"unknown slab layout {layout!r}")
 
     return jax.jit(multi)
 
@@ -124,21 +155,27 @@ def _bounds_multi_jit():
 class BatchedFilterEval:
     """Stages 2+3: slab layout plus the leaf-level filter pass per bucket.
 
-    Holds the database-side arrays (built once, reused across batches) and
-    evaluates the combined admissible bound for every (query, graph) pair
-    of a bucket.  Inputs are bit-identical to what ``FlatMSQIndex`` feeds
-    ``filters.batched_bounds_np``, so candidate sets match exactly.
+    Holds the database-side ``FilterSlab`` (built once in the configured
+    layout, reused across batches) and evaluates the combined admissible
+    bound for every (query, graph) pair of a bucket.  Inputs are
+    bit-identical to what ``FlatMSQIndex`` feeds
+    ``filters.batched_bounds_np``, so candidate sets match exactly across
+    every ``slab`` layout ('dense' | 'hot' | 'packed', DESIGN.md §11) and
+    every backend.
 
     The ``distributed`` backend additionally needs a ``mesh``; it shards
     each bucket slab over the mesh (``layout``: 'graph' | 'vocab', see
     DESIGN.md §10) and drains fixed-size per-device top-k candidate blocks
     of size ``k`` instead of materialising the full (Q, N) bounds matrix.
+    The vocab-sharded layout splits the dense or hot F_D over ``'model'``;
+    the packed slab shards its words rows like any graph-sharded array.
     """
 
     def __init__(self, db: GraphDB, enc: EncodedDB,
                  partition: RegionPartition, backend: str = "auto", *,
                  mesh=None, layout: str = "graph", k: int = _K_DEFAULT,
-                 shard_pad: int = _N_PAD):
+                 shard_pad: int = _N_PAD, slab: str = "dense",
+                 hot_d: Optional[int] = None):
         if backend == "auto":
             backend = resolve_backend()
         if backend not in ("jax", "numpy", "pallas", "distributed"):
@@ -148,20 +185,10 @@ class BatchedFilterEval:
         self.backend = backend
         self.vocab = enc.vocab
         self.partition = partition
-        from repro.graphs.batching import PaddedGraphBatch
-        nv, ne = db.sizes()
-        self.vmax = int(max(nv.max(), 1)) if len(nv) else 1
-        batch = PaddedGraphBatch.from_db(db, vmax=self.vmax)
-        U = max(self.vocab.n_degree_ids, 1)
-        fd, _ = enc.dense_hot(U)
-        ri, rj = partition.region_of(nv, ne)
-        self.arrays = DBArrays(
-            nv=batch.nv.astype(np.int32), ne=batch.ne.astype(np.int32),
-            degseq=batch.degseq.astype(np.int32),
-            vhist=batch.vlabel_hist.astype(np.int32),
-            ehist=batch.elabel_hist.astype(np.int32),
-            fd=fd.astype(np.int32),
-            region_i=ri.astype(np.int32), region_j=rj.astype(np.int32))
+        self.slab = FilterSlab.build(db, enc, partition, layout=slab,
+                                     hot_d=hot_d)
+        self.slab_layout = self.slab.layout
+        self.vmax = self.slab.vmax
         if backend == "distributed":
             self._init_distributed(mesh, layout, k, shard_pad)
 
@@ -174,6 +201,10 @@ class BatchedFilterEval:
         self.k = int(k)
         self.shard_pad = int(shard_pad)
         batch_axes, model_axis = dist.layout_axes(mesh, layout)
+        if model_axis is not None and self.slab_layout == "packed":
+            raise ValueError(
+                "the packed slab cannot split its vocabulary over 'model'; "
+                "use the hot or dense slab with the vocab-sharded layout")
         self._batch_axes = batch_axes
         self._model_axis = model_axis
         self.n_shards = int(np.prod([mesh.shape[a] for a in batch_axes]))
@@ -181,7 +212,8 @@ class BatchedFilterEval:
                             else int(mesh.shape[model_axis]))
         self._dist_fn, _, _ = dist.make_sharded_multi_search(
             mesh, self.partition.x0, self.partition.y0, self.partition.l,
-            self.k, batch_axes=batch_axes, model_axis=model_axis)
+            self.k, batch_axes=batch_axes, model_axis=model_axis,
+            slab=self.slab_layout, n_entries=self.slab.U)
         self.dist_stats: Dict[str, int] = {"blocks": 0, "overflow_blocks": 0}
 
     # ---- query-side arrays ------------------------------------------------
@@ -197,10 +229,7 @@ class BatchedFilterEval:
                              for f in QueryArrays._fields])
 
     def graphs_in_rect(self, rect: Rect) -> np.ndarray:
-        i1, i2, j1, j2 = rect
-        m = ((self.arrays.region_i >= i1) & (self.arrays.region_i <= i2)
-             & (self.arrays.region_j >= j1) & (self.arrays.region_j <= j2))
-        return np.flatnonzero(m)
+        return self.slab.in_rect(rect)
 
     # ---- the (Q, N) pass --------------------------------------------------
     def bounds(self, idx: np.ndarray,
@@ -238,25 +267,6 @@ class BatchedFilterEval:
                         np.asarray(bounds[row][keep])))
         return out
 
-    def _gather(self, idx: np.ndarray, n_pad: int) -> DBArrays:
-        a = self.arrays
-        pad = n_pad - len(idx)
-
-        def take(x, fill=0):
-            sub = np.asarray(x)[idx]
-            if pad:
-                widths = [(0, pad)] + [(0, 0)] * (sub.ndim - 1)
-                sub = np.pad(sub, widths, constant_values=fill)
-            return sub
-
-        # pad rows are sliced off after the pass; values don't matter as
-        # long as the arithmetic stays in int32 range
-        return DBArrays(nv=take(a.nv), ne=take(a.ne),
-                        degseq=take(a.degseq), vhist=take(a.vhist),
-                        ehist=take(a.ehist), fd=take(a.fd),
-                        region_i=take(a.region_i, _IMPOSSIBLE),
-                        region_j=take(a.region_j, _IMPOSSIBLE))
-
     def _bounds_jax(self, idx: np.ndarray,
                     qs: Sequence[QueryArrays]) -> np.ndarray:
         import jax.numpy as jnp
@@ -264,20 +274,35 @@ class BatchedFilterEval:
         Q, N = len(qs), len(idx)
         qp = _pad_to(Q, _Q_PAD)
         np_ = _pad_to(N, _N_PAD)
-        db = self._gather(idx, np_)
+        sub = self.slab.gather(idx, np_)
         qs = list(qs) + [qs[-1]] * (qp - Q)          # pad with a repeat
         qb = self.stack_queries(qs)
-        out = _bounds_multi_jit()(
-            DBArrays(*[jnp.asarray(x) for x in db]),
-            QueryArrays(*[jnp.asarray(x) for x in qb]))
+        db = DBArrays(*[jnp.asarray(x) for x in sub.base_arrays()])
+        lay = self.slab_layout
+        if lay == "hot":
+            cdt = sub.tail_minsum_batch(qb.fd).astype(np.int32)
+            qb = qb._replace(fd=qb.fd[:, :sub.hot_d])
+            out = _bounds_multi_jit("hot")(
+                db, QueryArrays(*[jnp.asarray(x) for x in qb]),
+                jnp.asarray(cdt))
+        elif lay == "packed":
+            pk = sub.packed
+            out = _bounds_multi_jit("packed")(
+                jnp.asarray(pk.words), jnp.asarray(pk.sb),
+                jnp.asarray(pk.widths), db,
+                QueryArrays(*[jnp.asarray(x) for x in qb]))
+        else:
+            out = _bounds_multi_jit("dense")(
+                db, QueryArrays(*[jnp.asarray(x) for x in qb]))
         return np.asarray(out)[:Q, :N]
 
     def _bounds_np(self, idx: np.ndarray,
                    qs: Sequence[QueryArrays]) -> np.ndarray:
-        db = self._gather(idx, len(idx))
+        sub = self.slab.gather(idx)
+        db = sub.base_arrays()
         out = np.empty((len(qs), len(idx)), np.int64)
         for i, q in enumerate(qs):
-            c_d = np.minimum(db.fd, np.asarray(q.fd)[None, :]).sum(axis=1)
+            c_d = sub.cd_one(np.asarray(q.fd))
             b = filters.batched_bounds_np(
                 db.nv, db.ne, db.degseq, db.vhist, db.ehist, c_d,
                 int(q.nv), int(q.ne), np.asarray(q.sigma),
@@ -291,16 +316,43 @@ class BatchedFilterEval:
 
         from repro.kernels.qgram_filter.ops import (fused_filter_bounds,
                                                     make_aux, make_scalars)
-        db = self._gather(idx, len(idx))
-        aux = make_aux(jnp.asarray(db.nv), jnp.asarray(db.ne),
-                       jnp.asarray(db.region_i), jnp.asarray(db.region_j))
+        lay = self.slab_layout
+        N = len(idx)
+        if lay == "packed":
+            # one gather, padded to the shape-bucket multiple so the
+            # on-device decode compiles a handful of programs, not one
+            # per bucket; the filter pass itself runs on the N real rows
+            from repro.kernels.bitunpack.ops import (flatten_packed_rows,
+                                                     unpack_hybrid)
+            np_ = _pad_to(max(N, 1), _N_PAD)
+            sub = self.slab.gather(idx, np_)
+            words, sb, widths = flatten_packed_rows(sub.packed)
+            KB = sub.packed.sb.shape[1]
+            fd_dev = unpack_hybrid(sb, widths, words).reshape(
+                np_, KB * 128)[:N, :sub.U]
+            db = DBArrays(*[np.asarray(x)[:N] for x in sub.base_arrays()])
+        else:
+            sub = self.slab.gather(idx)
+            db = sub.base_arrays()
+            fd_dev = jnp.asarray(db.fd)
+        nv_d, ne_d = jnp.asarray(db.nv), jnp.asarray(db.ne)
+        ri_d, rj_d = jnp.asarray(db.region_i), jnp.asarray(db.region_j)
+        if lay != "hot":             # query-independent -> build once
+            aux = make_aux(nv_d, ne_d, ri_d, rj_d)
         p = self.partition
         out = np.empty((len(qs), len(idx)), np.int64)
         for i, q in enumerate(qs):
+            qfd = np.asarray(q.fd)
+            if lay == "hot":
+                # sparse-tail C_D correction rides in aux (DESIGN.md §3)
+                cd_tail = sub.tail_minsum_one(qfd).astype(np.int32)
+                aux = make_aux(nv_d, ne_d, ri_d, rj_d,
+                               jnp.asarray(cd_tail))
+                qfd = qfd[:sub.hot_d]
             sc = make_scalars(int(q.nv), int(q.ne), int(q.tau), p.x0, p.y0,
                               p.l)
             b, _ = fused_filter_bounds(
-                sc, jnp.asarray(db.fd), jnp.asarray(q.fd),
+                sc, fd_dev, jnp.asarray(qfd),
                 jnp.asarray(db.vhist), jnp.asarray(q.vhist),
                 jnp.asarray(db.ehist), jnp.asarray(q.ehist),
                 jnp.asarray(db.degseq), jnp.asarray(q.sigma), aux)
@@ -328,9 +380,19 @@ class BatchedFilterEval:
         S = self.n_shards
         Q = len(qs)
         n_pad = _pad_to(max(len(idx), 1), S * self.shard_pad)
-        db = self._gather(idx, n_pad)
+        sub = self.slab.gather(idx, n_pad)
+        db = sub.base_arrays()
         qp = _pad_to(Q, _Q_PAD)
         qb = self.stack_queries(list(qs) + [qs[-1]] * (qp - Q))
+        extra: Tuple = ()
+        if self.slab_layout == "hot":
+            # batched CSR tail correction, sharded with the slab rows
+            cdt = sub.tail_minsum_batch(qb.fd).astype(np.int32)
+            qb = qb._replace(fd=qb.fd[:, :sub.hot_d])
+            extra = (cdt,)
+        elif self.slab_layout == "packed":
+            pk = sub.packed
+            extra = (pk.words, pk.sb, pk.widths)
         if self._model_axis is not None:   # vocab dim must divide 'model'
             upad = (-db.fd.shape[1]) % self._model_size
             if upad:
@@ -339,7 +401,8 @@ class BatchedFilterEval:
         with jc.set_mesh(self.mesh):
             sids, bnds, n_pass = self._dist_fn(
                 DBArrays(*[jnp.asarray(x) for x in db]),
-                QueryArrays(*[jnp.asarray(x) for x in qb]))
+                QueryArrays(*[jnp.asarray(x) for x in qb]),
+                *[jnp.asarray(x) for x in extra])
         sids = np.asarray(sids)
         bnds = np.asarray(bnds)
         n_pass = np.asarray(n_pass)

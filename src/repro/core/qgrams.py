@@ -186,13 +186,54 @@ class EncodedDB:
         return FD, FL
 
     def tail_intersection(self, i: int, q_sparse: Dict[int, int], hot_d: int) -> int:
-        """Sum over ids >= hot_d of min(F_D[i, id], q[id]) (host correction)."""
+        """Sum over ids >= hot_d of min(F_D[i, id], q[id]) (host correction,
+        one row; the serving path uses ``tail_intersection_bulk``)."""
         ids, cnt = self.row_degree(i)
-        total = 0
-        for idx, c in zip(ids, cnt):
-            if idx >= hot_d:
-                total += min(int(c), q_sparse.get(int(idx), 0))
-        return total
+        m = ids >= hot_d
+        if not m.any():
+            return 0
+        qv = np.array([q_sparse.get(int(x), 0) for x in ids[m]], np.int64)
+        return int(np.minimum(cnt[m].astype(np.int64), qv).sum())
+
+    def tail_intersection_bulk(self, q_ids: np.ndarray, q_cnt: np.ndarray,
+                               hot_d: int) -> np.ndarray:
+        """Batched CSR tail min-sum: for every graph, sum over ids >= hot_d
+        of min(F_D[g, id], q[id]) — the per-batch correction the ``hot``
+        FilterSlab layout adds to the device hot-prefix C_D (DESIGN.md §11).
+
+        One vectorised sweep over the whole CSR (no per-graph Python
+        loop).  Bucket-restricted corrections go through the gathered
+        ``FilterSlab`` tail instead — this always costs O(whole CSR).
+        """
+        q_ids = np.asarray(q_ids, np.int64)
+        q_cnt = np.asarray(q_cnt, np.int64)
+        return csr_tail_minsum(self.d_off, self.d_ids, self.d_cnt,
+                               q_ids, q_cnt, hot_d,
+                               self.vocab.n_degree_ids)
+
+
+def csr_tail_minsum(off: np.ndarray, ids: np.ndarray, cnt: np.ndarray,
+                    q_ids: np.ndarray, q_cnt: np.ndarray, hot_d: int,
+                    n_ids: int) -> np.ndarray:
+    """Vectorised per-row SUM over ids >= hot_d of min(cnt, q[id]).
+
+    ``off``/``ids``/``cnt`` are any CSR multiset slab (rows need not be
+    pre-split at hot_d); the query arrives sparse.  Counts are small, so
+    the bincount accumulation (float64) is exact.
+    """
+    B = len(off) - 1
+    out = np.zeros(B, np.int64)
+    tail_w = n_ids - hot_d
+    if tail_w > 0 and len(ids) and len(q_ids):
+        q_tail = np.zeros(tail_w, np.int64)
+        sel = (q_ids >= hot_d) & (q_ids < n_ids)
+        q_tail[q_ids[sel] - hot_d] = q_cnt[sel]
+        row_of = np.repeat(np.arange(B), np.diff(off))
+        m = ids >= hot_d
+        contrib = np.minimum(cnt[m].astype(np.int64), q_tail[ids[m] - hot_d])
+        out = np.bincount(row_of[m], weights=contrib,
+                          minlength=B).astype(np.int64)
+    return out
 
 
 def sparse_intersection_size(a_ids: np.ndarray, a_cnt: np.ndarray,

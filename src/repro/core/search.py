@@ -170,20 +170,31 @@ class FlatMSQIndex:
     def candidate_ids(self, h: Graph, tau: int) -> List[int]:
         return self.candidates(h, tau)
 
-    def filter_eval(self, backend: str = "auto") -> BatchedFilterEval:
+    def filter_eval(self, backend: str = "auto", slab: str = "dense",
+                    hot_d: Optional[int] = None) -> BatchedFilterEval:
         """The batched (Q, N) filter evaluator over this index's arrays
-        (built lazily once per backend, then reused across batches)."""
+        (built lazily once per backend x FilterSlab layout, then reused
+        across batches — DESIGN.md §11)."""
         cache = getattr(self, "_filter_evals", None)
         if cache is None:
             cache = self._filter_evals = {}
-        if backend not in cache:
-            if backend == "distributed":
-                raise ValueError(
-                    "the distributed evaluator carries a mesh; register it "
-                    "with set_filter_eval (ShardedGraphQueryEngine does)")
-            cache[backend] = BatchedFilterEval(self.db, self.enc,
-                                               self.partition, backend)
-        return cache[backend]
+        if backend in cache:    # preregistered (e.g. the mesh-bound one)
+            return cache[backend]
+        if backend == "distributed":
+            raise ValueError(
+                "the distributed evaluator carries a mesh; register it "
+                "with set_filter_eval (ShardedGraphQueryEngine does)")
+        if slab == "hot" and hot_d is None:
+            from repro.core.slab import DEFAULT_HOT_D
+            hot_d = DEFAULT_HOT_D     # same slab either way; share it
+        elif slab != "hot":
+            hot_d = None              # meaningless off-hot; don't fork keys
+        key = (backend, slab, hot_d)
+        if key not in cache:
+            cache[key] = BatchedFilterEval(self.db, self.enc,
+                                           self.partition, backend,
+                                           slab=slab, hot_d=hot_d)
+        return cache[key]
 
     def set_filter_eval(self, backend: str, ev: BatchedFilterEval) -> None:
         """Register a preconstructed evaluator (e.g. the sharded engine's
@@ -196,9 +207,11 @@ class FlatMSQIndex:
     def batched_candidates(self, graphs: Sequence[Graph],
                            taus: Sequence[int],
                            qtuples: Optional[Sequence[QueryTuple]] = None,
-                           backend: str = "auto") -> CandidateBatch:
-        return batched_flat_candidates(self.filter_eval(backend), graphs,
-                                       taus, qtuples)
+                           backend: str = "auto", slab: str = "dense",
+                           hot_d: Optional[int] = None) -> CandidateBatch:
+        return batched_flat_candidates(
+            self.filter_eval(backend, slab=slab, hot_d=hot_d), graphs,
+            taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:
         i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)

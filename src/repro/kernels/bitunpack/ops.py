@@ -1,7 +1,18 @@
-"""Public API: host packer + jit'd unpacker for the TPU hybrid encoding."""
+"""Public API: host packer + jit'd unpacker for the TPU hybrid encoding.
+
+Two packed forms share the same per-block width coding:
+
+* the flat stream (``pack_hybrid`` / ``unpack_hybrid``) — one global word
+  array with absolute block offsets, fed straight to the Pallas kernel;
+* the rectangular row-wise slab (``pack_hybrid_rows`` / ``PackedRows``) —
+  one row of words per *graph*, offsets relative to the row, so bucket rows
+  gather and mesh shards block-partition like any other (B, X) array
+  (the ``packed`` FilterSlab layout, DESIGN.md §11).
+  ``flatten_packed_rows`` rebases it onto the flat form for the kernel.
+"""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,3 +82,127 @@ def packed_size_bits(words: np.ndarray, sb: np.ndarray,
     sb_bits = len(sb) * 32
     w_bits = len(widths) * 3  # 5 widths -> 3 bits each
     return payload + sb_bits + w_bits
+
+
+# --------------------------------------------------------------------------
+# rectangular row-wise packed slab (the FilterSlab 'packed' layout)
+# --------------------------------------------------------------------------
+
+class PackedRows(NamedTuple):
+    """Row-wise hybrid-packed matrix: row r of the original (B, U) int
+    matrix lives in ``words[r]`` as ``KB = ceil(U/128)`` width-coded blocks.
+
+    words:     (B, W) int32 — per-row block payloads concatenated,
+               zero-padded to W = max row payload words
+    sb:        (B, KB) int32 — word offset of block k *within its row*
+    widths:    (B, KB) int32 — bit width per block (one of WIDTHS)
+    n_entries: valid entries per row (U); entries beyond are pad zeros
+    """
+
+    words: np.ndarray
+    sb: np.ndarray
+    widths: np.ndarray
+    n_entries: int
+
+
+def _block_widths(mx: np.ndarray) -> np.ndarray:
+    """Narrowest width in WIDTHS holding values <= mx (vectorised)."""
+    w = np.full(mx.shape, WIDTHS[0], np.int32)
+    for wide in WIDTHS[1:]:
+        w[mx >= (1 << (wide // 2))] = wide
+    if (mx >= (1 << 32)).any():
+        raise ValueError("values do not fit in 32 bits")
+    return w
+
+
+def pack_hybrid_rows(mat: np.ndarray) -> PackedRows:
+    """Pack a (B, U) non-negative int matrix row-by-row.
+
+    Unlike ``pack_hybrid`` the result is rectangular, so rows gather /
+    shard like a dense matrix while the payload keeps the per-block hybrid
+    width coding.  Decode with ``unpack_rows_np`` (host),
+    ``ref.unpack_rows_ref`` (jnp, shard_map-safe), or rebase with
+    ``flatten_packed_rows`` for the Pallas kernel.
+    """
+    mat = np.asarray(mat, np.int64)
+    if mat.ndim != 2:
+        raise ValueError(f"expected a (B, U) matrix, got shape {mat.shape}")
+    if mat.size and mat.min() < 0:
+        raise ValueError("values must be non-negative")
+    B, U = mat.shape
+    KB = max((U + BLOCK_ENTRIES - 1) // BLOCK_ENTRIES, 1)
+    blk = np.zeros((B, KB * BLOCK_ENTRIES), np.int64)
+    blk[:, :U] = mat
+    blk = blk.reshape(B, KB, BLOCK_ENTRIES)
+    widths = _block_widths(blk.max(axis=2)) if B else np.zeros((0, KB),
+                                                               np.int32)
+    # words per block = 128 * w / 32 = 4w; sb = exclusive prefix per row
+    wpb = 4 * widths
+    sb = np.zeros((B, KB), np.int32)
+    if KB > 1:
+        sb[:, 1:] = np.cumsum(wpb[:, :-1], axis=1)
+    W = int((sb[:, -1] + wpb[:, -1]).max()) if B else 4 * WIDTHS[0] * KB
+    words = np.zeros((B, W), np.uint32)
+    for w in WIDTHS:
+        rsel, ksel = np.nonzero(widths == w)
+        if not len(rsel):
+            continue
+        per = 32 // w
+        ent = blk[rsel, ksel].reshape(-1, 4 * w, per).astype(np.uint64)
+        shifts = ((per - 1 - np.arange(per)) * w).astype(np.uint64)
+        payload = (ent << shifts[None, None, :]).sum(axis=2).astype(np.uint32)
+        # scatter each block's 4w words into its row at sb
+        col = sb[rsel, ksel][:, None] + np.arange(4 * w)[None, :]
+        words[rsel[:, None], col] = payload
+    return PackedRows(words=words.view(np.int32), sb=sb, widths=widths,
+                      n_entries=U)
+
+
+def unpack_rows_np(pk: PackedRows) -> np.ndarray:
+    """Host decode of ``PackedRows`` to the dense (B, U) int32 matrix."""
+    B, KB = pk.sb.shape
+    e = np.arange(BLOCK_ENTRIES, dtype=np.int64)[None, None, :]
+    w = pk.widths[:, :, None].astype(np.int64)
+    bit = pk.sb[:, :, None].astype(np.int64) * 32 + e * w
+    rows = np.arange(B)[:, None, None]
+    wvals = pk.words.view(np.uint32)[rows, bit // 32].astype(np.uint64)
+    shift = (32 - w - bit % 32).astype(np.uint64)
+    mask = (np.uint64(1) << w.astype(np.uint64)) - np.uint64(1)
+    out = ((wvals >> shift) & mask).astype(np.int32)
+    return out.reshape(B, KB * BLOCK_ENTRIES)[:, :pk.n_entries]
+
+
+def flatten_packed_rows(pk: PackedRows
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Rebase row-relative offsets to the flat stream the kernel expects.
+
+    Returns (words, sb, widths) for ``unpack_hybrid``: words raveled with
+    MAX_WORDS trailing guard words, sb made absolute (row*W + local).
+    """
+    B, W = pk.words.shape
+    if B * W + MAX_WORDS > np.iinfo(np.int32).max:
+        # the kernel's SMEM offsets are int32; beyond this the slab must
+        # be split into sub-buckets before flattening
+        raise ValueError(f"packed slab too large to flatten: {B} rows x "
+                         f"{W} words overflows int32 word offsets")
+    words = np.concatenate([pk.words.reshape(-1),
+                            np.zeros(MAX_WORDS, np.int32)])
+    sb = (np.arange(B, dtype=np.int64)[:, None] * W
+          + pk.sb).astype(np.int32).reshape(-1)
+    return words, sb, pk.widths.reshape(-1).astype(np.int32)
+
+
+def packed_rows_size_bits(pk: PackedRows) -> dict:
+    """Serving-resident footprint of the rectangular packed slab — counted
+    at the arrays' actual int32 residency (widths could pack into 3 bits
+    each, but that is not how they sit in memory) — plus the ragged
+    payload lower bound (what a length-exact stream would take)."""
+    B, W = pk.words.shape
+    KB = pk.sb.shape[1]
+    words_bits = B * W * 32
+    sb_bits = B * KB * 32
+    widths_bits = B * KB * 32
+    ragged_bits = int((4 * pk.widths.astype(np.int64)).sum()) * 32
+    return {"words": words_bits, "sb": sb_bits, "widths": widths_bits,
+            "total": words_bits + sb_bits + widths_bits,
+            "ragged_payload": ragged_bits}

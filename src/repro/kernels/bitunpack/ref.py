@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the bitunpack kernel (gather-based, independent)."""
+"""Pure-jnp oracles for the bitunpack kernel (gather-based, independent)."""
 from __future__ import annotations
 
 import jax
@@ -23,4 +23,29 @@ def unpack_hybrid_ref(sb: jax.Array, widths: jax.Array,
     wvals = words.astype(jnp.uint32)[word_idx]
     shift = (32 - w - off).astype(jnp.uint32)
     mask = jax.lax.shift_left(jnp.uint32(1), w.astype(jnp.uint32)) - jnp.uint32(1)
+    return (jax.lax.shift_right_logical(wvals, shift) & mask).astype(jnp.int32)
+
+
+def unpack_rows_ref(words: jax.Array, sb: jax.Array,
+                    widths: jax.Array) -> jax.Array:
+    """Decode the rectangular row-wise packed slab: (B, KB*128) int32.
+
+    ``words`` is (B, W) with each row's block payloads concatenated
+    (zero-padded to W); ``sb``/``widths`` are (B, KB) word offsets *within
+    the row* and per-block bit widths.  Pure gathers/shifts, so this is the
+    decode the distributed backend runs inside shard_map (DESIGN.md §11).
+    """
+    B, KB = sb.shape
+    e = jnp.arange(BLOCK_ENTRIES, dtype=jnp.int32)[None, None, :]
+    w = widths[:, :, None].astype(jnp.int32)
+    bit = sb[:, :, None].astype(jnp.int32) * 32 + e * w
+    word_idx = (bit // 32).reshape(B, KB * BLOCK_ENTRIES)
+    off = (bit % 32).reshape(B, KB * BLOCK_ENTRIES)
+    wvals = jnp.take_along_axis(words.astype(jnp.uint32), word_idx, axis=1)
+    wflat = w.reshape(B, KB, 1).astype(jnp.int32)
+    wrep = jnp.broadcast_to(wflat, (B, KB, BLOCK_ENTRIES)
+                            ).reshape(B, KB * BLOCK_ENTRIES)
+    shift = (32 - wrep - off).astype(jnp.uint32)
+    mask = jax.lax.shift_left(jnp.uint32(1),
+                              wrep.astype(jnp.uint32)) - jnp.uint32(1)
     return (jax.lax.shift_right_logical(wvals, shift) & mask).astype(jnp.int32)

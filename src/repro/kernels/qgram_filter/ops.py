@@ -81,19 +81,8 @@ def cd_tail_host(enc, q_ids: np.ndarray, q_cnt: np.ndarray, hot: int
                  ) -> np.ndarray:
     """Host CSR merge for the cold-vocabulary C_D contribution.
 
-    Only the query's ids >= hot participate; queries touch O(|V_h|) ids so
-    this is a cheap sparse sweep regardless of |G|.
+    Only the query's ids >= hot participate; one vectorised sweep over the
+    whole CSR (``EncodedDB.tail_intersection_bulk``) regardless of |G|.
     """
-    sel = q_ids >= hot
-    q_map = {int(i): int(c) for i, c in zip(q_ids[sel], q_cnt[sel])}
-    out = np.zeros(len(enc), np.int32)
-    if not q_map:
-        return out
-    for g in range(len(enc)):
-        ids, cnt = enc.row_degree(g)
-        t = 0
-        for i, c in zip(ids, cnt):
-            if i >= hot:
-                t += min(int(c), q_map.get(int(i), 0))
-        out[g] = t
-    return out
+    return enc.tail_intersection_bulk(np.asarray(q_ids), np.asarray(q_cnt),
+                                      hot).astype(np.int32)

@@ -115,17 +115,19 @@ def logits_spec(mesh: Mesh) -> P:
              else None)
 
 
-def serving_specs(mesh: Mesh, layout: str = "graph"):
+def serving_specs(mesh: Mesh, layout: str = "graph", slab: str = "dense"):
     """NamedSharding trees for the sharded GraphQueryEngine's arrays
-    (DESIGN.md §10): (db, query-block, candidate-block) for the DB slab
-    shards, the replicated stacked (Q, ...) query block, and the
-    all-gathered per-device top-k candidate blocks."""
+    (DESIGN.md §10): (db, query-block, candidate-block, slab-extras) for
+    the DB slab shards, the replicated stacked (Q, ...) query block, the
+    all-gathered per-device top-k candidate blocks, and the FilterSlab
+    layout's extra operands (DESIGN.md §11: () for dense, the tail
+    correction for hot, packed words/sb/widths rows for packed)."""
     from repro.core import distributed as dist
-    db_spec, q_spec, out_spec = dist.multi_search_specs(
-        *dist.layout_axes(mesh, layout))
+    db_spec, q_spec, out_spec, extra_spec = dist.multi_search_specs(
+        *dist.layout_axes(mesh, layout), slab=slab)
 
     def named(tree):
         return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                             is_leaf=lambda x: isinstance(x, P))
 
-    return named(db_spec), named(q_spec), named(out_spec)
+    return named(db_spec), named(q_spec), named(out_spec), named(extra_spec)

@@ -85,9 +85,12 @@ class GraphQueryEngine:
 
     def __init__(self, source: CandidateSource, backend: str = "auto",
                  encoding_cache_size: int = 1024,
-                 result_cache_size: int = 256):
+                 result_cache_size: int = 256, slab_layout: str = "dense",
+                 hot_d: Optional[int] = None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
+        self.slab_layout = slab_layout
+        self.hot_d = hot_d
         self._enc_cache = _LRU(encoding_cache_size)
         self._res_cache = _LRU(result_cache_size)
         self.stats: Dict[str, float] = {
@@ -110,6 +113,9 @@ class GraphQueryEngine:
             self.source.batched_candidates).parameters
         if "backend" in params:     # tree sources take no backend
             kwargs["backend"] = self.backend
+        if "slab" in params:        # nor a FilterSlab layout
+            kwargs["slab"] = self.slab_layout
+            kwargs["hot_d"] = self.hot_d
         return self.source.batched_candidates(graphs, taus, **kwargs)
 
     # ---- the batched path --------------------------------------------------
@@ -219,35 +225,47 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
 
     ``layout`` picks the DESIGN.md §5 layout: ``'graph'`` (default; every
     mesh axis shards graphs) or ``'vocab'`` (graphs over ('pod', 'data'),
-    the dense F_D vocabulary dim over 'model' with a psum'd partial
+    the dense/hot F_D vocabulary dim over 'model' with a psum'd partial
     min-sum — the fit for very wide PubChem-scale vocabularies).
+    ``slab_layout`` picks the resident F_D form per DESIGN.md §11:
+    ``'dense'``, ``'hot'`` (hot prefix sharded like dense, batched CSR
+    tail correction psum-then-added on device), or ``'packed'`` (hybrid
+    bit-packed words rows sharded over the batch axes, decoded per device
+    inside shard_map; graph-sharded only).
     Candidate sets are bit-identical to the single-host engine
     (``tests/test_sharded_engine.py``): block truncation is recall-safe
     because overflowing blocks fall back to exact per-device ids.
     """
 
     def __init__(self, source: CandidateSource, mesh, layout: str = "graph",
-                 k: int = 256, shard_pad: int = 512, **kw):
+                 k: int = 256, shard_pad: int = 512,
+                 slab_layout: str = "dense", hot_d: Optional[int] = None,
+                 **kw):
         for attr in ("enc", "set_filter_eval"):
             if not hasattr(source, attr):
                 raise TypeError(
                     "ShardedGraphQueryEngine needs a flat-style source "
                     "(FlatMSQIndex); tree sources have no slab arrays")
-        super().__init__(source, backend="distributed", **kw)
+        super().__init__(source, backend="distributed",
+                         slab_layout=slab_layout, hot_d=hot_d, **kw)
         from repro.core.engine import BatchedFilterEval
         self.mesh = mesh
         self.layout = layout
         self.evaluator = BatchedFilterEval(
             source.db, source.enc, source.partition, backend="distributed",
-            mesh=mesh, layout=layout, k=k, shard_pad=shard_pad)
+            mesh=mesh, layout=layout, k=k, shard_pad=shard_pad,
+            slab=slab_layout, hot_d=hot_d)
         # also visible to plain GraphQueryEngine(source, "distributed") users
         source.set_filter_eval("distributed", self.evaluator)
 
     @classmethod
     def from_config(cls, source: CandidateSource, mesh, cfg,
                     **kw) -> "ShardedGraphQueryEngine":
-        """Layout/top-k from an MSQConfig (msq_pubchem defaults to the
-        vocab-sharded layout for its wide q-gram vocabulary)."""
+        """Layouts/top-k from an MSQConfig (msq_pubchem defaults to the
+        vocab-sharded layout and the hot slab for its wide q-gram
+        vocabulary)."""
+        kw.setdefault("slab_layout", getattr(cfg, "slab_layout", "dense"))
+        kw.setdefault("hot_d", getattr(cfg, "hot_d", None))
         return cls(source, mesh,
                    layout=getattr(cfg, "sharded_layout", "graph"),
                    k=int(getattr(cfg, "shard_topk", 256)), **kw)

@@ -101,6 +101,122 @@ def test_sharded_engine_overflow_falls_back_exactly():
     """)
 
 
+def test_sharded_engine_slab_layouts_eight_devices():
+    """FilterSlab x sharding-layout matrix on the 8-device mesh: hot
+    (graph- and vocab-sharded, tail correction psum'd then added) and
+    packed (graph-sharded; words rows shard, decode inside shard_map)
+    stay bit-identical to the single-host dense engine; packed + vocab
+    refuses cleanly (DESIGN.md §11)."""
+    run_child("""
+    import numpy as np
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = aids_like_db(120, seed=11)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i in range(8):
+        tau = int(rng.integers(1, 5))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=(i % 4 == 0)))
+    ref = single.submit(reqs)
+
+    mesh = jc.make_mesh((2, 4), ("data", "model"))
+    for layout, slab in (("graph", "hot"), ("vocab", "hot"),
+                         ("graph", "packed")):
+        eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh, layout=layout,
+                                      slab_layout=slab, hot_d=4,
+                                      k=64, shard_pad=64)
+        out = eng.submit(reqs)
+        for a, b in zip(out, ref):
+            assert a.candidates == b.candidates, (layout, slab)
+            assert a.matches == b.matches, (layout, slab)
+    try:
+        ShardedGraphQueryEngine(FlatMSQIndex(db), mesh, layout="vocab",
+                                slab_layout="packed")
+        raise AssertionError("vocab+packed must refuse")
+    except ValueError:
+        pass
+    print("OK")
+    """)
+
+
+def test_sharded_engine_single_device_mesh_all_slabs():
+    """Degenerate 1-device mesh: the shard_map path must stay bit-identical
+    for every slab layout (shard == whole slab, no collectives needed)."""
+    run_child("""
+    import numpy as np
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = aids_like_db(90, seed=5)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(7)
+    reqs = []
+    for _ in range(5):
+        tau = int(rng.integers(1, 4))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=False))
+    ref = single.submit(reqs)
+
+    mesh = jc.make_mesh((1,), ("data",))
+    for slab in ("dense", "hot", "packed"):
+        eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh,
+                                      layout="graph", slab_layout=slab,
+                                      hot_d=4, k=32, shard_pad=64)
+        out = eng.submit(reqs)
+        for a, b in zip(out, ref):
+            assert a.candidates == b.candidates, slab
+    print("OK")
+    """, devices=1)
+
+
+def test_sharded_engine_succinct_slab_overflow_falls_back_exactly():
+    """k=1 forces candidate-block overflow with the succinct slabs: the
+    exact host fallback re-evaluates through the same slab layout, so
+    candidates stay bit-identical (and overflow must actually trigger)."""
+    run_child("""
+    import numpy as np
+    from repro.core import jax_compat as jc
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db, perturb_graph
+    from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                          ShardedGraphQueryEngine)
+
+    db = aids_like_db(150, seed=11)
+    single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    rng = np.random.default_rng(2)
+    reqs = []
+    for _ in range(6):
+        tau = int(rng.integers(4, 7))       # wide taus -> crowded buckets
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], 2, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=False))
+    ref = single.submit(reqs)
+    assert max(len(r.candidates) for r in ref) > 1   # something to overflow
+
+    mesh = jc.make_mesh((2,), ("data",))
+    for slab in ("hot", "packed"):
+        eng = ShardedGraphQueryEngine(FlatMSQIndex(db), mesh,
+                                      layout="graph", slab_layout=slab,
+                                      hot_d=4, k=1, shard_pad=64)
+        out = eng.submit(reqs)
+        for a, b in zip(out, ref):
+            assert a.candidates == b.candidates, slab
+        assert eng.shard_stats["overflow_blocks"] > 0, slab
+    print("OK")
+    """, devices=2)
+
+
 def test_sharded_engine_two_device_mesh_and_config():
     """Minimum mesh (2 devices, 'data' only) + layout selection from the
     MSQConfig (msq_pubchem -> vocab-sharded needs a model axis, so the
@@ -116,7 +232,9 @@ def test_sharded_engine_two_device_mesh_and_config():
                                           ShardedGraphQueryEngine)
 
     assert aids_cfg().sharded_layout == "graph"
+    assert aids_cfg().slab_layout == "dense"
     assert pubchem_cfg().sharded_layout == "vocab"
+    assert pubchem_cfg().slab_layout == "hot"   # succinct serving default
 
     db = aids_like_db(120, seed=5)
     single = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")

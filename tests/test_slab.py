@@ -1,0 +1,237 @@
+"""FilterSlab layouts (DESIGN.md §11): codec edge cases + parity matrix.
+
+Two invariants:
+
+* the packed/hot codecs round-trip exactly (host packer vs numpy / jnp /
+  Pallas-kernel decoders, incl. empty, all-zero and single-value blocks);
+* candidate sets are bit-identical across every FilterSlab layout and
+  every single-host backend (the distributed matrix lives in
+  tests/test_sharded_engine.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core.qgrams import EncodedDB
+from repro.core.region import default_partition
+from repro.core.slab import FilterSlab
+from repro.core.succinct import HybridEncodedArray
+from repro.graphs.generators import aids_like_db, perturb_graph
+from repro.kernels.bitunpack.ops import (flatten_packed_rows, pack_hybrid,
+                                         pack_hybrid_rows,
+                                         packed_rows_size_bits,
+                                         unpack_hybrid, unpack_rows_np)
+
+
+# --------------------------------------------------------------------------
+# HybridEncodedArray edge cases (the archival hybrid coder)
+# --------------------------------------------------------------------------
+
+def test_hybrid_array_empty():
+    arr = HybridEncodedArray([], block=16)
+    assert arr.n == 0
+    assert arr.decode_all().tolist() == []
+    assert arr.access_bulk(np.zeros(0, np.int64)).tolist() == []
+    assert arr.size_bits().s_bits == 0
+    with pytest.raises(IndexError):
+        arr.access(0)
+
+
+def test_hybrid_array_single_value_blocks():
+    # constant blocks: fixed path wins, every entry 1 bit wide for value 1
+    for v in (1, 7, 255):
+        arr = HybridEncodedArray([v] * 48, block=16)
+        assert arr.decode_all().tolist() == [v] * 48
+        assert arr.access(47) == v
+
+
+def test_hybrid_array_out_of_order_access_bulk():
+    rng = np.random.default_rng(3)
+    values = rng.integers(1, 300, 200).tolist()
+    arr = HybridEncodedArray(values, block=16)
+    idx = rng.permutation(200)[:50]
+    want = np.asarray(values, np.int64)[idx]
+    assert np.array_equal(arr.access_bulk(idx), want)
+    # repeats + reversed order
+    idx2 = np.array([5, 5, 199, 0, 120, 0])
+    assert np.array_equal(arr.access_bulk(idx2),
+                          np.asarray(values, np.int64)[idx2])
+
+
+def test_hybrid_array_rejects_zeros():
+    with pytest.raises(ValueError):
+        HybridEncodedArray([1, 0, 2])
+
+
+# --------------------------------------------------------------------------
+# pack_hybrid / unpack_hybrid (flat kernel format) edge cases
+# --------------------------------------------------------------------------
+
+def test_pack_hybrid_empty_and_all_zero_blocks():
+    for vals in (np.zeros(0, np.int64), np.zeros(128, np.int64),
+                 np.zeros(300, np.int64)):
+        words, sb, widths, nv = pack_hybrid(vals)
+        assert nv == len(vals)
+        out = np.asarray(unpack_hybrid(sb, widths, words, nv,
+                                       interpret=True))
+        assert np.array_equal(out, vals)
+        # all-zero blocks take the narrowest width
+        assert (widths == 2).all()
+
+
+def test_pack_hybrid_single_value_blocks_ref_vs_kernel():
+    from repro.kernels.bitunpack.ref import unpack_hybrid_ref
+    import jax.numpy as jnp
+    vals = np.concatenate([np.full(128, 3, np.int64),
+                           np.full(128, 65535, np.int64),
+                           np.full(17, 1, np.int64)])
+    words, sb, widths, nv = pack_hybrid(vals)
+    out = np.asarray(unpack_hybrid(sb, widths, words, nv, interpret=True))
+    ref = np.asarray(unpack_hybrid_ref(jnp.asarray(sb), jnp.asarray(widths),
+                                       jnp.asarray(words)))
+    assert np.array_equal(out, vals)
+    assert np.array_equal(ref.reshape(-1)[:nv], vals)
+
+
+# --------------------------------------------------------------------------
+# pack_hybrid_rows (the rectangular packed slab)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,U,hi", [
+    (7, 5, 4), (16, 300, 3), (3, 130, 70000), (4, 1, 2), (6, 40, 1),
+])
+def test_pack_rows_roundtrip_np_jnp_kernel(B, U, hi):
+    import jax.numpy as jnp
+    from repro.kernels.bitunpack.ref import unpack_rows_ref
+    rng = np.random.default_rng(B * U + hi)
+    mat = rng.integers(0, hi, (B, U)).astype(np.int64)
+    pk = pack_hybrid_rows(mat)
+    assert np.array_equal(unpack_rows_np(pk), mat)
+    ref = np.asarray(unpack_rows_ref(jnp.asarray(pk.words),
+                                     jnp.asarray(pk.sb),
+                                     jnp.asarray(pk.widths)))
+    assert np.array_equal(ref[:, :U], mat)
+    words, sb, widths = flatten_packed_rows(pk)
+    KB = pk.sb.shape[1]
+    out = np.asarray(unpack_hybrid(sb, widths, words, interpret=True))
+    assert np.array_equal(out.reshape(B, KB * 128)[:, :U], mat)
+
+
+def test_pack_rows_zero_matrix_and_empty():
+    pk = pack_hybrid_rows(np.zeros((5, 64), np.int64))
+    assert np.array_equal(unpack_rows_np(pk), np.zeros((5, 64)))
+    pk0 = pack_hybrid_rows(np.zeros((0, 10), np.int64))
+    assert unpack_rows_np(pk0).shape == (0, 10)
+
+
+def test_pack_rows_rejects_negative():
+    with pytest.raises(ValueError):
+        pack_hybrid_rows(np.array([[1, -1]]))
+
+
+def test_packed_rows_measurably_smaller_than_dense():
+    rng = np.random.default_rng(0)
+    mat = rng.integers(0, 4, (200, 256)).astype(np.int64)
+    bits = packed_rows_size_bits(pack_hybrid_rows(mat))
+    dense_bits = mat.size * 32
+    assert bits["total"] < 0.25 * dense_bits   # small counts -> ~2-4 bits
+
+
+# --------------------------------------------------------------------------
+# FilterSlab: tail correction + layout parity
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_db():
+    return aids_like_db(90, seed=11)
+
+
+def test_tail_intersection_bulk_matches_scalar(small_db):
+    enc = EncodedDB.build(small_db)
+    rng = np.random.default_rng(5)
+    U = enc.vocab.n_degree_ids
+    for hot_d in (0, 3, U // 2, U):
+        q_ids = np.sort(rng.choice(U, size=min(12, U), replace=False))
+        q_cnt = rng.integers(1, 4, len(q_ids))
+        q_sparse = {int(i): int(c) for i, c in zip(q_ids, q_cnt)}
+        bulk = enc.tail_intersection_bulk(q_ids, q_cnt, hot_d)
+        for i in range(0, len(small_db), 7):
+            assert bulk[i] == enc.tail_intersection(i, q_sparse, hot_d)
+
+
+def test_hot_slab_cd_matches_dense(small_db):
+    enc = EncodedDB.build(small_db)
+    nv, ne = small_db.sizes()
+    part = default_partition(nv, ne)
+    dense = FilterSlab.build(small_db, enc, part, layout="dense")
+    rng = np.random.default_rng(7)
+    qfd = np.zeros(dense.U, np.int64)
+    pick = rng.choice(dense.U, size=min(20, dense.U), replace=False)
+    qfd[pick] = rng.integers(1, 5, len(pick))
+    want = dense.cd_one(qfd)
+    for hot_d in (1, 4, dense.U):
+        hot = FilterSlab.build(small_db, enc, part, layout="hot",
+                               hot_d=hot_d)
+        assert np.array_equal(hot.cd_one(qfd), want), hot_d
+    packed = FilterSlab.build(small_db, enc, part, layout="packed")
+    assert np.array_equal(packed.cd_one(qfd), want)
+
+
+def test_slab_gather_pads_are_inert(small_db):
+    enc = EncodedDB.build(small_db)
+    nv, ne = small_db.sizes()
+    part = default_partition(nv, ne)
+    for layout in ("dense", "hot", "packed"):
+        slab = FilterSlab.build(small_db, enc, part, layout=layout,
+                                hot_d=4)
+        sub = slab.gather(np.array([5, 2, 17]), n_pad=8)
+        assert sub.B == 8
+        qfd = np.ones(slab.U, np.int64)
+        cd = sub.cd_one(qfd)
+        assert (cd[3:] == 0).all(), layout       # pad rows contribute 0
+        assert np.array_equal(cd[:3], slab.cd_one(qfd)[[5, 2, 17]])
+
+
+def test_slab_size_accounting(small_db):
+    enc = EncodedDB.build(small_db)
+    nv, ne = small_db.sizes()
+    part = default_partition(nv, ne)
+    dense = FilterSlab.build(small_db, enc, part, layout="dense")
+    hot = FilterSlab.build(small_db, enc, part, layout="hot", hot_d=16)
+    packed = FilterSlab.build(small_db, enc, part, layout="packed")
+    assert hot.bits_per_graph() < dense.bits_per_graph()
+    assert packed.bits_per_graph() < 0.5 * dense.bits_per_graph()
+
+
+def test_layout_backend_parity(small_db):
+    """Candidate sets and matches bit-identical across the layout x
+    single-host-backend matrix (the acceptance invariant, DESIGN.md §11)."""
+    from repro.core.search import FlatMSQIndex
+    from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+
+    db = small_db
+    rng = np.random.default_rng(2)
+    reqs = []
+    for i in range(6):
+        tau = int(rng.integers(1, 5))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        reqs.append(GraphQuery(h, tau, verify=(i % 3 == 0)))
+    ref = GraphQueryEngine(FlatMSQIndex(db), backend="numpy").submit(reqs)
+
+    for backend in ("numpy", "jax", "pallas"):
+        for slab in ("dense", "hot", "packed"):
+            eng = GraphQueryEngine(FlatMSQIndex(db), backend=backend,
+                                   slab_layout=slab, hot_d=4)
+            out = eng.submit(reqs)
+            for a, b in zip(out, ref):
+                assert a.candidates == b.candidates, (backend, slab)
+                assert a.matches == b.matches, (backend, slab)
+                assert a.n_filtered == b.n_filtered, (backend, slab)
+
+
+def test_slab_rejects_unknown_layout(small_db):
+    enc = EncodedDB.build(small_db)
+    nv, ne = small_db.sizes()
+    part = default_partition(nv, ne)
+    with pytest.raises(ValueError):
+        FilterSlab.build(small_db, enc, part, layout="sparse")
