@@ -1,4 +1,4 @@
-.PHONY: check check-docs check-slow bench-throughput
+.PHONY: check check-docs check-slow bench-throughput bench-smoke
 
 # Tier-1 tests, offline-safe, with per-test + total timeouts (fail fast
 # instead of wedging CI). Override budgets via REPRO_TEST_TIMEOUT /
@@ -16,3 +16,9 @@ check-slow:
 
 bench-throughput:
 	PYTHONPATH=src python -m benchmarks.query_throughput --n 5000 --q 64
+
+# Tiny offline pipeline smoke (CI): exercises the async pipelined engine
+# end-to-end — parity asserted, overlap recorded to artifacts/bench/.
+bench-smoke:
+	PYTHONPATH=src python -m benchmarks.query_throughput --n 300 --q 16 \
+	    --pipeline --pipeline-workers 2

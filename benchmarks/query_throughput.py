@@ -20,6 +20,13 @@ numbers to ``artifacts/bench/query_throughput_sharded.{csv,json}`` (same
 schema).  On fake CPU devices this measures the orchestration overhead
 floor, not a speedup — the per-device win needs real accelerators
 (DESIGN.md §10).
+
+``--pipeline`` measures the async pipelined engine (DESIGN.md §12) with
+verification ON: synchronous ``submit`` vs ``AsyncGraphQueryEngine``
+(``--pipeline-workers`` verifiers, batches of ``--pipeline-batch``),
+asserts bit-identical results, and records overlap-efficiency — how much
+of the device filter time ran *while* verification was in flight — to
+``artifacts/bench/query_throughput_pipeline.{csv,json}``.
 """
 from __future__ import annotations
 
@@ -153,6 +160,121 @@ def _timed(engine, reqs) -> float:
     return time.perf_counter() - t0
 
 
+def _union_length(spans) -> float:
+    """Total length of the union of (start, end) spans."""
+    total = 0.0
+    end = -np.inf
+    for s, e in sorted(spans):
+        if e <= end:
+            continue
+        total += e - max(s, end)
+        end = e
+    return total
+
+
+def _overlap_length(a, b) -> float:
+    """Length of intersection(union(a), union(b)) by two-pointer merge."""
+    def merged(spans):
+        out = []
+        for s, e in sorted(spans):
+            if out and s <= out[-1][1]:
+                out[-1][1] = max(out[-1][1], e)
+            else:
+                out.append([s, e])
+        return out
+
+    am, bm = merged(a), merged(b)
+    i = j = 0
+    total = 0.0
+    while i < len(am) and j < len(bm):
+        lo = max(am[i][0], bm[j][0])
+        hi = min(am[i][1], bm[j][1])
+        if hi > lo:
+            total += hi - lo
+        if am[i][1] <= bm[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def run_pipeline(csv: Csv, n_db: int = 5000, n_queries: int = 64,
+                 backend: str = "auto", workers: int = 2,
+                 max_batch: int = 0, repeats: int = 1) -> Dict:
+    """Sync submit vs the async pipelined engine, verification ON, with
+    filter/verify overlap accounting (device busy during verification)."""
+    from repro.core.search import FlatMSQIndex
+    from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+    from repro.serve.pipeline import AsyncGraphQueryEngine
+
+    db = dataset("aids", n_db)
+    flat = FlatMSQIndex(db)
+    graphs, taus = make_queries(db, n_queries)
+    reqs = [GraphQuery(g, t, verify=True) for g, t in zip(graphs, taus)]
+    max_batch = max_batch or max(4, n_queries // 8)
+
+    sync = GraphQueryEngine(flat, backend=backend, result_cache_size=0)
+    sync.submit([GraphQuery(g, t, verify=False)       # warm: slab + jit
+                 for g, t in zip(graphs[:4], taus[:4])])
+    t0 = time.perf_counter()
+    ref = sync.submit(reqs)
+    wall_sync = time.perf_counter() - t0
+
+    wall_async = np.inf
+    for _ in range(repeats):
+        eng = GraphQueryEngine(flat, backend=backend, result_cache_size=0)
+        run_pipe = AsyncGraphQueryEngine(eng, max_batch=max_batch,
+                                         max_delay_s=0.002,
+                                         num_workers=workers,
+                                         record_intervals=True)
+        t0 = time.perf_counter()
+        tickets = run_pipe.submit_many(reqs)
+        run_out = [t.result(timeout=600) for t in tickets]
+        wall = time.perf_counter() - t0
+        run_pipe.close()
+        if wall < wall_async:   # keep wall + intervals from the same run
+            wall_async, apipe, out = wall, run_pipe, run_out
+
+    for got, want in zip(out, ref):
+        assert got.candidates == want.candidates, "candidate sets diverged"
+        assert got.matches == want.matches, "match sets diverged"
+
+    filter_busy = _union_length(apipe.filter_intervals)
+    verify_busy = _union_length(apipe.verify_intervals)
+    overlap = _overlap_length(apipe.filter_intervals, apipe.verify_intervals)
+    qps_sync = n_queries / wall_sync
+    qps_async = n_queries / wall_async
+    rec = {"n_db": n_db, "n_queries": n_queries, "backend": eng.backend,
+           "workers": workers, "max_batch": max_batch,
+           "wall_sync_s": wall_sync, "wall_async_s": wall_async,
+           "qps_sync": qps_sync, "qps_async": qps_async,
+           "speedup": qps_async / qps_sync,
+           "filter_busy_s": filter_busy, "verify_busy_s": verify_busy,
+           "overlap_s": overlap,
+           # fraction of device-filter time that ran while A* verification
+           # was simultaneously in flight (the pipelining claim)
+           "overlap_frac_of_filter": overlap / max(filter_busy, 1e-12),
+           "pipeline_efficiency": (filter_busy + verify_busy)
+                                  / max(wall_async, 1e-12),
+           "identical_results": True}
+    csv.add(f"pipeline_sync_{eng.backend}_n{n_db}_q{n_queries}",
+            wall_sync / n_queries, f"{qps_sync:.1f} q/s")
+    csv.add(f"pipeline_async_{eng.backend}_w{workers}_b{max_batch}"
+            f"_n{n_db}_q{n_queries}",
+            wall_async / n_queries,
+            f"{qps_async:.1f} q/s ({rec['speedup']:.2f}x) "
+            f"overlap {overlap * 1e3:.1f}ms "
+            f"({rec['overlap_frac_of_filter'] * 100:.0f}% of filter)")
+    print(f"pipelined engine [{eng.backend}, {workers} workers]: "
+          f"{qps_async:.1f} q/s vs sync {qps_sync:.1f} q/s "
+          f"({rec['speedup']:.2f}x); filter busy {filter_busy * 1e3:.1f}ms, "
+          f"verify busy {verify_busy * 1e3:.1f}ms, overlap "
+          f"{overlap * 1e3:.1f}ms "
+          f"({rec['overlap_frac_of_filter'] * 100:.0f}% of filter time had "
+          f"verification in flight); identical results")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=5000)
@@ -172,6 +294,13 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--sharded-layout", default="both",
                     choices=["both", "graph", "vocab"])
+    ap.add_argument("--pipeline", action="store_true",
+                    help="measure AsyncGraphQueryEngine (verification ON) "
+                         "with filter/verify overlap accounting "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--pipeline-workers", type=int, default=2)
+    ap.add_argument("--pipeline-batch", type=int, default=0,
+                    help="async batch-former size (0 = n_queries // 8)")
     args = ap.parse_args()
     if args.sharded:
         # must land before the first jax import: jax locks the device
@@ -200,6 +329,14 @@ def main() -> None:
                      f"{r['qps_batched']:.1f} q/s @ "
                      f"{r['slab_bits_per_graph']:.0f} bits/graph")
         lcsv.dump(art_path("query_throughput_layouts.csv"))
+    if args.pipeline:
+        pcsv = Csv()
+        prec = run_pipeline(pcsv, n_db=args.n, n_queries=args.q,
+                            backend=args.backend,
+                            workers=args.pipeline_workers,
+                            max_batch=args.pipeline_batch)
+        save_json("query_throughput_pipeline.json", prec)
+        pcsv.dump(art_path("query_throughput_pipeline.csv"))
     if args.sharded:
         layouts = {"both": ["graph", "vocab"], "graph": ["graph"],
                    "vocab": ["vocab"]}[args.sharded_layout]

@@ -1,7 +1,9 @@
 """Batched LM serving with the MSQ-Index as a retrieval pre-filter
-(DESIGN.md §6c): each request carries a molecule graph; the batched
-``GraphQueryEngine`` retrieves every request's GED neighbourhood in ONE
-bucketed filter pass; retrieved ids condition the prompt; the LM decodes
+(DESIGN.md §6c), now through the async pipelined engine (DESIGN.md §12):
+each request carries a molecule graph; ``AsyncGraphQueryEngine`` forms
+dynamic batches, runs the bucketed device filter pass while its verifier
+pool drains earlier queries' GED worklists, and streams matches out
+cheapest-first; retrieved ids condition the prompt; the LM decodes
 batched.
 
     PYTHONPATH=src python examples/serve_requests.py
@@ -13,11 +15,13 @@ from repro.configs import get_config, reduced
 from repro.core.search import MSQIndex
 from repro.graphs.generators import aids_like_db, perturb_graph
 from repro.models import build_params
-from repro.serve import GraphQuery, GraphQueryEngine, Request, ServeEngine
+from repro.serve import (AsyncGraphQueryEngine, GraphQuery,
+                         GraphQueryEngine, Request, ServeEngine,
+                         as_completed)
 
 
 def main() -> None:
-    # retrieval side: molecule database + index + batched query engine
+    # retrieval side: molecule database + index + pipelined query engine
     db = aids_like_db(1000, seed=2)
     index = MSQIndex(db)
     retriever = GraphQueryEngine(index)
@@ -30,9 +34,21 @@ def main() -> None:
     rng = np.random.default_rng(0)
     mols = [perturb_graph(db[int(rng.integers(0, len(db)))], 2, rng,
                           db.n_vlabels, db.n_elabels) for _ in range(8)]
-    # one batched retrieval pass for all 8 requests
-    retrieved = retriever.submit([GraphQuery(m, 3, verify=False)
-                                  for m in mols])
+    with AsyncGraphQueryEngine(retriever, max_batch=4, max_delay_s=0.002,
+                               num_workers=2) as apipe:
+        # one verified request streams its matches as A* confirms them,
+        # while the filter passes for the rest are still pipelining
+        probe = apipe.submit(GraphQuery(mols[0], 1, verify=True))
+        tickets = apipe.submit_many([GraphQuery(m, 3, verify=False)
+                                     for m in mols])
+        for gid, d in probe.stream(timeout=120):
+            print(f"probe: streamed match graph {gid} at ged {d}")
+        print(f"probe: {len(probe.result().candidates)} candidates, "
+              f"{len(probe.result().matches)} matches "
+              f"(stats {probe.result().stats})")
+        retrieved = [None] * len(tickets)
+        for i, res in as_completed(tickets, timeout=120):
+            retrieved[i] = res        # arrive as their worklists finish
     requests = []
     for i, res in enumerate(retrieved):
         neighbours = res.candidates[:4]

@@ -2,6 +2,7 @@
 avg |V|=25.6 avg |E|=27.5, 62 vertex labels, 3 edge labels; subregion
 length l=4, hybrid block size b=16 (Section 7.1)."""
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -35,8 +36,13 @@ class MSQConfig:
     # Candidate sets are bit-identical across all three.
     slab_layout: str = "dense"
     hot_d: int = 128
+    # data-tuned hot-prefix width: when set, hot_d is ignored and H is the
+    # smallest frequency-ordered prefix covering this fraction of the
+    # dataset's degree-q-gram count mass (core.slab.hot_d_from_mass) —
+    # per-dataset instead of one fixed width.
+    hot_mass: Optional[float] = None
 
 
 def get_config() -> MSQConfig:
     return MSQConfig(name="msq_aids", num_graphs=42687, generator="aids_like",
-                     n_vlabels=62, n_elabels=3)
+                     n_vlabels=62, n_elabels=3, hot_mass=0.95)

@@ -13,4 +13,5 @@ def get_config() -> MSQConfig:
     # corrected per batch on host).
     return MSQConfig(name="msq_pubchem", num_graphs=500_000,
                      generator="aids_like", n_vlabels=101, n_elabels=3,
-                     seed=7, sharded_layout="vocab", slab_layout="hot")
+                     seed=7, sharded_layout="vocab", slab_layout="hot",
+                     hot_mass=0.95)

@@ -175,7 +175,8 @@ class BatchedFilterEval:
                  partition: RegionPartition, backend: str = "auto", *,
                  mesh=None, layout: str = "graph", k: int = _K_DEFAULT,
                  shard_pad: int = _N_PAD, slab: str = "dense",
-                 hot_d: Optional[int] = None):
+                 hot_d: Optional[int] = None,
+                 hot_mass: Optional[float] = None):
         if backend == "auto":
             backend = resolve_backend()
         if backend not in ("jax", "numpy", "pallas", "distributed"):
@@ -186,7 +187,7 @@ class BatchedFilterEval:
         self.vocab = enc.vocab
         self.partition = partition
         self.slab = FilterSlab.build(db, enc, partition, layout=slab,
-                                     hot_d=hot_d)
+                                     hot_d=hot_d, hot_mass=hot_mass)
         self.slab_layout = self.slab.layout
         self.vmax = self.slab.vmax
         if backend == "distributed":

@@ -171,7 +171,8 @@ class FlatMSQIndex:
         return self.candidates(h, tau)
 
     def filter_eval(self, backend: str = "auto", slab: str = "dense",
-                    hot_d: Optional[int] = None) -> BatchedFilterEval:
+                    hot_d: Optional[int] = None,
+                    hot_mass: Optional[float] = None) -> BatchedFilterEval:
         """The batched (Q, N) filter evaluator over this index's arrays
         (built lazily once per backend x FilterSlab layout, then reused
         across batches — DESIGN.md §11)."""
@@ -185,8 +186,20 @@ class FlatMSQIndex:
                 "the distributed evaluator carries a mesh; register it "
                 "with set_filter_eval (ShardedGraphQueryEngine does)")
         if slab == "hot" and hot_d is None:
-            from repro.core.slab import DEFAULT_HOT_D
-            hot_d = DEFAULT_HOT_D     # same slab either way; share it
+            from repro.core.slab import DEFAULT_HOT_D, hot_d_from_mass
+            # resolve hot_mass to a width up front so a mass-tuned and an
+            # explicit hot_d evaluator of the same H share a cache entry;
+            # memoized — the selector scans the whole encoded DB and this
+            # runs on every batch's filter_eval lookup
+            if hot_mass is not None:
+                widths = getattr(self, "_hot_mass_widths", None)
+                if widths is None:
+                    widths = self._hot_mass_widths = {}
+                if hot_mass not in widths:
+                    widths[hot_mass] = hot_d_from_mass(self.enc, hot_mass)
+                hot_d = widths[hot_mass]
+            else:
+                hot_d = DEFAULT_HOT_D
         elif slab != "hot":
             hot_d = None              # meaningless off-hot; don't fork keys
         key = (backend, slab, hot_d)
@@ -208,10 +221,12 @@ class FlatMSQIndex:
                            taus: Sequence[int],
                            qtuples: Optional[Sequence[QueryTuple]] = None,
                            backend: str = "auto", slab: str = "dense",
-                           hot_d: Optional[int] = None) -> CandidateBatch:
+                           hot_d: Optional[int] = None,
+                           hot_mass: Optional[float] = None
+                           ) -> CandidateBatch:
         return batched_flat_candidates(
-            self.filter_eval(backend, slab=slab, hot_d=hot_d), graphs,
-            taus, qtuples)
+            self.filter_eval(backend, slab=slab, hot_d=hot_d,
+                             hot_mass=hot_mass), graphs, taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:
         i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)

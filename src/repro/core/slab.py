@@ -40,6 +40,29 @@ DEFAULT_HOT_D = 128                  # keep in sync with MSQConfig.hot_d
 _IMPOSSIBLE = -(2 ** 20)
 
 
+def hot_d_from_mass(enc: EncodedDB, mass: float) -> int:
+    """Data-tuned hot-prefix width: the smallest H whose frequency-ordered
+    columns ``[0, H)`` cover at least ``mass`` of the database's total
+    degree-q-gram count mass (``MSQConfig.hot_mass``; replaces the fixed
+    ``DEFAULT_HOT_D`` when set).  The vocabulary is frequency-ordered
+    (most frequent id 0), so the cumulative mass curve is concave and the
+    smallest covering prefix is well-defined."""
+    U = max(enc.vocab.n_degree_ids, 1)
+    if len(enc.d_ids) == 0 or mass <= 0.0:
+        return 1
+    counts = np.bincount(np.asarray(enc.d_ids, np.int64),
+                         weights=np.asarray(enc.d_cnt, np.float64),
+                         minlength=U)
+    total = float(counts.sum())
+    if total <= 0.0:
+        return 1
+    target = min(float(mass), 1.0) * total
+    cum = np.cumsum(counts)
+    # smallest H with cum[H-1] >= target (epsilon guards float equality)
+    H = int(np.searchsorted(cum, target - 1e-9, side="left")) + 1
+    return max(1, min(H, U))
+
+
 def _ragged_take(off: np.ndarray, ids: np.ndarray, cnt: np.ndarray,
                  rows: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -86,7 +109,8 @@ class FilterSlab:
     # ---- construction -----------------------------------------------------
     @classmethod
     def build(cls, db, enc: EncodedDB, partition, *, layout: str = "dense",
-              hot_d: Optional[int] = None) -> "FilterSlab":
+              hot_d: Optional[int] = None,
+              hot_mass: Optional[float] = None) -> "FilterSlab":
         if layout not in LAYOUTS:
             raise ValueError(f"unknown slab layout {layout!r} "
                              f"(one of {LAYOUTS})")
@@ -108,9 +132,15 @@ class FilterSlab:
             fd, _ = enc.dense_hot(U)
             slab.fd = fd.astype(np.int32)
         elif layout == "hot":
-            # default matches MSQConfig.hot_d — hot without an explicit
-            # width must not silently degenerate to the dense slab
-            H = DEFAULT_HOT_D if hot_d is None else int(hot_d)
+            # explicit hot_d wins; else a hot_mass target picks H from the
+            # data; else the fixed default — hot without any width must
+            # not silently degenerate to the dense slab
+            if hot_d is not None:
+                H = int(hot_d)
+            elif hot_mass is not None:
+                H = hot_d_from_mass(enc, hot_mass)
+            else:
+                H = DEFAULT_HOT_D
             H = max(1, min(H, U))
             slab.hot_d = H
             fd, _ = enc.dense_hot(H)

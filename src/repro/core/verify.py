@@ -6,6 +6,15 @@ mappings with an admissible label-count heuristic and an f-cost cutoff at
 NP-hard search tractable for the candidate sets the filters leave).
 Returns the exact GED if <= tau, else ``tau + 1``.
 
+``GEDSearch`` is the resumable form the serving worklist uses
+(DESIGN.md §12): one instance holds the A* frontier for one
+(db graph, query, tau) pair, and ``run`` accepts an expansion budget
+and/or a wall-clock deadline — an undecided search keeps its heap and a
+later ``run`` continues exactly where it stopped, so verifier workers can
+timeslice expensive pairs and honor per-query deadlines without losing
+work.  ``min_f`` exposes the frontier's cheapest f-cost, the honest
+worklist priority of a partially-run search.
+
 ``ged_exact`` runs without cutoff (tiny graphs / tests).
 ``ged_bruteforce`` is an independent oracle by exhaustive enumeration over
 padded vertex bijections (tests only).
@@ -17,6 +26,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from collections import Counter
 from typing import Dict, List, Optional, Tuple
 
@@ -79,121 +89,191 @@ def _heuristic(g: Graph, h: Graph, order: List[int], k: int,
     return max(v_cost, 0) + max(e_cost, 0)
 
 
-def ged_upto(g: Graph, h: Graph, tau: int) -> int:
-    """Exact GED if <= tau, else tau + 1.  A* with cutoff pruning."""
-    order = _order_query_vertices(h)
-    h_edges = _edge_dict(h)
-    g_edges = _edge_dict(g)
-    g_vlab_all = Counter(int(x) for x in g.vlabels)
-    g_elab_all = Counter(int(x) for x in g.elabels)
+class GEDSearch:
+    """Resumable, budgeted A* deciding ``ged(g, h) <= tau`` (DESIGN.md §12).
 
-    # per-depth remaining h label multisets (precomputed suffix counters)
-    vlab_suffix: List[Counter] = [Counter() for _ in range(h.n + 1)]
-    for k in range(h.n - 1, -1, -1):
-        vlab_suffix[k] = vlab_suffix[k + 1].copy()
-        vlab_suffix[k][int(h.vlabels[order[k]])] += 1
-    # h edges become "scored" when their second endpoint is processed
-    pos_in_order = {v: i for i, v in enumerate(order)}
-    elab_suffix: List[Counter] = [Counter() for _ in range(h.n + 1)]
-    for k in range(h.n - 1, -1, -1):
-        elab_suffix[k] = elab_suffix[k + 1].copy()
-        u = order[k]
-        for (a, b), l in h_edges.items():
-            if max(pos_in_order[a], pos_in_order[b]) == k:
-                elab_suffix[k][l] += 1
+    ``run`` pops frontier states until the search decides, the expansion
+    budget runs out, or the wall-clock deadline passes; an undecided run
+    returns ``None`` and a later ``run`` resumes from the saved heap.  The
+    decision (exact GED if <= tau, else ``tau + 1``) is identical to the
+    unbudgeted search regardless of how the work was sliced.
+    """
 
-    # state: (f, cost, depth, used_g bitmask, mapping tuple)
-    start_h = _heuristic(g, h, order, 0, 0, vlab_suffix[0], elab_suffix[0],
-                         g_vlab_all, g_elab_all, Counter(), Counter())
-    if start_h > tau:
-        return tau + 1
-    def completion_cost(used_g: int) -> int:
+    __slots__ = ("g", "h", "tau", "order", "h_edges", "g_edges",
+                 "g_vlab_all", "g_elab_all", "vlab_suffix", "elab_suffix",
+                 "heap", "result", "expansions")
+
+    def __init__(self, g: Graph, h: Graph, tau: int):
+        self.g, self.h, self.tau = g, h, int(tau)
+        tau = self.tau
+        self.order = order = _order_query_vertices(h)
+        self.h_edges = h_edges = _edge_dict(h)
+        self.g_edges = _edge_dict(g)
+        self.g_vlab_all = Counter(int(x) for x in g.vlabels)
+        self.g_elab_all = Counter(int(x) for x in g.elabels)
+
+        # per-depth remaining h label multisets (precomputed suffix counters)
+        vlab_suffix: List[Counter] = [Counter() for _ in range(h.n + 1)]
+        for k in range(h.n - 1, -1, -1):
+            vlab_suffix[k] = vlab_suffix[k + 1].copy()
+            vlab_suffix[k][int(h.vlabels[order[k]])] += 1
+        # h edges become "scored" when their second endpoint is processed
+        pos_in_order = {v: i for i, v in enumerate(order)}
+        elab_suffix: List[Counter] = [Counter() for _ in range(h.n + 1)]
+        for k in range(h.n - 1, -1, -1):
+            elab_suffix[k] = elab_suffix[k + 1].copy()
+            for (a, b), l in h_edges.items():
+                if max(pos_in_order[a], pos_in_order[b]) == k:
+                    elab_suffix[k][l] += 1
+        self.vlab_suffix, self.elab_suffix = vlab_suffix, elab_suffix
+
+        self.expansions = 0
+        self.result: Optional[int] = None
+        self.heap: list = []
+        start_h = _heuristic(g, h, order, 0, 0, vlab_suffix[0],
+                             elab_suffix[0], self.g_vlab_all,
+                             self.g_elab_all, Counter(), Counter())
+        if start_h > tau:
+            self.result = tau + 1
+        elif h.n == 0:
+            c = self._completion_cost(0)
+            self.result = c if c <= tau else tau + 1
+        else:
+            # state: (f, cost, depth, used_g bitmask, mapping tuple)
+            self.heap = [(start_h, 0, 0, 0, ())]
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def min_f(self) -> int:
+        """Best lower bound on the final answer so far: the decision when
+        done, else the frontier's cheapest f-cost (the honest worklist
+        priority of a partially-run search)."""
+        if self.result is not None:
+            return self.result
+        return self.heap[0][0] if self.heap else self.tau + 1
+
+    def _completion_cost(self, used_g: int) -> int:
         """Insert the unmatched g vertices and all their incident edges."""
-        rem = [v for v in range(g.n) if not (used_g >> v) & 1]
+        rem = [v for v in range(self.g.n) if not (used_g >> v) & 1]
         total = len(rem)
         rem_set = set(rem)
-        for (a, b) in g_edges:
+        for (a, b) in self.g_edges:
             if a in rem_set or b in rem_set:
                 total += 1
         return total
 
-    if h.n == 0:
-        c = completion_cost(0)
-        return c if c <= tau else tau + 1
+    def run(self, max_expansions: Optional[int] = None,
+            deadline: Optional[float] = None) -> Optional[int]:
+        """Continue the search.  Returns the decision (exact GED if <= tau,
+        else ``tau + 1``), or ``None`` when the budget/deadline ran out
+        first (call ``run`` again to resume)."""
+        if self.result is not None:
+            return self.result
+        g, h, tau = self.g, self.h, self.tau
+        order, h_edges, g_edges = self.order, self.h_edges, self.g_edges
+        g_vlab_all, g_elab_all = self.g_vlab_all, self.g_elab_all
+        vlab_suffix, elab_suffix = self.vlab_suffix, self.elab_suffix
+        heap = self.heap
+        popped = 0
+        while heap:
+            if max_expansions is not None and popped >= max_expansions:
+                return None
+            if deadline is not None and time.perf_counter() >= deadline:
+                return None
+            f, cost, k, used_g, mapping = heapq.heappop(heap)
+            popped += 1
+            self.expansions += 1
+            if f > tau:
+                self.result = tau + 1
+                return self.result
+            if k == h.n:
+                self.result = cost  # completion cost folded in at push time
+                return self.result
+            u = order[k]
+            lu = int(h.vlabels[u])
+            # counters describing already-scored material (for the heuristic)
+            mapped_g_vlab = Counter(int(g.vlabels[v])
+                                    for v in mapping if v >= 0)
+            scored_g_edges: Counter = Counter()
+            mapped_pairs = [(order[i], mapping[i]) for i in range(k)
+                            if mapping[i] >= 0]
+            for i in range(len(mapped_pairs)):
+                for j in range(i + 1, len(mapped_pairs)):
+                    va, vb = mapped_pairs[i][1], mapped_pairs[j][1]
+                    a, b = (va, vb) if va < vb else (vb, va)
+                    if (a, b) in g_edges:
+                        scored_g_edges[g_edges[(a, b)]] += 1
 
-    heap = [(start_h, 0, 0, 0, ())]
-    while heap:
-        f, cost, k, used_g, mapping = heapq.heappop(heap)
-        if f > tau:
-            return tau + 1
-        if k == h.n:
-            return cost  # completion cost folded in at push time
-        u = order[k]
-        lu = int(h.vlabels[u])
-        # counters describing already-scored material (for the heuristic)
-        mapped_g_vlab = Counter(int(g.vlabels[v]) for v in mapping if v >= 0)
-        scored_g_edges: Counter = Counter()
-        mapped_pairs = [(order[i], mapping[i]) for i in range(k) if mapping[i] >= 0]
-        for i in range(len(mapped_pairs)):
-            for j in range(i + 1, len(mapped_pairs)):
-                va, vb = mapped_pairs[i][1], mapped_pairs[j][1]
-                a, b = (va, vb) if va < vb else (vb, va)
-                if (a, b) in g_edges:
-                    scored_g_edges[g_edges[(a, b)]] += 1
-
-        def edge_delta(v: int) -> int:
-            d = 0
-            for i in range(k):
-                uj, vj = order[i], mapping[i]
-                a, b = (u, uj) if u < uj else (uj, u)
-                hl = h_edges.get((a, b))
-                if v < 0 or vj < 0:
-                    if hl is not None:
-                        d += 1  # edge to a deleted endpoint must be deleted
-                    continue
-                ga, gb = (v, vj) if v < vj else (vj, v)
-                gl = g_edges.get((ga, gb))
-                if hl is not None and gl is not None:
-                    d += int(hl != gl)
-                elif hl is not None or gl is not None:
-                    d += 1
-            return d
-
-        children = []
-        for v in range(g.n):
-            if (used_g >> v) & 1:
-                continue
-            c = cost + int(lu != int(g.vlabels[v])) + edge_delta(v)
-            children.append((c, v))
-        children.append((cost + 1 + edge_delta(-1), -1))  # deletion
-
-        for c, v in children:
-            if c > tau:
-                continue
-            new_used = used_g | (1 << v) if v >= 0 else used_g
-            new_mapping = mapping + (v,)
-            m_vlab = mapped_g_vlab.copy()
-            s_edges = scored_g_edges.copy()
-            if v >= 0:
-                m_vlab[int(g.vlabels[v])] += 1
+            def edge_delta(v: int) -> int:
+                d = 0
                 for i in range(k):
-                    vj = mapping[i]
-                    if vj >= 0:
-                        a, b = (v, vj) if v < vj else (vj, v)
-                        if (a, b) in g_edges:
-                            s_edges[g_edges[(a, b)]] += 1
-            if k + 1 == h.n:
-                total = c + completion_cost(new_used)
-                if total <= tau:
-                    heapq.heappush(heap, (total, total, k + 1, new_used,
+                    uj, vj = order[i], mapping[i]
+                    a, b = (u, uj) if u < uj else (uj, u)
+                    hl = h_edges.get((a, b))
+                    if v < 0 or vj < 0:
+                        if hl is not None:
+                            d += 1  # edge to a deleted endpoint gets deleted
+                        continue
+                    ga, gb = (v, vj) if v < vj else (vj, v)
+                    gl = g_edges.get((ga, gb))
+                    if hl is not None and gl is not None:
+                        d += int(hl != gl)
+                    elif hl is not None or gl is not None:
+                        d += 1
+                return d
+
+            children = []
+            for v in range(g.n):
+                if (used_g >> v) & 1:
+                    continue
+                c = cost + int(lu != int(g.vlabels[v])) + edge_delta(v)
+                children.append((c, v))
+            children.append((cost + 1 + edge_delta(-1), -1))  # deletion
+
+            for c, v in children:
+                if c > tau:
+                    continue
+                new_used = used_g | (1 << v) if v >= 0 else used_g
+                new_mapping = mapping + (v,)
+                m_vlab = mapped_g_vlab.copy()
+                s_edges = scored_g_edges.copy()
+                if v >= 0:
+                    m_vlab[int(g.vlabels[v])] += 1
+                    for i in range(k):
+                        vj = mapping[i]
+                        if vj >= 0:
+                            a, b = (v, vj) if v < vj else (vj, v)
+                            if (a, b) in g_edges:
+                                s_edges[g_edges[(a, b)]] += 1
+                if k + 1 == h.n:
+                    total = c + self._completion_cost(new_used)
+                    if total <= tau:
+                        heapq.heappush(heap, (total, total, k + 1, new_used,
+                                              new_mapping))
+                    continue
+                hh = _heuristic(g, h, order, k + 1, new_used,
+                                vlab_suffix[k + 1], elab_suffix[k + 1],
+                                g_vlab_all, g_elab_all, m_vlab, s_edges)
+                if c + hh <= tau:
+                    heapq.heappush(heap, (c + hh, c, k + 1, new_used,
                                           new_mapping))
-                continue
-            hh = _heuristic(g, h, order, k + 1, new_used, vlab_suffix[k + 1],
-                            elab_suffix[k + 1], g_vlab_all, g_elab_all,
-                            m_vlab, s_edges)
-            if c + hh <= tau:
-                heapq.heappush(heap, (c + hh, c, k + 1, new_used, new_mapping))
-    return tau + 1
+        self.result = tau + 1
+        return self.result
+
+
+def ged_upto(g: Graph, h: Graph, tau: int, *,
+             max_expansions: Optional[int] = None,
+             deadline: Optional[float] = None) -> Optional[int]:
+    """Exact GED if <= tau, else tau + 1.  A* with cutoff pruning.
+
+    With a budget (``max_expansions`` heap pops and/or an absolute
+    ``deadline`` from ``time.perf_counter()``), returns ``None`` when the
+    budget ran out before the search decided — resume via ``GEDSearch``.
+    """
+    return GEDSearch(g, h, tau).run(max_expansions=max_expansions,
+                                    deadline=deadline)
 
 
 def ged_exact(g: Graph, h: Graph) -> int:

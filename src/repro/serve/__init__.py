@@ -1,6 +1,10 @@
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
-                                      ShardedGraphQueryEngine)
+                                      ShardedGraphQueryEngine,
+                                      VerifyScheduler)
+from repro.serve.pipeline import (AsyncGraphQueryEngine, QueryTicket,
+                                  as_completed)
 
 __all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine",
-           "ShardedGraphQueryEngine"]
+           "ShardedGraphQueryEngine", "VerifyScheduler",
+           "AsyncGraphQueryEngine", "QueryTicket", "as_completed"]

@@ -15,39 +15,51 @@ Answers a batch of (query graph, tau) requests over any ``CandidateSource``
      one host; the ``distributed`` backend runs it inside shard_map per
      device and all-gathers fixed-size top-k candidate blocks),
   4. **worklist**: candidate blocks from all queries drain into one shared
-     verification worklist, cheapest-candidate-first through ``ged_upto``
-     (low filter bounds are both likelier matches and cheaper A* runs, so
-     early results stream out first).
+     ``VerifyScheduler`` — a cheapest-candidate-first priority worklist
+     through ``ged_upto`` (low filter bounds are both likelier matches and
+     cheaper A* runs, so early results stream out first).  ``submit``
+     drains it inline, the one-worker special case;
+     ``serve.pipeline.AsyncGraphQueryEngine`` runs a verifier pool against
+     the same scheduler and overlaps stage 4 with the next batch's filter
+     pass (DESIGN.md §12).
 
 Repeat queries hit two LRU caches: query *encodings* (the q-gram
 ``QueryTuple``, reusable across taus) and whole *results* (exact
-(graph, tau, verify) hits).  The single-query ``query()`` is a thin
+(graph, tau, verify) hits, replayed with ``cache_hit`` tagged in stats and
+the stale timings zeroed).  The single-query ``query()`` is a thin
 wrapper over a one-element batch.
 """
 from __future__ import annotations
 
+import heapq
 import inspect
+import itertools
+import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field, replace
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
 from repro.core.engine import CandidateSource, resolve_backend
 from repro.core.search import QueryResult
 from repro.core.tree import QueryTuple
-from repro.core.verify import ged_upto
+from repro.core.verify import GEDSearch
 from repro.graphs.graph import Graph
 
 
 @dataclass
 class GraphQuery:
-    """One similarity-search request."""
+    """One similarity-search request.  ``deadline_s`` (seconds, relative
+    to worklist admission) bounds verification: expired candidate pairs
+    are skipped and the result is flagged ``partial`` in stats — recall
+    safe, because the candidate list is never truncated (DESIGN.md §12)."""
 
     graph: Graph
     tau: int
     verify: bool = True
+    deadline_s: Optional[float] = None
 
 
 def _graph_key(g: Graph) -> bytes:
@@ -59,25 +71,210 @@ def _graph_key(g: Graph) -> bytes:
 
 
 class _LRU:
+    """Tiny LRU with a lock: the async pipeline reads from its admission
+    thread while verifier workers publish finished results."""
+
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key):
-        if key in self._d:
-            self._d.move_to_end(key)
-            self.hits += 1
-            return self._d[key]
-        self.misses += 1
-        return None
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
 
     def put(self, key, value) -> None:
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+
+class VerifyJob:
+    """One query's verification context on the shared worklist."""
+
+    __slots__ = ("graph", "tau", "deadline", "remaining", "matches",
+                 "verify_s", "unverified", "on_match", "on_done", "token")
+
+    def __init__(self, graph: Graph, tau: int, deadline: Optional[float],
+                 token=None, on_match=None, on_done=None):
+        self.graph = graph
+        self.tau = int(tau)
+        self.deadline = deadline
+        self.remaining = 0
+        self.matches: List[Tuple[int, int]] = []
+        self.verify_s = 0.0
+        self.unverified = 0
+        self.on_match = on_match
+        self.on_done = on_done
+        self.token = token
+
+
+class VerifyScheduler:
+    """Stage 4: the shared cheapest-first GED worklist (DESIGN.md §12).
+
+    One priority heap of ``(bound, seq, job, gid, search)`` items across
+    every in-flight query.  ``GraphQueryEngine.submit`` drains it inline
+    on the calling thread — the one-worker special case — while
+    ``AsyncGraphQueryEngine`` runs N verifier threads against the same
+    pop/run loop, so both paths share ordering, deadline handling and
+    accounting.
+
+    Per-pair A* runs are budgeted (``slice_expansions``) and *resumable*:
+    an undecided ``GEDSearch`` is re-pushed at its improved frontier bound
+    (``min_f``), which keeps the heap honestly cheapest-first as bounds
+    tighten and lets many expensive pairs timeslice one worker.  A pair
+    popped (or interrupted) past its job's deadline is counted
+    ``unverified`` instead of run — the caller flags the query partial,
+    never drops candidates.
+    """
+
+    def __init__(self, db, slice_expansions: Optional[int] = None,
+                 interval_sink: Optional[List[Tuple[float, float]]] = None):
+        self.db = db
+        # <= 0 means unbudgeted: a zero-pop slice would make GEDSearch.run
+        # return undecided with no progress and the re-push loop livelock
+        self.slice_expansions = (int(slice_expansions)
+                                 if slice_expansions and slice_expansions > 0
+                                 else None)
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._interval_sink = interval_sink
+        self.stats: Dict[str, int] = {
+            "verified_pairs": 0, "expired_pairs": 0, "resumed_runs": 0}
+
+    # ---- producer side -----------------------------------------------------
+    def add_job(self, graph: Graph, tau: int, ids: Sequence[int],
+                bounds: Sequence[int], *, deadline: Optional[float] = None,
+                token=None, on_match: Optional[Callable] = None,
+                on_done: Optional[Callable] = None) -> VerifyJob:
+        """Enqueue one query's candidate pairs (cheapest bound first is
+        the heap's job).  ``on_done`` fires exactly once, on the thread
+        that retires the query's last pair (immediately, on the calling
+        thread, for candidate-less queries)."""
+        job = VerifyJob(graph, tau, deadline, token=token,
+                        on_match=on_match, on_done=on_done)
+        job.remaining = len(ids)
+        if not ids:
+            if on_done is not None:
+                on_done(job)
+            return job
+        with self._cv:
+            for b, gid in zip(bounds, ids):
+                heapq.heappush(self._heap,
+                               (int(b), next(self._seq), job, int(gid), None))
+            self._cv.notify_all()
+        return job
+
+    def close(self) -> None:
+        """No more jobs will be added: workers exit once the heap drains."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    # ---- consumer side -----------------------------------------------------
+    def _pop(self, block: bool):
+        with self._cv:
+            while True:
+                if self._heap:
+                    return heapq.heappop(self._heap)
+                if not block or self._closed:
+                    return None
+                self._cv.wait()
+
+    def run_until_idle(self) -> None:
+        """Drain inline on the calling thread (the sync one-worker case)."""
+        while True:
+            item = self._pop(block=False)
+            if item is None:
+                return
+            self._run_item(item)
+
+    def worker_loop(self) -> None:
+        """Blocking drain for pool threads; returns after ``close()`` once
+        the heap is empty."""
+        while True:
+            item = self._pop(block=True)
+            if item is None:
+                return
+            self._run_item(item)
+
+    def _run_item(self, item) -> None:
+        """Run one pair.  Contained like the filter stage: an exception
+        anywhere in the A*/delivery path counts the pair unverified and
+        still retires it — a raising pair must never kill a verifier
+        thread or leave its query's countdown stuck (DESIGN.md §12)."""
+        bound, _seq, job, gid, search = item
+        finish = True
+        try:
+            t0 = time.perf_counter()
+            if job.deadline is not None and t0 >= job.deadline:
+                with self._cv:
+                    job.unverified += 1
+                    self.stats["expired_pairs"] += 1
+                return
+            if search is None:
+                search = GEDSearch(self.db[gid], job.graph, job.tau)
+            else:
+                with self._cv:
+                    self.stats["resumed_runs"] += 1
+            d = search.run(max_expansions=self.slice_expansions,
+                           deadline=job.deadline)
+            t1 = time.perf_counter()
+            with self._cv:
+                job.verify_s += t1 - t0
+                if self._interval_sink is not None:
+                    self._interval_sink.append((t0, t1))
+            if d is None:
+                if job.deadline is not None and t1 >= job.deadline:
+                    with self._cv:
+                        job.unverified += 1
+                        self.stats["expired_pairs"] += 1
+                    return
+                # timesliced: resume later at the improved frontier bound
+                with self._cv:
+                    heapq.heappush(self._heap,
+                                   (max(int(bound), search.min_f()),
+                                    next(self._seq), job, gid, search))
+                    self._cv.notify()
+                finish = False
+                return
+            with self._cv:
+                self.stats["verified_pairs"] += 1
+                if d <= job.tau:
+                    job.matches.append((gid, d))
+            if d <= job.tau and job.on_match is not None:
+                job.on_match(job, gid, d)
+        except Exception:               # noqa: BLE001 — stage containment
+            with self._cv:
+                job.unverified += 1
+                self.stats["error_pairs"] = self.stats.get(
+                    "error_pairs", 0) + 1
+        finally:
+            if finish:
+                self._finish_one(job)
+
+    def _finish_one(self, job: VerifyJob) -> None:
+        with self._cv:
+            job.remaining -= 1
+            done = job.remaining == 0
+        if done and job.on_done is not None:
+            try:
+                job.on_done(job)
+            except Exception:           # noqa: BLE001 — last-resort guard:
+                pass                    # delivery errors must not kill the
+                                        # worker (on_done resolves its own
+                                        # ticket with the error first)
 
 
 class GraphQueryEngine:
@@ -86,16 +283,18 @@ class GraphQueryEngine:
     def __init__(self, source: CandidateSource, backend: str = "auto",
                  encoding_cache_size: int = 1024,
                  result_cache_size: int = 256, slab_layout: str = "dense",
-                 hot_d: Optional[int] = None):
+                 hot_d: Optional[int] = None,
+                 hot_mass: Optional[float] = None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
         self.slab_layout = slab_layout
         self.hot_d = hot_d
+        self.hot_mass = hot_mass
         self._enc_cache = _LRU(encoding_cache_size)
         self._res_cache = _LRU(result_cache_size)
         self.stats: Dict[str, float] = {
             "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
-            "verified_pairs": 0}
+            "verified_pairs": 0, "expired_pairs": 0, "cache_hits": 0}
 
     # ---- encoding cache ----------------------------------------------------
     def _qtuple(self, g: Graph) -> Tuple[bytes, QueryTuple]:
@@ -116,16 +315,20 @@ class GraphQueryEngine:
         if "slab" in params:        # nor a FilterSlab layout
             kwargs["slab"] = self.slab_layout
             kwargs["hot_d"] = self.hot_d
+        if "hot_mass" in params:
+            kwargs["hot_mass"] = self.hot_mass
         return self.source.batched_candidates(graphs, taus, **kwargs)
 
-    # ---- the batched path --------------------------------------------------
-    def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
-        """Answer a batch; results align with ``requests`` order."""
-        self.stats["batches"] += 1
-        self.stats["queries"] += len(requests)
-        results: List[Optional[QueryResult]] = [None] * len(requests)
+    # ---- shared stages (submit composes them inline; the async pipeline
+    # runs them across threads — DESIGN.md §12) ------------------------------
+    def _admit(self, requests: Sequence[GraphQuery]):
+        """Stage 0: result-cache replay + in-batch duplicate coalescing.
 
-        # whole-result cache + encoding cache + in-batch duplicate coalescing
+        Returns (results, fresh, aliases, keys, qtuples); ``results`` has
+        cache hits already resolved — tagged ``cache_hit`` with the stale
+        per-query timings zeroed, so replayed stats are never mistaken
+        for fresh filter/verify work."""
+        results: List[Optional[QueryResult]] = [None] * len(requests)
         fresh: List[int] = []
         aliases: List[Tuple[int, int]] = []      # (request idx, source idx)
         pending: Dict[Tuple, int] = {}
@@ -136,64 +339,101 @@ class GraphQueryEngine:
             k3 = (key, int(r.tau), bool(r.verify))
             hit = self._res_cache.get(k3)
             if hit is not None:
-                results[i] = hit
-            elif k3 in pending:
-                aliases.append((i, pending[k3]))  # duplicate in this batch
+                # cached results are always complete (partials are never
+                # cached), so a deadline-carrying request may take them too
+                self.stats["cache_hits"] += 1
+                results[i] = replace(
+                    hit, filter_time_s=0.0, verify_time_s=0.0,
+                    stats={**hit.stats, "cache_hit": 1})
+                continue
+            # in-batch coalescing must also match on the deadline: a
+            # deadline-free duplicate aliased to a deadline-carrying one
+            # would silently inherit its partial (recall-lossy) result
+            k4 = k3 + (r.deadline_s,)
+            if k4 in pending:
+                aliases.append((i, pending[k4]))  # duplicate in this batch
             else:
-                pending[k3] = i
+                pending[k4] = i
                 fresh.append(i)
                 keys[i] = key
                 qtuples[i] = qt
-        if not fresh:
-            return results  # type: ignore[return-value]
+        return results, fresh, aliases, keys, qtuples
 
-        graphs = [requests[i].graph for i in fresh]
-        taus = [int(requests[i].tau) for i in fresh]
+    def _cache_result(self, key: bytes, request: GraphQuery,
+                      res: QueryResult) -> None:
+        self._res_cache.put((key, int(request.tau), bool(request.verify)),
+                            res)
 
-        # stages 1-3: bucket, shard the slab, filter (source-specific)
-        t0 = time.perf_counter()
-        batch = self._batched_candidates(graphs, taus,
-                                         [qtuples[i] for i in fresh])
-        t1 = time.perf_counter()
-        self.stats["filter_s"] += t1 - t0
+    @staticmethod
+    def _job_bounds(batch, row: int) -> List[int]:
+        bnd = batch.bounds[row]
+        if bnd is None:                      # tree sources carry no bounds
+            return [0] * len(batch.ids[row])
+        return [int(b) for b in bnd]
 
-        # stage 4: shared verification worklist, cheapest candidate first
-        matches: List[List[Tuple[int, int]]] = [[] for _ in fresh]
-        verify_s = [0.0] * len(fresh)
-        work: List[Tuple[int, int, int]] = []      # (bound, row, gid)
-        for row, i in enumerate(fresh):
-            if not requests[i].verify:
-                continue
-            bnd = batch.bounds[row]
-            for k, gid in enumerate(batch.ids[row]):
-                b = int(bnd[k]) if bnd is not None else 0
-                work.append((b, row, gid))
-        work.sort()
-        db = self.source.db
-        for b, row, gid in work:
-            tv0 = time.perf_counter()
-            d = ged_upto(db[gid], graphs[row], taus[row])
-            verify_s[row] += time.perf_counter() - tv0
-            if d <= taus[row]:
-                matches[row].append((gid, d))
-        self.stats["verify_s"] += sum(verify_s)
-        self.stats["verified_pairs"] += len(work)
+    @staticmethod
+    def _assemble(cand: List[int], job: Optional[VerifyJob], n_db: int,
+                  per_q_filter: float) -> QueryResult:
+        stats: Dict[str, int] = {"batched": 1}
+        matches: List[Tuple[int, int]] = []
+        verify_s = 0.0
+        if job is not None:
+            matches = sorted(job.matches)
+            verify_s = job.verify_s
+            if job.unverified:
+                # deadline fired: matches may be incomplete but candidates
+                # are untouched — recall-safe partial (DESIGN.md §12)
+                stats["partial"] = 1
+                stats["unverified"] = job.unverified
+        return QueryResult(
+            candidates=cand, matches=matches, n_filtered=n_db - len(cand),
+            filter_time_s=per_q_filter, verify_time_s=verify_s, stats=stats)
 
-        n_db = len(db)
-        per_q_filter = (t1 - t0) / max(len(fresh), 1)
-        for row, i in enumerate(fresh):
-            cand = batch.ids[row]
-            res = QueryResult(
-                candidates=cand,
-                matches=sorted(matches[row]),
-                n_filtered=n_db - len(cand),
-                filter_time_s=per_q_filter,
-                verify_time_s=verify_s[row],
-                stats={"batched": 1},
-            )
-            results[i] = res
-            self._res_cache.put(
-                (keys[i], taus[row], bool(requests[i].verify)), res)
+    # ---- the batched path --------------------------------------------------
+    def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
+        """Answer a batch; results align with ``requests`` order."""
+        self.stats["batches"] += 1
+        self.stats["queries"] += len(requests)
+        results, fresh, aliases, keys, qtuples = self._admit(requests)
+        if fresh:
+            graphs = [requests[i].graph for i in fresh]
+            taus = [int(requests[i].tau) for i in fresh]
+
+            # stages 1-3: bucket, shard the slab, filter (source-specific)
+            t0 = time.perf_counter()
+            batch = self._batched_candidates(graphs, taus,
+                                             [qtuples[i] for i in fresh])
+            t1 = time.perf_counter()
+            self.stats["filter_s"] += t1 - t0
+
+            # stage 4: shared verification worklist, cheapest pair first
+            sched = VerifyScheduler(self.source.db)
+            now = time.perf_counter()
+            jobs: Dict[int, VerifyJob] = {}
+            for row, i in enumerate(fresh):
+                r = requests[i]
+                if not r.verify:
+                    continue
+                deadline = (None if r.deadline_s is None
+                            else now + float(r.deadline_s))
+                jobs[row] = sched.add_job(
+                    r.graph, taus[row], batch.ids[row],
+                    self._job_bounds(batch, row), deadline=deadline)
+            sched.run_until_idle()   # the one-worker special case
+            self.stats["verify_s"] += sum(j.verify_s for j in jobs.values())
+            self.stats["verified_pairs"] += sched.stats["verified_pairs"]
+            self.stats["expired_pairs"] += sched.stats["expired_pairs"]
+
+            n_db = len(self.source.db)
+            per_q_filter = (t1 - t0) / max(len(fresh), 1)
+            for row, i in enumerate(fresh):
+                job = jobs.get(row)
+                res = self._assemble(batch.ids[row], job, n_db, per_q_filter)
+                results[i] = res
+                # deadline-partial results are never cached: a later query
+                # without the deadline must not replay incomplete matches
+                if job is None or not job.unverified:
+                    self._cache_result(keys[i], requests[i], res)
         # resolve from results, not the cache: small caches may already
         # have evicted the entry by the time the batch finishes
         for i, src in aliases:
@@ -240,21 +480,22 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
     def __init__(self, source: CandidateSource, mesh, layout: str = "graph",
                  k: int = 256, shard_pad: int = 512,
                  slab_layout: str = "dense", hot_d: Optional[int] = None,
-                 **kw):
+                 hot_mass: Optional[float] = None, **kw):
         for attr in ("enc", "set_filter_eval"):
             if not hasattr(source, attr):
                 raise TypeError(
                     "ShardedGraphQueryEngine needs a flat-style source "
                     "(FlatMSQIndex); tree sources have no slab arrays")
         super().__init__(source, backend="distributed",
-                         slab_layout=slab_layout, hot_d=hot_d, **kw)
+                         slab_layout=slab_layout, hot_d=hot_d,
+                         hot_mass=hot_mass, **kw)
         from repro.core.engine import BatchedFilterEval
         self.mesh = mesh
         self.layout = layout
         self.evaluator = BatchedFilterEval(
             source.db, source.enc, source.partition, backend="distributed",
             mesh=mesh, layout=layout, k=k, shard_pad=shard_pad,
-            slab=slab_layout, hot_d=hot_d)
+            slab=slab_layout, hot_d=hot_d, hot_mass=hot_mass)
         # also visible to plain GraphQueryEngine(source, "distributed") users
         source.set_filter_eval("distributed", self.evaluator)
 
@@ -263,9 +504,13 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
                     **kw) -> "ShardedGraphQueryEngine":
         """Layouts/top-k from an MSQConfig (msq_pubchem defaults to the
         vocab-sharded layout and the hot slab for its wide q-gram
-        vocabulary)."""
+        vocabulary).  A config ``hot_mass`` overrides the fixed ``hot_d``
+        width — H is then picked from the dataset's q-gram mass."""
+        hm = getattr(cfg, "hot_mass", None)
         kw.setdefault("slab_layout", getattr(cfg, "slab_layout", "dense"))
-        kw.setdefault("hot_d", getattr(cfg, "hot_d", None))
+        kw.setdefault("hot_mass", hm)
+        kw.setdefault("hot_d",
+                      None if hm is not None else getattr(cfg, "hot_d", None))
         return cls(source, mesh,
                    layout=getattr(cfg, "sharded_layout", "graph"),
                    k=int(getattr(cfg, "shard_topk", 256)), **kw)

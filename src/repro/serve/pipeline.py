@@ -1,0 +1,372 @@
+"""Async pipelined serving: overlap device filtering with the host GED
+worklist and stream matches cheapest-first (DESIGN.md §12).
+
+``GraphQueryEngine.submit`` is strictly serial: the device sits idle while
+host A* drains the verification worklist, and callers see nothing until
+the whole batch completes — yet verification dominates end-to-end time on
+every benchmarked config.  ``AsyncGraphQueryEngine`` decomposes serving
+into pipelined stages, each on its own thread(s), none blocking another:
+
+    submit() ──► admission inbox ──► dynamic batch former (size/deadline)
+             ──► device filter pass (the wrapped engine's stages 1-3: any
+                 backend / FilterSlab layout / ShardedGraphQueryEngine's
+                 shard_map path)  [one admission+filter thread]
+             ──► shared VerifyScheduler worklist (cheapest filter bound
+                 first, budgeted/resumable A*)  [N verifier threads]
+             ──► per-query QueryTicket futures + incremental match streams
+
+While the verifier pool drains batch k's worklist, the filter thread is
+already running batch k+1's device pass.  With no deadlines, a completed
+ticket's result is **bit-identical** to ``engine.submit`` (same
+candidates, same matches): the filter path and the A* are shared code and
+match *sets* don't depend on worker count or completion order — only the
+timing stats differ.  Per-query deadlines produce recall-safe partials:
+candidates are never truncated, unverified pairs are counted and the
+result is flagged ``partial`` (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.search import QueryResult
+from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
+                                      VerifyScheduler)
+
+_DONE = object()                     # stream sentinel
+
+
+class QueryTicket:
+    """Per-query future plus an incremental match stream."""
+
+    def __init__(self, request: GraphQuery):
+        self.request = request
+        self._events: "queue.Queue" = queue.Queue()
+        self._done = threading.Event()
+        self._result: Optional[QueryResult] = None
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._resolved = False
+        self._callbacks: List = []        # fn(result_or_None, error_or_None)
+        self._streamed_live = False
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> QueryResult:
+        """Block until the query completes (its last candidate pair is
+        verified, expired, or it resolved from cache).  Re-raises the
+        pipeline-stage exception if this query's batch failed."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("query still in the pipeline past timeout")
+        if self._error is not None:
+            raise self._error
+        return self._result  # type: ignore[return-value]
+
+    def stream(self, timeout: Optional[float] = None
+               ) -> Iterator[Tuple[int, int]]:
+        """Yield ``(graph id, ged)`` matches as A* confirms them —
+        cheapest filter bound first, before the query completes.  Ends
+        when the query resolves; ``timeout`` bounds each wait
+        (``TimeoutError``, same contract as ``result``)."""
+        while True:
+            try:
+                ev = self._events.get(timeout=timeout)
+            except queue.Empty:
+                raise TimeoutError(
+                    "no match or completion within timeout") from None
+            if ev is _DONE:
+                if self._error is not None:
+                    raise self._error
+                return
+            yield ev
+
+    def add_done_callback(self, fn) -> None:
+        """``fn(result)`` on the resolving thread (immediately if done;
+        ``result`` is None when the query's batch failed)."""
+        self._add_callback(lambda res, err: fn(res))
+
+    # ---- resolution (engine-internal) --------------------------------------
+    def _add_callback(self, fn) -> None:
+        with self._lock:
+            if not self._resolved:
+                self._callbacks.append(fn)
+                return
+        fn(self._result, self._error)
+
+    def _push_match(self, gid: int, d: int) -> None:
+        self._streamed_live = True
+        self._events.put((gid, d))
+
+    def _resolve(self, result: Optional[QueryResult],
+                 error: Optional[BaseException] = None) -> bool:
+        """First resolution wins (idempotent — a failed batch's blanket
+        error resolution must not fight a scheduler completion)."""
+        with self._lock:
+            if self._resolved:
+                return False
+            self._resolved = True
+            self._result = result
+            self._error = error
+            callbacks, self._callbacks = self._callbacks, []
+        if error is None and not self._streamed_live:
+            # cache hit / alias / verify=False: stream the final matches
+            for m in result.matches:
+                self._events.put(tuple(m))
+        self._events.put(_DONE)
+        self._done.set()
+        for fn in callbacks:
+            try:
+                fn(result, error)
+            except Exception:        # noqa: BLE001 — a raising user
+                pass                 # callback must not kill the
+                                     # delivering verifier thread
+        return True
+
+
+def as_completed(tickets: Sequence[QueryTicket],
+                 timeout: Optional[float] = None
+                 ) -> Iterator[Tuple[int, QueryResult]]:
+    """Yield ``(index, result)`` in completion order (earliest-finished
+    first — typically the cheapest worklists).  ``timeout`` bounds each
+    wait (``TimeoutError``); a failed ticket re-raises its error when
+    reached."""
+    q: "queue.Queue" = queue.Queue()
+    for idx, t in enumerate(tickets):
+        t._add_callback(lambda res, err, i=idx: q.put((i, res, err)))
+    for _ in tickets:
+        try:
+            i, res, err = q.get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError(
+                "no query completed within timeout") from None
+        if err is not None:
+            raise err
+        yield i, res
+
+
+class AsyncGraphQueryEngine:
+    """Pipelined front-end over a ``GraphQueryEngine`` (incl. the sharded
+    engine): request queue, dynamic batch former, device filter stage,
+    verifier worker pool, streaming delivery (DESIGN.md §12).
+
+    The wrapped engine supplies the source, backend, FilterSlab layout,
+    and both LRU caches — the async path reuses its ``_admit`` /
+    ``_batched_candidates`` / ``_assemble`` stages verbatim, which is what
+    makes the no-deadline bit-identical invariant hold by construction.
+    Don't call ``engine.submit`` concurrently with an open pipeline; wrap
+    it instead.
+
+    * ``max_batch`` / ``max_delay_s``: admission — a batch forms when
+      ``max_batch`` requests are waiting or the oldest has waited
+      ``max_delay_s``, whichever is first.
+    * ``num_workers``: verifier threads draining the shared worklist.
+    * ``slice_expansions``: A* timeslice (heap pops) per worklist run;
+      undecided searches re-queue at their improved frontier bound.
+    * ``default_deadline_s``: verification deadline applied to requests
+      that don't carry their own ``deadline_s``.
+    * ``record_intervals``: collect per-stage (start, end) busy spans in
+      ``filter_intervals`` / ``verify_intervals`` for overlap accounting
+      (``benchmarks/query_throughput.py --pipeline``).
+    """
+
+    def __init__(self, engine: GraphQueryEngine, *, max_batch: int = 32,
+                 max_delay_s: float = 0.005, num_workers: int = 2,
+                 slice_expansions: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 record_intervals: bool = False, name: str = "apipe"):
+        self.engine = engine
+        self.max_batch = max(1, int(max_batch))
+        self.max_delay_s = float(max_delay_s)
+        self.default_deadline_s = default_deadline_s
+        self.filter_intervals: List[Tuple[float, float]] = []
+        self.verify_intervals: List[Tuple[float, float]] = []
+        self.scheduler = VerifyScheduler(
+            engine.source.db, slice_expansions=slice_expansions,
+            interval_sink=self.verify_intervals if record_intervals else None)
+        self._record_intervals = record_intervals
+        self._cv = threading.Condition()
+        self._inbox: "deque[Tuple[float, QueryTicket]]" = deque()
+        self._outstanding = 0
+        self._closing = False
+        self._closed = False
+        self._filter_thread = threading.Thread(
+            target=self._filter_loop, name=f"{name}-filter", daemon=True)
+        self._workers = [
+            threading.Thread(target=self.scheduler.worker_loop,
+                             name=f"{name}-verify-{w}", daemon=True)
+            for w in range(max(1, int(num_workers)))]
+        self._filter_thread.start()
+        for w in self._workers:
+            w.start()
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, request: GraphQuery) -> QueryTicket:
+        return self.submit_many([request])[0]
+
+    def submit_many(self, requests: Sequence[GraphQuery]
+                    ) -> List[QueryTicket]:
+        tickets = [QueryTicket(r) for r in requests]
+        now = time.perf_counter()
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("AsyncGraphQueryEngine is closed")
+            for t in tickets:
+                self._inbox.append((now, t))
+            self._outstanding += len(tickets)
+            self._cv.notify_all()
+        return tickets
+
+    # ---- lifecycle ---------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted query has resolved."""
+        end = None if timeout is None else time.perf_counter() + timeout
+        with self._cv:
+            while self._outstanding > 0:
+                left = None if end is None else end - time.perf_counter()
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"{self._outstanding} queries still in flight")
+                self._cv.wait(left)
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Stop admission, drain in-flight work, stop every thread.  Even
+        when the drain times out, the scheduler is closed and workers are
+        joined (``finally``) so a wedged pipeline never parks verifier
+        threads forever; ``close`` stays retryable until every thread has
+        actually exited."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closing = True
+            self._cv.notify_all()
+        try:
+            self._filter_thread.join(timeout)
+            self.drain(timeout)
+        finally:
+            self.scheduler.close()   # workers exit once the heap is empty
+            for w in self._workers:
+                w.join(timeout)
+            self._closed = not any(
+                t.is_alive() for t in [self._filter_thread, *self._workers])
+
+    def __enter__(self) -> "AsyncGraphQueryEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def stats(self) -> dict:
+        """Wrapped-engine counters plus the shared worklist's."""
+        s = dict(self.engine.stats)
+        s.update(self.scheduler.stats)
+        return s
+
+    # ---- stage: dynamic batch former + device filter -----------------------
+    def _filter_loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._process_batch(batch)
+            except Exception as e:      # noqa: BLE001 — stage containment
+                # a failed admission/filter pass must not kill the filter
+                # thread (that would hang every future ticket): fail this
+                # batch's unresolved tickets with the error and keep going
+                for t in batch:
+                    self._finish(t, None, e)
+
+    def _next_batch(self) -> Optional[List[QueryTicket]]:
+        """Size/deadline admission: wait for ``max_batch`` requests or an
+        oldest-request age of ``max_delay_s`` (close flushes what's left)."""
+        with self._cv:
+            while True:
+                if self._inbox:
+                    age = time.perf_counter() - self._inbox[0][0]
+                    if (len(self._inbox) >= self.max_batch
+                            or age >= self.max_delay_s or self._closing):
+                        n = min(len(self._inbox), self.max_batch)
+                        return [self._inbox.popleft()[1] for _ in range(n)]
+                    self._cv.wait(self.max_delay_s - age)
+                elif self._closing:
+                    return None
+                else:
+                    self._cv.wait()
+
+    def _process_batch(self, tickets: List[QueryTicket]) -> None:
+        eng = self.engine
+        requests = [t.request for t in tickets]
+        eng.stats["batches"] += 1
+        eng.stats["queries"] += len(requests)
+        results, fresh, aliases, keys, qtuples = eng._admit(requests)
+        # cache hits resolve immediately — no pipeline latency at all
+        for i, res in enumerate(results):
+            if res is not None:
+                self._finish(tickets[i], res)
+        # in-batch duplicates follow their source ticket (errors included)
+        for i, src in aliases:
+            tickets[src]._add_callback(
+                lambda res, err, t=tickets[i]: self._finish(t, res, err))
+        if not fresh:
+            return
+
+        graphs = [requests[i].graph for i in fresh]
+        taus = [int(requests[i].tau) for i in fresh]
+        t0 = time.perf_counter()
+        batch = eng._batched_candidates(graphs, taus,
+                                        [qtuples[i] for i in fresh])
+        t1 = time.perf_counter()
+        eng.stats["filter_s"] += t1 - t0
+        if self._record_intervals:
+            self.filter_intervals.append((t0, t1))
+
+        n_db = len(eng.source.db)
+        per_q_filter = (t1 - t0) / max(len(fresh), 1)
+        now = time.perf_counter()
+        for row, i in enumerate(fresh):
+            ticket, r = tickets[i], requests[i]
+            cand = batch.ids[row]
+            if not r.verify:
+                res = eng._assemble(cand, None, n_db, per_q_filter)
+                eng._cache_result(keys[i], r, res)
+                self._finish(ticket, res)
+                continue
+            dl_s = (r.deadline_s if r.deadline_s is not None
+                    else self.default_deadline_s)
+            deadline = None if dl_s is None else now + float(dl_s)
+            self.scheduler.add_job(
+                r.graph, taus[row], cand, eng._job_bounds(batch, row),
+                deadline=deadline,
+                token=(ticket, keys[i], r, cand, n_db, per_q_filter),
+                on_match=self._on_match, on_done=self._on_done)
+
+    # ---- stage: delivery (runs on verifier threads) ------------------------
+    def _on_match(self, job, gid: int, d: int) -> None:
+        job.token[0]._push_match(gid, d)
+
+    def _on_done(self, job) -> None:
+        ticket, key, request, cand, n_db, per_q_filter = job.token
+        eng = self.engine
+        try:
+            res = eng._assemble(cand, job, n_db, per_q_filter)
+            with self._cv:
+                eng.stats["verify_s"] += job.verify_s
+            if not job.unverified:   # deadline partials are never cached
+                eng._cache_result(key, request, res)
+        except Exception as e:       # noqa: BLE001 — resolve, don't kill
+            self._finish(ticket, None, e)
+            return
+        self._finish(ticket, res)
+
+    def _finish(self, ticket: QueryTicket, res: Optional[QueryResult],
+                error: Optional[BaseException] = None) -> None:
+        if not ticket._resolve(res, error):
+            return                       # already resolved — keep accounting
+        with self._cv:
+            self._outstanding -= 1
+            self._cv.notify_all()

@@ -235,3 +235,93 @@ def test_slab_rejects_unknown_layout(small_db):
     part = default_partition(nv, ne)
     with pytest.raises(ValueError):
         FilterSlab.build(small_db, enc, part, layout="sparse")
+
+
+# --------------------------------------------------------------------------
+# hot_mass: data-tuned hot-prefix width selection
+# --------------------------------------------------------------------------
+
+def _fake_enc(counts):
+    """EncodedDB stand-in with one row per vocabulary id: id i appears
+    counts[i] times (the selector only reads d_ids/d_cnt/vocab width)."""
+    from types import SimpleNamespace
+    counts = np.asarray(counts, np.int64)
+    ids = np.flatnonzero(counts)
+    return SimpleNamespace(
+        d_ids=ids.astype(np.int32), d_cnt=counts[ids].astype(np.int32),
+        vocab=SimpleNamespace(n_degree_ids=len(counts)))
+
+
+def test_hot_d_from_mass_skewed_synthetic():
+    from repro.core.slab import hot_d_from_mass
+
+    # zipf-ish skew over 64 ids: id i carries ~1/(i+1) of the mass
+    counts = (1000.0 / (np.arange(64) + 1)).astype(np.int64)
+    enc = _fake_enc(counts)
+    total = counts.sum()
+    for mass in (0.25, 0.5, 0.9, 0.99):
+        H = hot_d_from_mass(enc, mass)
+        # independent check: smallest prefix covering the target by scan
+        cum = 0
+        want = 64
+        for i, c in enumerate(counts):
+            cum += int(c)
+            if cum >= mass * total:
+                want = i + 1
+                break
+        assert H == want, (mass, H, want)
+        assert counts[:H].sum() >= mass * total
+        assert H == 1 or counts[:H - 1].sum() < mass * total
+
+
+def test_hot_d_from_mass_edge_cases():
+    from repro.core.slab import hot_d_from_mass
+
+    skew = _fake_enc([90, 9, 1, 0, 0])
+    assert hot_d_from_mass(skew, 0.0) == 1
+    assert hot_d_from_mass(skew, 0.9) == 1       # head alone covers 90%
+    assert hot_d_from_mass(skew, 0.91) == 2
+    assert hot_d_from_mass(skew, 1.0) == 3       # zero-mass tail excluded
+    assert hot_d_from_mass(skew, 2.0) == 3       # clamped to full mass
+    assert hot_d_from_mass(_fake_enc(np.zeros(4, np.int64)), 0.9) == 1
+
+
+def test_hot_mass_slab_matches_selector_and_stays_bit_identical(small_db):
+    from repro.core.search import FlatMSQIndex
+    from repro.core.slab import hot_d_from_mass
+    from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+
+    enc = EncodedDB.build(small_db)
+    nv, ne = small_db.sizes()
+    part = default_partition(nv, ne)
+    slab = FilterSlab.build(small_db, enc, part, layout="hot",
+                            hot_mass=0.9)
+    assert slab.hot_d == hot_d_from_mass(enc, 0.9)
+    # an explicit hot_d always wins over hot_mass
+    forced = FilterSlab.build(small_db, enc, part, layout="hot", hot_d=3,
+                              hot_mass=0.9)
+    assert forced.hot_d == 3
+
+    rng = np.random.default_rng(6)
+    reqs = [GraphQuery(perturb_graph(small_db[int(rng.integers(0, 90))],
+                                     2, rng, small_db.n_vlabels,
+                                     small_db.n_elabels), 2, verify=False)
+            for _ in range(5)]
+    ref = GraphQueryEngine(FlatMSQIndex(small_db),
+                           backend="numpy").submit(reqs)
+    eng = GraphQueryEngine(FlatMSQIndex(small_db), backend="numpy",
+                           slab_layout="hot", hot_mass=0.9)
+    out = eng.submit(reqs)
+    for a, b in zip(out, ref):
+        assert a.candidates == b.candidates
+
+
+def test_configs_default_hot_mass():
+    from repro.configs.msq_aids import get_config as aids
+    from repro.configs.msq_pubchem import get_config as pubchem
+    from repro.configs.msq_s100k import get_config as s100k
+
+    assert aids().hot_mass is not None
+    assert pubchem().hot_mass is not None
+    assert pubchem().slab_layout == "hot"
+    assert s100k().hot_mass is None     # opt-in, not forced everywhere
