@@ -18,7 +18,10 @@ bench-throughput:
 	PYTHONPATH=src python -m benchmarks.query_throughput --n 5000 --q 64
 
 # Tiny offline pipeline smoke (CI): exercises the async pipelined engine
-# end-to-end — parity asserted, overlap recorded to artifacts/bench/.
+# end-to-end — parity asserted, overlap recorded to artifacts/bench/ —
+# plus the query-batched fused filter kernel on a tiny shape, asserting
+# batched/looped bounds identical (DESIGN.md §13).
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.query_throughput --n 300 --q 16 \
 	    --pipeline --pipeline-workers 2
+	PYTHONPATH=src python -m benchmarks.kernels_bench --smoke-batched

@@ -1,7 +1,13 @@
 """Kernel micro-benchmarks: wall time of the jnp/XLA serving paths on CPU
 (correctness-scale; real-TPU time comes from the §Roofline model) plus the
-analytic HBM-traffic roofline of each kernel on v5e constants."""
+analytic HBM-traffic roofline of each kernel on v5e constants.
+
+``--smoke-batched`` runs only ``bench_qgram_filter`` in batched mode on a
+tiny shape and asserts the query-batched kernel's bounds are identical to
+the looped single-query kernel (the CI smoke for DESIGN.md §13)."""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -38,6 +44,65 @@ def bench_qgram_filter(csv: Csv, B: int = 4096, U: int = 2048) -> dict:
     csv.add("kernel/qgram_filter/tpu_roofline", tpu_s,
             f"graphs_per_s={B / tpu_s:.0f}")
     return {"cpu_s": dt, "tpu_model_s": tpu_s, "bytes": bytes_moved}
+
+
+def bench_qgram_filter_batched(csv: Csv, Q: int = 16, B: int = 256,
+                               U: int = 512, interpret: bool = True,
+                               assert_identical: bool = True) -> dict:
+    """Query-batched kernel vs a loop of Q single-query launches on one
+    shape: one F_D stream amortised over the block (DESIGN.md §13).  The
+    batched/looped bounds are asserted identical — the CI smoke gate."""
+    from repro.kernels.qgram_filter.kernel import N_SCALARS
+    from repro.kernels.qgram_filter.ops import (fused_filter_bounds,
+                                                fused_filter_bounds_batched)
+    rng = np.random.default_rng(5)
+    NV, NE, VM = 62, 3, 64
+    fd = jnp.asarray(rng.integers(0, 4, (B, U)).astype(np.int32))
+    vh = jnp.asarray(rng.integers(0, 5, (B, NV)).astype(np.int32))
+    eh = jnp.asarray(rng.integers(0, 5, (B, NE)).astype(np.int32))
+    ds = jnp.asarray(-np.sort(-rng.integers(0, 5, (B, VM)), 1)
+                     .astype(np.int32))
+    aux = jnp.asarray(np.concatenate(
+        [rng.integers(1, 30, (B, 2)), rng.integers(-3, 4, (B, 2))],
+        1).astype(np.int32))
+    sc = np.concatenate(
+        [rng.integers(1, 30, (Q, 2)), rng.integers(1, 4, (Q, 1)),
+         np.full((Q, 2), 25), np.full((Q, 1), 4)], 1).astype(np.int32)
+    assert sc.shape[1] == N_SCALARS
+    qfd = jnp.asarray(rng.integers(0, 4, (Q, U)).astype(np.int32))
+    qvh = jnp.asarray(rng.integers(0, 5, (Q, NV)).astype(np.int32))
+    qeh = jnp.asarray(rng.integers(0, 5, (Q, NE)).astype(np.int32))
+    qsig = jnp.asarray(-np.sort(-rng.integers(0, 5, (Q, VM)), 1)
+                       .astype(np.int32))
+    aux5 = jnp.concatenate([aux, jnp.zeros((B, 1), jnp.int32)], axis=1)
+
+    def looped():
+        return [np.asarray(fused_filter_bounds(
+            jnp.asarray(sc[r]), fd, qfd[r], vh, qvh[r], eh, qeh[r], ds,
+            qsig[r], aux5, interpret=interpret)[0]) for r in range(Q)]
+
+    def batched():
+        return np.asarray(fused_filter_bounds_batched(
+            jnp.asarray(sc), fd, qfd, vh, qvh, eh, qeh, ds, qsig, aux,
+            interpret=interpret)[0])
+
+    loop_out = np.stack(looped())          # warm + reference
+    batch_out = batched()
+    if assert_identical:
+        assert np.array_equal(loop_out, batch_out), \
+            "batched kernel bounds diverged from the looped kernel"
+    _, t_loop = timer(looped, repeat=3)
+    _, t_batch = timer(lambda: batched(), repeat=3)
+    csv.add(f"kernel/qgram_filter/looped_q{Q}_b{B}_u{U}", t_loop,
+            f"pairs_per_s={Q * B / t_loop:.0f}")
+    csv.add(f"kernel/qgram_filter/batched_q{Q}_b{B}_u{U}", t_batch,
+            f"pairs_per_s={Q * B / t_batch:.0f} "
+            f"({t_loop / t_batch:.2f}x vs looped)")
+    print(f"batched fused filter [{Q}x{B}x{U}]: {t_batch * 1e3:.1f}ms vs "
+          f"looped {t_loop * 1e3:.1f}ms ({t_loop / t_batch:.2f}x), "
+          f"identical bounds")
+    return {"loop_s": t_loop, "batch_s": t_batch,
+            "speedup": t_loop / t_batch, "identical": True}
 
 
 def bench_bitunpack(csv: Csv, n: int = 1 << 18) -> dict:
@@ -94,9 +159,20 @@ def bench_attention(csv: Csv) -> dict:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke-batched", action="store_true",
+                    help="tiny-shape batched fused-filter run only, with "
+                         "the batched == looped bounds assertion (CI)")
+    args = ap.parse_args()
     csv = Csv()
+    if args.smoke_batched:
+        out = {"qgram_filter_batched":
+               bench_qgram_filter_batched(csv, Q=6, B=48, U=160)}
+        save_json("kernels_bench_smoke.json", out)
+        return
     out = {
         "qgram_filter": bench_qgram_filter(csv),
+        "qgram_filter_batched": bench_qgram_filter_batched(csv),
         "bitunpack": bench_bitunpack(csv),
         "rank1": bench_rank(csv),
         "flash_attention": bench_attention(csv),

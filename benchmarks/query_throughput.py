@@ -31,12 +31,41 @@ of the device filter time ran *while* verification was in flight — to
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import Csv, art_path, dataset, save_json
+
+# the per-PR perf trajectory lives at the repo root so regressions are a
+# one-file diff review away (``--record``, DESIGN.md §13)
+BENCH_LOG = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_query_throughput.json"))
+
+
+def record_trajectory(recs: List[Dict], commit: str, date: str,
+                      path: str = BENCH_LOG) -> Dict:
+    """Append one per-PR row (q/s per backend x layout) to the repo-root
+    trajectory log and return it."""
+    row = {
+        "commit": commit, "date": date,
+        "n_db": recs[0]["n_db"], "n_queries": recs[0]["n_queries"],
+        "qps_loop": recs[0]["qps_loop"],
+        "qps": {f"{r['backend']}/{r['slab']}": round(r["qps_batched"], 1)
+                for r in recs},
+    }
+    log = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            log = json.load(f)
+    log.append(row)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(log, f, indent=1)
+    print(f"recorded {row['qps']} @ {commit} -> {path}")
+    return row
 
 
 def make_queries(db, num: int, seed: int = 1):
@@ -301,6 +330,14 @@ def main() -> None:
     ap.add_argument("--pipeline-workers", type=int, default=2)
     ap.add_argument("--pipeline-batch", type=int, default=0,
                     help="async batch-former size (0 = n_queries // 8)")
+    ap.add_argument("--record", action="store_true",
+                    help="append this run (q/s per backend x layout) to "
+                         "the repo-root BENCH_query_throughput.json "
+                         "perf trajectory")
+    ap.add_argument("--commit", default="unknown",
+                    help="commit label for --record")
+    ap.add_argument("--date", default=time.strftime("%Y-%m-%d"),
+                    help="date label for --record")
     args = ap.parse_args()
     if args.sharded:
         # must land before the first jax import: jax locks the device
@@ -318,6 +355,8 @@ def main() -> None:
                 slab=s, hot_d=args.hot_d) for s in slabs]
     save_json("query_throughput.json", recs[0])
     csv.dump(art_path("query_throughput.csv"))
+    if args.record:
+        record_trajectory(recs, args.commit, args.date)
     if len(recs) > 1:
         # the space/speed trade-off on the serving format, one row per
         # layout (bits-per-graph of the resident F_D carrier vs q/s)

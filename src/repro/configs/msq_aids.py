@@ -41,6 +41,18 @@ class MSQConfig:
     # dataset's degree-q-gram count mass (core.slab.hot_d_from_mass) —
     # per-dataset instead of one fixed width.
     hot_mass: Optional[float] = None
+    # persisted (qb, bb, bu) tile table for the query-batched fused filter
+    # kernel (kernels.qgram_filter.autotune, DESIGN.md §13).  None = the
+    # repo default path (artifacts/tune/qgram_filter.json); a missing file
+    # falls back to the built-in default tiles, so tuning is always
+    # optional.
+    tile_tune_path: Optional[str] = None
+
+    def tile_table(self):
+        """The autotuned TileTable this config serves with (lazy import —
+        configs stay jax-free until a kernel path actually needs it)."""
+        from repro.kernels.qgram_filter.autotune import load_tile_table
+        return load_tile_table(self.tile_tune_path)
 
 
 def get_config() -> MSQConfig:

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import arrays, filters
 from repro.core.arrays import DBArrays, QueryArrays
+from repro.core.device_cache import DeviceSlabCache, bucket_key
 from repro.core.qgrams import EncodedDB, QGramVocab
 from repro.core.region import RegionPartition
 from repro.core.slab import FilterSlab
@@ -116,40 +117,78 @@ def resolve_backend() -> str:
 @functools.lru_cache(maxsize=None)
 def _bounds_multi_jit(layout: str = "dense"):
     """jit'd (Q, N) filter pass per slab layout: vmap of the single-query
-    cascade, with the layout's C_D construction fused in (DESIGN.md §11)."""
+    cascade, with the layout's C_D construction fused in (DESIGN.md §11).
+
+    C_D is evaluated *query-sparse* (DESIGN.md §13): a query graph touches
+    a few dozen degree-q-gram ids, and ``min(F_D[:, j], 0) = 0`` for every
+    column the query misses, so the min-sum gathers only the query's
+    nonzero columns (``qids``/``qcnt``, zero-padded — pad slots contribute
+    ``min(fd, 0) = 0``).  Bit-identical to the dense sweep, ~U/K times
+    less work on the serving-dominant wide-vocabulary slabs.
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.core import filters_jax as fj
 
+    def sparse_cd(fd, ids, cnt):
+        return jnp.minimum(fd[:, ids], cnt[None, :]).astype(
+            jnp.int32).sum(axis=1)
+
     if layout == "dense":
-        def multi(db: DBArrays, qb: QueryArrays) -> "jax.Array":
-            return jax.vmap(lambda q: fj.batched_bounds(db, q))(qb)
+        def multi(db: DBArrays, qb: QueryArrays, qids, qcnt) -> "jax.Array":
+            def one(q, ids, cnt):
+                return fj.batched_bounds(db, q, c_d=sparse_cd(db.fd, ids,
+                                                              cnt))
+            return jax.vmap(one)(qb, qids, qcnt)
     elif layout == "hot":
-        # db.fd is the (N, H) hot prefix, qb.fd the (Q, H) hot slice, and
-        # cdt the host-computed (Q, N) CSR tail correction — added to C_D
-        # before thresholding so the bound stays admissible (DESIGN.md §3)
-        def multi(db: DBArrays, qb: QueryArrays, cdt) -> "jax.Array":
-            def one(q, t):
-                c_d = fj.min_sum(db.fd, q.fd[None, :]).astype(jnp.int32) + t
-                return fj.batched_bounds(db, q, c_d=c_d)
-            return jax.vmap(one)(qb, cdt)
+        # db.fd is the (N, H) hot prefix, qids/qcnt the query's nonzero
+        # entries within it, and cdt the host-computed (Q, N) CSR tail
+        # correction — added to C_D before thresholding so the bound
+        # stays admissible (DESIGN.md §3)
+        def multi(db: DBArrays, qb: QueryArrays, cdt, qids,
+                  qcnt) -> "jax.Array":
+            def one(q, t, ids, cnt):
+                return fj.batched_bounds(db, q,
+                                         c_d=sparse_cd(db.fd, ids, cnt) + t)
+            return jax.vmap(one)(qb, cdt, qids, qcnt)
     elif layout == "packed":
         # the resident slab is the packed form; decode on device, then the
         # usual cascade.  db.fd is a (N, 1) placeholder — C_D is supplied.
-        def multi(words, sb, widths, db: DBArrays,
-                  qb: QueryArrays) -> "jax.Array":
+        def multi(words, sb, widths, db: DBArrays, qb: QueryArrays,
+                  qids, qcnt) -> "jax.Array":
             from repro.kernels.bitunpack.ref import unpack_rows_ref
-            fd = unpack_rows_ref(words, sb, widths)[:, :qb.fd.shape[1]]
+            fd = unpack_rows_ref(words, sb, widths)
 
-            def one(q):
-                c_d = fj.min_sum(fd, q.fd[None, :]).astype(jnp.int32)
-                return fj.batched_bounds(db, q, c_d=c_d)
-            return jax.vmap(one)(qb)
+            def one(q, ids, cnt):
+                return fj.batched_bounds(db, q, c_d=sparse_cd(fd, ids, cnt))
+            return jax.vmap(one)(qb, qids, qcnt)
     else:
         raise ValueError(f"unknown slab layout {layout!r}")
 
     return jax.jit(multi)
+
+
+def sparse_query_fd(qfd: np.ndarray, pad: int = 16
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(Q, K) nonzero ids + counts of a stacked query F_D block, K rounded
+    up a power-of-two ladder from ``pad`` (a raw max would retrace the jit
+    pass for every distinct batch-max nonzero count — the same
+    per-batch-shape churn the kernel's shape buckets kill).  Pad slots are
+    id 0 with count 0 — a no-op for the min-sum."""
+    qfd = np.asarray(qfd)
+    nz = qfd > 0
+    kmax = max(int(nz.sum(axis=1).max(initial=0)), 1)
+    K = pad
+    while K < kmax:
+        K *= 2
+    ids = np.zeros((qfd.shape[0], K), np.int32)
+    cnt = np.zeros((qfd.shape[0], K), np.int32)
+    for r in range(qfd.shape[0]):
+        j = np.flatnonzero(nz[r])
+        ids[r, :len(j)] = j
+        cnt[r, :len(j)] = qfd[r, j]
+    return ids, cnt
 
 
 class BatchedFilterEval:
@@ -176,7 +215,8 @@ class BatchedFilterEval:
                  mesh=None, layout: str = "graph", k: int = _K_DEFAULT,
                  shard_pad: int = _N_PAD, slab: str = "dense",
                  hot_d: Optional[int] = None,
-                 hot_mass: Optional[float] = None):
+                 hot_mass: Optional[float] = None,
+                 tile_table=None, device_cache_entries: int = 16):
         if backend == "auto":
             backend = resolve_backend()
         if backend not in ("jax", "numpy", "pallas", "distributed"):
@@ -184,14 +224,61 @@ class BatchedFilterEval:
         if backend == "distributed" and mesh is None:
             raise ValueError("backend='distributed' needs a mesh")
         self.backend = backend
+        self.db = db
+        self.enc = enc
         self.vocab = enc.vocab
         self.partition = partition
         self.slab = FilterSlab.build(db, enc, partition, layout=slab,
                                      hot_d=hot_d, hot_mass=hot_mass)
         self.slab_layout = self.slab.layout
         self.vmax = self.slab.vmax
+        # per-bucket gathered sub-slabs + their device-resident operands,
+        # shared by every backend path (DESIGN.md §13)
+        self.device_cache = DeviceSlabCache(device_cache_entries)
+        self._tile_table = tile_table
         if backend == "distributed":
             self._init_distributed(mesh, layout, k, shard_pad)
+
+    # ---- slab lifecycle ----------------------------------------------------
+    def rebuild_slab(self, *, layout: Optional[str] = None,
+                     hot_d: Optional[int] = None,
+                     hot_mass: Optional[float] = None) -> None:
+        """Rebuild the resident FilterSlab (layout / hot-width change) and
+        invalidate every cached device copy of the old one — a stale
+        upload must never serve another batch (DESIGN.md §13)."""
+        self.slab = FilterSlab.build(
+            self.db, self.enc, self.partition,
+            layout=self.slab_layout if layout is None else layout,
+            hot_d=hot_d, hot_mass=hot_mass)
+        self.slab_layout = self.slab.layout
+        self.vmax = self.slab.vmax
+        self.device_cache.invalidate()
+
+    # ---- pallas tile selection (autotuned, DESIGN.md §13) ------------------
+    @property
+    def tile_table(self):
+        """(qb, bb, bu) per shape bucket; the persisted autotune table
+        with the built-in defaults as fallback (lazy — numpy/jax paths
+        never pay the load)."""
+        if self._tile_table is None:
+            from repro.kernels.qgram_filter import autotune
+            self._tile_table = autotune.default_table()
+        return self._tile_table
+
+    def autotune_tiles(self, qs=(8, 64), save_path=None, **kw):
+        """Sweep kernel tiles on this slab's real bucket shapes and adopt
+        the result (``kernels.qgram_filter.autotune``)."""
+        from repro.kernels.qgram_filter import autotune
+        self._tile_table = autotune.autotune_slab(
+            self.slab, qs=qs, save_path=save_path, **kw)
+        return self._tile_table
+
+    def _gather_cached(self, idx: np.ndarray, n_pad: int):
+        """(cache key, gathered sub-slab) for one bucket; the host gather
+        is cached across batches alongside the device operands."""
+        key = bucket_key(idx, n_pad)
+        return key, self.device_cache.get_or_build(
+            key, "sub", lambda: self.slab.gather(idx, n_pad))
 
     # ---- distributed slab-shard bookkeeping -------------------------------
     def _init_distributed(self, mesh, layout: str, k: int,
@@ -275,31 +362,41 @@ class BatchedFilterEval:
         Q, N = len(qs), len(idx)
         qp = _pad_to(Q, _Q_PAD)
         np_ = _pad_to(N, _N_PAD)
-        sub = self.slab.gather(idx, np_)
+        key, sub = self._gather_cached(idx, np_)
+        db = self.device_cache.get_or_build(
+            key, "jax_db",
+            lambda: DBArrays(*[jnp.asarray(x) for x in sub.base_arrays()]))
         qs = list(qs) + [qs[-1]] * (qp - Q)          # pad with a repeat
         qb = self.stack_queries(qs)
-        db = DBArrays(*[jnp.asarray(x) for x in sub.base_arrays()])
         lay = self.slab_layout
         if lay == "hot":
             cdt = sub.tail_minsum_batch(qb.fd).astype(np.int32)
             qb = qb._replace(fd=qb.fd[:, :sub.hot_d])
+            qids, qcnt = sparse_query_fd(qb.fd)
             out = _bounds_multi_jit("hot")(
                 db, QueryArrays(*[jnp.asarray(x) for x in qb]),
-                jnp.asarray(cdt))
+                jnp.asarray(cdt), jnp.asarray(qids), jnp.asarray(qcnt))
         elif lay == "packed":
-            pk = sub.packed
+            words, sb, widths = self.device_cache.get_or_build(
+                key, "jax_packed",
+                lambda: tuple(jnp.asarray(x) for x in
+                              (sub.packed.words, sub.packed.sb,
+                               sub.packed.widths)))
+            qids, qcnt = sparse_query_fd(qb.fd)
             out = _bounds_multi_jit("packed")(
-                jnp.asarray(pk.words), jnp.asarray(pk.sb),
-                jnp.asarray(pk.widths), db,
-                QueryArrays(*[jnp.asarray(x) for x in qb]))
+                words, sb, widths, db,
+                QueryArrays(*[jnp.asarray(x) for x in qb]),
+                jnp.asarray(qids), jnp.asarray(qcnt))
         else:
+            qids, qcnt = sparse_query_fd(qb.fd)
             out = _bounds_multi_jit("dense")(
-                db, QueryArrays(*[jnp.asarray(x) for x in qb]))
+                db, QueryArrays(*[jnp.asarray(x) for x in qb]),
+                jnp.asarray(qids), jnp.asarray(qcnt))
         return np.asarray(out)[:Q, :N]
 
     def _bounds_np(self, idx: np.ndarray,
                    qs: Sequence[QueryArrays]) -> np.ndarray:
-        sub = self.slab.gather(idx)
+        _, sub = self._gather_cached(idx, len(idx))
         db = sub.base_arrays()
         out = np.empty((len(qs), len(idx)), np.int64)
         for i, q in enumerate(qs):
@@ -313,52 +410,61 @@ class BatchedFilterEval:
 
     def _bounds_pallas(self, idx: np.ndarray,
                        qs: Sequence[QueryArrays]) -> np.ndarray:
+        """One query-batched kernel launch per bucket (DESIGN.md §13): the
+        padded query block rides a leading Q axis, every db-side operand
+        comes from the device-resident cache, and the (qb, bb, bu) tiles
+        come from the autotune table."""
         import jax.numpy as jnp
 
-        from repro.kernels.qgram_filter.ops import (fused_filter_bounds,
-                                                    make_aux, make_scalars)
+        from repro.kernels.qgram_filter import ops
+
         lay = self.slab_layout
-        N = len(idx)
+        Q, N = len(qs), len(idx)
+        np_ = ops.shape_bucket(max(N, 1), ops.B_BASE, ops.B_CAP)
+        key, sub = self._gather_cached(idx, np_)
         if lay == "packed":
-            # one gather, padded to the shape-bucket multiple so the
-            # on-device decode compiles a handful of programs, not one
-            # per bucket; the filter pass itself runs on the N real rows
+            # the cached device residency is the succinct packed form;
+            # the dense F_D exists only transiently, decoded per launch
             from repro.kernels.bitunpack.ops import (flatten_packed_rows,
                                                      unpack_hybrid)
-            np_ = _pad_to(max(N, 1), _N_PAD)
-            sub = self.slab.gather(idx, np_)
-            words, sb, widths = flatten_packed_rows(sub.packed)
+
+            def _upload_packed():
+                words, sb, widths = flatten_packed_rows(sub.packed)
+                return (jnp.asarray(words), jnp.asarray(sb),
+                        jnp.asarray(widths))
+            words, sb, widths = self.device_cache.get_or_build(
+                key, "pallas_packed", _upload_packed)
             KB = sub.packed.sb.shape[1]
-            fd_dev = unpack_hybrid(sb, widths, words).reshape(
-                np_, KB * 128)[:N, :sub.U]
-            db = DBArrays(*[np.asarray(x)[:N] for x in sub.base_arrays()])
+            fd_dev = unpack_hybrid(sb, widths, words).reshape(np_, KB * 128)
         else:
-            sub = self.slab.gather(idx)
-            db = sub.base_arrays()
-            fd_dev = jnp.asarray(db.fd)
-        nv_d, ne_d = jnp.asarray(db.nv), jnp.asarray(db.ne)
-        ri_d, rj_d = jnp.asarray(db.region_i), jnp.asarray(db.region_j)
-        if lay != "hot":             # query-independent -> build once
-            aux = make_aux(nv_d, ne_d, ri_d, rj_d)
+            fd_dev = self.device_cache.get_or_build(
+                key, "pallas_fd", lambda: jnp.asarray(sub.fd))
+
+        def _upload_small():
+            aux = np.stack([sub.nv, sub.ne, sub.region_i, sub.region_j],
+                           axis=1).astype(np.int32)
+            return (jnp.asarray(sub.vhist), jnp.asarray(sub.ehist),
+                    jnp.asarray(sub.degseq), jnp.asarray(aux))
+        vhist_d, ehist_d, degseq_d, aux_d = self.device_cache.get_or_build(
+            key, "pallas_small", _upload_small)
+
+        qb = self.stack_queries(qs)
+        cdt = None
+        if lay == "hot":
+            # sparse-tail C_D correction seeds the kernel's C_D scratch
+            # (DESIGN.md §3) — per (query, graph), so it is the one
+            # db-side operand rebuilt per batch
+            cdt = jnp.asarray(sub.tail_minsum_batch(qb.fd).astype(np.int32))
+            qb = qb._replace(fd=qb.fd[:, :sub.hot_d])
         p = self.partition
-        out = np.empty((len(qs), len(idx)), np.int64)
-        for i, q in enumerate(qs):
-            qfd = np.asarray(q.fd)
-            if lay == "hot":
-                # sparse-tail C_D correction rides in aux (DESIGN.md §3)
-                cd_tail = sub.tail_minsum_one(qfd).astype(np.int32)
-                aux = make_aux(nv_d, ne_d, ri_d, rj_d,
-                               jnp.asarray(cd_tail))
-                qfd = qfd[:sub.hot_d]
-            sc = make_scalars(int(q.nv), int(q.ne), int(q.tau), p.x0, p.y0,
-                              p.l)
-            b, _ = fused_filter_bounds(
-                sc, fd_dev, jnp.asarray(qfd),
-                jnp.asarray(db.vhist), jnp.asarray(q.vhist),
-                jnp.asarray(db.ehist), jnp.asarray(q.ehist),
-                jnp.asarray(db.degseq), jnp.asarray(q.sigma), aux)
-            out[i] = np.asarray(b)
-        return out
+        sc = ops.make_scalars_batch(qs, p.x0, p.y0, p.l)
+        qb_t, bb_t, bu_t = self.tile_table.lookup(Q, np_, fd_dev.shape[1])
+        b, _ = ops.fused_filter_bounds_batched(
+            jnp.asarray(sc), fd_dev, jnp.asarray(qb.fd),
+            vhist_d, jnp.asarray(qb.vhist), ehist_d, jnp.asarray(qb.ehist),
+            degseq_d, jnp.asarray(qb.sigma), aux_d, cdt,
+            qb=qb_t, bb=bb_t, bu=bu_t)
+        return np.asarray(b)[:Q, :N]
 
     # ---- the distributed per-bucket step ----------------------------------
     def _bucket_candidates_dist(self, idx: np.ndarray,
@@ -381,29 +487,38 @@ class BatchedFilterEval:
         S = self.n_shards
         Q = len(qs)
         n_pad = _pad_to(max(len(idx), 1), S * self.shard_pad)
-        sub = self.slab.gather(idx, n_pad)
-        db = sub.base_arrays()
+        key, sub = self._gather_cached(idx, n_pad)
         qp = _pad_to(Q, _Q_PAD)
         qb = self.stack_queries(list(qs) + [qs[-1]] * (qp - Q))
         extra: Tuple = ()
         if self.slab_layout == "hot":
-            # batched CSR tail correction, sharded with the slab rows
+            # batched CSR tail correction, sharded with the slab rows —
+            # per (query, graph), so rebuilt per batch (never cached)
             cdt = sub.tail_minsum_batch(qb.fd).astype(np.int32)
             qb = qb._replace(fd=qb.fd[:, :sub.hot_d])
-            extra = (cdt,)
+            extra = (jnp.asarray(cdt),)
         elif self.slab_layout == "packed":
-            pk = sub.packed
-            extra = (pk.words, pk.sb, pk.widths)
-        if self._model_axis is not None:   # vocab dim must divide 'model'
-            upad = (-db.fd.shape[1]) % self._model_size
+            extra = self.device_cache.get_or_build(
+                key, "dist_packed",
+                lambda: tuple(jnp.asarray(x) for x in
+                              (sub.packed.words, sub.packed.sb,
+                               sub.packed.widths)))
+        # vocab dim must divide 'model' on the vocab-sharded layout
+        upad = (0 if self._model_axis is None
+                else (-sub.fd.shape[1]) % self._model_size)
+
+        def _upload_db():
+            db = sub.base_arrays()
             if upad:
                 db = db._replace(fd=np.pad(db.fd, [(0, 0), (0, upad)]))
-                qb = qb._replace(fd=np.pad(qb.fd, [(0, 0), (0, upad)]))
+            return DBArrays(*[jnp.asarray(x) for x in db])
+        db_dev = self.device_cache.get_or_build(key, "dist_db", _upload_db)
+        if upad:
+            qb = qb._replace(fd=np.pad(qb.fd, [(0, 0), (0, upad)]))
         with jc.set_mesh(self.mesh):
             sids, bnds, n_pass = self._dist_fn(
-                DBArrays(*[jnp.asarray(x) for x in db]),
-                QueryArrays(*[jnp.asarray(x) for x in qb]),
-                *[jnp.asarray(x) for x in extra])
+                db_dev, QueryArrays(*[jnp.asarray(x) for x in qb]),
+                *extra)
         sids = np.asarray(sids)
         bnds = np.asarray(bnds)
         n_pass = np.asarray(n_pass)

@@ -172,7 +172,8 @@ class FlatMSQIndex:
 
     def filter_eval(self, backend: str = "auto", slab: str = "dense",
                     hot_d: Optional[int] = None,
-                    hot_mass: Optional[float] = None) -> BatchedFilterEval:
+                    hot_mass: Optional[float] = None,
+                    tile_table=None) -> BatchedFilterEval:
         """The batched (Q, N) filter evaluator over this index's arrays
         (built lazily once per backend x FilterSlab layout, then reused
         across batches — DESIGN.md §11)."""
@@ -206,15 +207,30 @@ class FlatMSQIndex:
         if key not in cache:
             cache[key] = BatchedFilterEval(self.db, self.enc,
                                            self.partition, backend,
-                                           slab=slab, hot_d=hot_d)
+                                           slab=slab, hot_d=hot_d,
+                                           tile_table=tile_table)
+        elif tile_table is not None:
+            # tiles never change results, so a late table swaps in
+            # without forking the evaluator cache key
+            cache[key]._tile_table = tile_table
         return cache[key]
 
     def set_filter_eval(self, backend: str, ev: BatchedFilterEval) -> None:
         """Register a preconstructed evaluator (e.g. the sharded engine's
-        mesh-bound one) under a backend name."""
+        mesh-bound one) under a backend name.  A replaced evaluator's
+        device-resident slab cache is invalidated — nothing may keep
+        serving stale uploads of a slab that is no longer registered
+        (DESIGN.md §13)."""
         cache = getattr(self, "_filter_evals", None)
         if cache is None:
             cache = self._filter_evals = {}
+        # a plain backend-name registration shadows every (backend, slab,
+        # hot_d) evaluator filter_eval built for that backend — those
+        # become unreachable, so their device caches go too
+        for key, old in list(cache.items()):
+            name = key[0] if isinstance(key, tuple) else key
+            if name == backend and old is not ev:
+                old.device_cache.invalidate()
         cache[backend] = ev
 
     def batched_candidates(self, graphs: Sequence[Graph],
@@ -222,11 +238,12 @@ class FlatMSQIndex:
                            qtuples: Optional[Sequence[QueryTuple]] = None,
                            backend: str = "auto", slab: str = "dense",
                            hot_d: Optional[int] = None,
-                           hot_mass: Optional[float] = None
-                           ) -> CandidateBatch:
+                           hot_mass: Optional[float] = None,
+                           tile_table=None) -> CandidateBatch:
         return batched_flat_candidates(
             self.filter_eval(backend, slab=slab, hot_d=hot_d,
-                             hot_mass=hot_mass), graphs, taus, qtuples)
+                             hot_mass=hot_mass, tile_table=tile_table),
+            graphs, taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:
         i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)

@@ -263,6 +263,20 @@ class GEDSearch:
         return self.result
 
 
+def run_search_slice(search: GEDSearch, max_expansions: Optional[int],
+                     deadline: Optional[float]
+                     ) -> Tuple[Optional[int], GEDSearch]:
+    """One worker-side A* timeslice: run the (picklable) search and send
+    it back with its decision — the ``VerifyScheduler`` process-pool
+    executor's unit of work (DESIGN.md §12).  The returned search carries
+    the advanced frontier, so an undecided slice resumes exactly like the
+    in-process path.  ``deadline`` stays comparable across processes
+    because ``time.perf_counter`` is CLOCK_MONOTONIC (system-wide) on the
+    Linux hosts the pool runs on."""
+    d = search.run(max_expansions=max_expansions, deadline=deadline)
+    return d, search
+
+
 def ged_upto(g: Graph, h: Graph, tau: int, *,
              max_expansions: Optional[int] = None,
              deadline: Optional[float] = None) -> Optional[int]:

@@ -32,3 +32,24 @@ def fused_filter_bounds_ref(scalars, fd, qfd, vhist, qvh, ehist, qeh,
                  & (db.region_j >= j1) & (db.region_j <= j2))
     mask = (in_region & (bounds <= q.tau)).astype(jnp.int32)
     return bounds.astype(jnp.int32), mask
+
+
+def fused_batched_bounds_ref(scalars, fd, qfd, vhist, qvh, ehist, qeh,
+                             degseq, qsig, aux, cdt):
+    """Oracle for the query-batched kernel (DESIGN.md §13): a Python loop
+    of single-query refs, the (Q, B) C_D seed ``cdt`` riding in each
+    row's aux column 4.  Same (Q, B) bounds/mask contract as
+    ``fused_batched_call``."""
+    import numpy as np
+    bs, ms = [], []
+    aux4 = jnp.asarray(aux)[:, :4]
+    for r in range(np.asarray(scalars).shape[0]):
+        aux5 = jnp.concatenate(
+            [aux4, jnp.asarray(cdt)[r][:, None].astype(jnp.int32)], axis=1)
+        b, m = fused_filter_bounds_ref(
+            jnp.asarray(scalars)[r], fd, jnp.asarray(qfd)[r], vhist,
+            jnp.asarray(qvh)[r], ehist, jnp.asarray(qeh)[r], degseq,
+            jnp.asarray(qsig)[r], aux5)
+        bs.append(b)
+        ms.append(m)
+    return jnp.stack(bs), jnp.stack(ms)

@@ -135,19 +135,45 @@ class VerifyScheduler:
     popped (or interrupted) past its job's deadline is counted
     ``unverified`` instead of run — the caller flags the query partial,
     never drops candidates.
+
+    ``executor="process"`` offloads each A* slice to a
+    ``ProcessPoolExecutor`` of ``workers`` processes
+    (``core.verify.run_search_slice`` over the picklable ``GEDSearch``),
+    so verification stops sharing the GIL with the numpy filter pass —
+    the ROADMAP's process-pool item.  Pop order, resume semantics, and
+    deadline handling are unchanged (the slice is a pure function of the
+    search state), so results stay bit-identical to the thread/inline
+    executor.  Call ``shutdown()`` once no more pairs will run; the pool
+    must outlive every draining worker, so ``close()`` deliberately does
+    not touch it.
     """
 
     def __init__(self, db, slice_expansions: Optional[int] = None,
-                 interval_sink: Optional[List[Tuple[float, float]]] = None):
+                 interval_sink: Optional[List[Tuple[float, float]]] = None,
+                 executor: str = "inline", workers: int = 1):
+        if executor not in ("inline", "thread", "process"):
+            raise ValueError(f"unknown executor {executor!r} "
+                             "(inline | thread | process)")
         self.db = db
         # <= 0 means unbudgeted: a zero-pop slice would make GEDSearch.run
         # return undecided with no progress and the re-push loop livelock
         self.slice_expansions = (int(slice_expansions)
                                  if slice_expansions and slice_expansions > 0
                                  else None)
+        self.workers = max(1, int(workers))
+        self._pool = None
+        if executor == "process":
+            import multiprocessing
+            from concurrent.futures import ProcessPoolExecutor
+            # spawn, not fork: the parent usually has jax/XLA threads, and
+            # the child only needs the jax-free core.verify module anyway
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.workers,
+                mp_context=multiprocessing.get_context("spawn"))
         self._heap: list = []
         self._seq = itertools.count()
         self._cv = threading.Condition()
+        self._inflight = 0          # pairs being run by cooperative drains
         self._closed = False
         self._interval_sink = interval_sink
         self.stats: Dict[str, int] = {
@@ -177,10 +203,18 @@ class VerifyScheduler:
         return job
 
     def close(self) -> None:
-        """No more jobs will be added: workers exit once the heap drains."""
+        """No more jobs will be added: workers exit once the heap drains.
+        (The process pool, if any, stays up — draining workers still
+        dispatch into it; call ``shutdown()`` after they are joined.)"""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the process-pool executor (idempotent, no-op inline)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=wait)
+            self._pool = None
 
     # ---- consumer side -----------------------------------------------------
     def _pop(self, block: bool):
@@ -193,12 +227,49 @@ class VerifyScheduler:
                 self._cv.wait()
 
     def run_until_idle(self) -> None:
-        """Drain inline on the calling thread (the sync one-worker case)."""
+        """Drain on the calling thread (the sync one-worker case).  With a
+        process pool and ``workers > 1``, temporary dispatcher threads
+        keep that many A* slices in flight — they only block on futures,
+        so the GIL stays free for the pool to be the parallelism."""
+        if self._pool is not None and self.workers > 1:
+            threads = [threading.Thread(target=self._drain_cooperative,
+                                        daemon=True)
+                       for _ in range(self.workers)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            return
+        self._drain_nonblocking()
+
+    def _drain_nonblocking(self) -> None:
         while True:
             item = self._pop(block=False)
             if item is None:
                 return
             self._run_item(item)
+
+    def _drain_cooperative(self) -> None:
+        """Multi-dispatcher drain: a transiently empty heap is not done —
+        an in-flight resumable slice may re-push work, so dispatchers
+        wait while any peer still runs a pair and only exit when the heap
+        is empty AND nothing is in flight."""
+        while True:
+            with self._cv:
+                while True:
+                    if self._heap:
+                        item = heapq.heappop(self._heap)
+                        self._inflight += 1
+                        break
+                    if self._inflight == 0:
+                        return
+                    self._cv.wait()
+            try:
+                self._run_item(item)
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
 
     def worker_loop(self) -> None:
         """Blocking drain for pool threads; returns after ``close()`` once
@@ -208,6 +279,37 @@ class VerifyScheduler:
             if item is None:
                 return
             self._run_item(item)
+
+    def _execute(self, search: GEDSearch, deadline):
+        """One A* slice, in-process or on the pool.  Returns the decision
+        (or None) plus the search holding the advanced frontier — the
+        pool round-trips the search object, so resume works identically
+        either way."""
+        pool = self._pool
+        if pool is not None:
+            from concurrent.futures.process import BrokenProcessPool
+            from repro.core.verify import run_search_slice
+            fut = None
+            try:
+                fut = pool.submit(run_search_slice, search,
+                                  self.slice_expansions, deadline)
+            except (OSError, RuntimeError):
+                pass        # shut-down / unspawnable pool: dispatch failed
+            if fut is not None:
+                try:
+                    return fut.result()
+                except BrokenProcessPool:
+                    pass    # worker died mid-slice; state is untouched
+                # any other exception came from the A* slice itself and
+                # re-raises unchanged — _run_item counts it once as an
+                # error pair, with no duplicate in-process run
+            # a dead pool degrades to in-process slices (slower, never
+            # wrong): results must not depend on the pool's health
+            with self._cv:
+                self.stats["pool_fallbacks"] = self.stats.get(
+                    "pool_fallbacks", 0) + 1
+        return (search.run(max_expansions=self.slice_expansions,
+                           deadline=deadline), search)
 
     def _run_item(self, item) -> None:
         """Run one pair.  Contained like the filter stage: an exception
@@ -228,8 +330,7 @@ class VerifyScheduler:
             else:
                 with self._cv:
                     self.stats["resumed_runs"] += 1
-            d = search.run(max_expansions=self.slice_expansions,
-                           deadline=job.deadline)
+            d, search = self._execute(search, job.deadline)
             t1 = time.perf_counter()
             with self._cv:
                 job.verify_s += t1 - t0
@@ -284,12 +385,15 @@ class GraphQueryEngine:
                  encoding_cache_size: int = 1024,
                  result_cache_size: int = 256, slab_layout: str = "dense",
                  hot_d: Optional[int] = None,
-                 hot_mass: Optional[float] = None):
+                 hot_mass: Optional[float] = None, tile_table=None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
         self.slab_layout = slab_layout
         self.hot_d = hot_d
         self.hot_mass = hot_mass
+        # autotuned kernel tiles for the pallas path (DESIGN.md §13);
+        # e.g. tile_table=cfg.tile_table() for a config-selected table
+        self.tile_table = tile_table
         self._enc_cache = _LRU(encoding_cache_size)
         self._res_cache = _LRU(result_cache_size)
         self.stats: Dict[str, float] = {
@@ -317,6 +421,8 @@ class GraphQueryEngine:
             kwargs["hot_d"] = self.hot_d
         if "hot_mass" in params:
             kwargs["hot_mass"] = self.hot_mass
+        if "tile_table" in params and self.tile_table is not None:
+            kwargs["tile_table"] = self.tile_table
         return self.source.batched_candidates(graphs, taus, **kwargs)
 
     # ---- shared stages (submit composes them inline; the async pipeline

@@ -164,6 +164,11 @@ class AsyncGraphQueryEngine:
       ``max_batch`` requests are waiting or the oldest has waited
       ``max_delay_s``, whichever is first.
     * ``num_workers``: verifier threads draining the shared worklist.
+    * ``verify_executor``: ``"thread"`` (default) runs A* slices on the
+      verifier threads; ``"process"`` offloads each slice to the
+      scheduler's ``ProcessPoolExecutor`` (``num_workers`` processes) so
+      GED verification stops sharing the GIL with the numpy filter pass
+      — bit-identical results either way (DESIGN.md §12).
     * ``slice_expansions``: A* timeslice (heap pops) per worklist run;
       undecided searches re-queue at their improved frontier bound.
     * ``default_deadline_s``: verification deadline applied to requests
@@ -175,6 +180,7 @@ class AsyncGraphQueryEngine:
 
     def __init__(self, engine: GraphQueryEngine, *, max_batch: int = 32,
                  max_delay_s: float = 0.005, num_workers: int = 2,
+                 verify_executor: str = "thread",
                  slice_expansions: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
                  record_intervals: bool = False, name: str = "apipe"):
@@ -186,7 +192,12 @@ class AsyncGraphQueryEngine:
         self.verify_intervals: List[Tuple[float, float]] = []
         self.scheduler = VerifyScheduler(
             engine.source.db, slice_expansions=slice_expansions,
-            interval_sink=self.verify_intervals if record_intervals else None)
+            interval_sink=self.verify_intervals if record_intervals else None,
+            # map the thread alias; anything unknown reaches the
+            # scheduler's own validation instead of silently degrading
+            executor={"thread": "inline"}.get(verify_executor,
+                                              verify_executor),
+            workers=num_workers)
         self._record_intervals = record_intervals
         self._cv = threading.Condition()
         self._inbox: "deque[Tuple[float, QueryTicket]]" = deque()
@@ -252,6 +263,10 @@ class AsyncGraphQueryEngine:
                 w.join(timeout)
             self._closed = not any(
                 t.is_alive() for t in [self._filter_thread, *self._workers])
+            # tear the pool down even on a timed-out close: a wedged
+            # worker's later dispatch falls back to in-process slices
+            # (never wrong), whereas a leaked spawn pool lives forever
+            self.scheduler.shutdown(wait=self._closed)
 
     def __enter__(self) -> "AsyncGraphQueryEngine":
         return self

@@ -12,9 +12,12 @@ from repro.kernels.bitunpack.ops import pack_hybrid, unpack_hybrid
 from repro.kernels.bitunpack.ref import unpack_hybrid_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.qgram_filter.ops import (fused_filter_bounds, make_aux,
-                                            make_scalars)
-from repro.kernels.qgram_filter.ref import fused_filter_bounds_ref
+from repro.kernels.qgram_filter.ops import (fused_filter_bounds,
+                                            fused_filter_bounds_batched,
+                                            make_aux, make_scalars,
+                                            shape_bucket)
+from repro.kernels.qgram_filter.ref import (fused_batched_bounds_ref,
+                                            fused_filter_bounds_ref)
 from repro.kernels.rank_popcount.kernel import block_popcounts
 from repro.kernels.rank_popcount.ops import build_rank_dictionary, rank1_query
 from repro.kernels.rank_popcount.ref import block_popcounts_ref, rank1_query_ref
@@ -54,6 +57,86 @@ def test_qgram_filter_kernel_vs_ref(B, U, NV, NE, VM):
                                      jnp.asarray(aux))
     assert np.array_equal(np.asarray(b1), np.asarray(b2))
     assert np.array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def _batched_case(rng, Q, B, U, NV=7, NE=3, VM=11):
+    """Random operands for the query-batched kernel + its per-query ref."""
+    fd = rng.integers(0, 4, (B, U)).astype(np.int32)
+    vh = rng.integers(0, 5, (B, NV)).astype(np.int32)
+    eh = rng.integers(0, 5, (B, NE)).astype(np.int32)
+    ds = -np.sort(-rng.integers(0, 6, (B, VM)), axis=1).astype(np.int32)
+    aux = np.concatenate([rng.integers(1, 30, (B, 2)),
+                          rng.integers(-3, 4, (B, 2))], 1).astype(np.int32)
+    cdt = rng.integers(0, 3, (Q, B)).astype(np.int32)
+    sc = np.concatenate(
+        [rng.integers(1, 30, (Q, 2)), rng.integers(1, 4, (Q, 1)),
+         np.full((Q, 2), 25), np.full((Q, 1), 4)], 1).astype(np.int32)
+    qfd = rng.integers(0, 4, (Q, U)).astype(np.int32)
+    qvh = rng.integers(0, 5, (Q, NV)).astype(np.int32)
+    qeh = rng.integers(0, 5, (Q, NE)).astype(np.int32)
+    qsig = -np.sort(-rng.integers(0, 6, (Q, VM)), axis=1).astype(np.int32)
+    return sc, fd, qfd, vh, qvh, eh, qeh, ds, qsig, aux, cdt
+
+
+def _batched_ref(case):
+    """(Q, B) oracle via ref.fused_batched_bounds_ref (itself a loop of
+    the already-ref-tested single-query ref)."""
+    b, m = fused_batched_bounds_ref(*[jnp.asarray(x) for x in case])
+    return np.asarray(b), np.asarray(m)
+
+
+@pytest.mark.parametrize("Q,B,U", [
+    (1, 7, 33),        # everything ragged and tiny
+    (5, 130, 260),     # Q/B/U all off the tile multiples
+    (8, 64, 128),      # exactly tile-aligned
+    (13, 97, 515),     # ragged against every default tile
+])
+def test_qgram_filter_batched_vs_ref_ragged(Q, B, U):
+    rng = np.random.default_rng(Q * 1000 + B)
+    case = _batched_case(rng, Q, B, U)
+    want_b, want_m = _batched_ref(case)
+    got_b, got_m = fused_filter_bounds_batched(
+        *[jnp.asarray(x) for x in case], interpret=True)
+    assert np.array_equal(np.asarray(got_b), want_b)
+    assert np.array_equal(np.asarray(got_m), want_m)
+
+
+def test_qgram_filter_batched_tile_sweep():
+    """The (qb, bb, bu) choice must never change a single bound/mask bit
+    — that is what makes the autotuner safe to run blind."""
+    rng = np.random.default_rng(42)
+    case = _batched_case(rng, 6, 70, 300)
+    want_b, want_m = _batched_ref(case)
+    args = [jnp.asarray(x) for x in case]
+    for qb in (2, 4, 8, 16):
+        for bb, bu in [(16, 128), (32, 256), (64, 512), (128, 128)]:
+            got_b, got_m = fused_filter_bounds_batched(
+                *args, qb=qb, bb=bb, bu=bu, interpret=True)
+            assert np.array_equal(np.asarray(got_b), want_b), (qb, bb, bu)
+            assert np.array_equal(np.asarray(got_m), want_m), (qb, bb, bu)
+
+
+def test_qgram_filter_batched_no_cdt_means_zeros():
+    rng = np.random.default_rng(3)
+    case = _batched_case(rng, 4, 33, 140)
+    zero = list(case)
+    zero[-1] = np.zeros_like(case[-1])
+    want_b, want_m = _batched_ref(tuple(zero))
+    got_b, got_m = fused_filter_bounds_batched(
+        *[jnp.asarray(x) for x in case[:-1]], None, interpret=True)
+    assert np.array_equal(np.asarray(got_b), want_b)
+    assert np.array_equal(np.asarray(got_m), want_m)
+
+
+def test_shape_bucket_ladder():
+    # powers of two times base up to cap, then cap multiples — and always
+    # divisible by min(block, bucket) for power-of-two blocks
+    assert [shape_bucket(n, 8, 512) for n in (1, 8, 9, 65, 512, 513)] == \
+        [8, 8, 16, 128, 512, 1024]
+    for n in (3, 17, 100, 700, 2000):
+        for blk in (8, 16, 64, 128, 512):
+            bucket = shape_bucket(n, 8, 512)
+            assert bucket >= n and bucket % min(blk, bucket) == 0
 
 
 def test_qgram_filter_block_size_invariance():

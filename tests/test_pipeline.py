@@ -101,6 +101,52 @@ def test_async_deterministic_1_vs_4_workers(small_db, flat):
     _assert_same(outs[2], outs[0])
 
 
+def test_process_pool_verifier_parity(small_db, flat):
+    """The ProcessPoolExecutor verifier (ROADMAP item: GED off the GIL)
+    must be bit-identical to the thread-pool path — pickled GEDSearch
+    slices round-trip the frontier, so even resumed searches agree.  A
+    pool dispatch failure degrades to in-process slices, never to missing
+    matches."""
+    reqs = _requests(small_db, 8, seed=11)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=4, num_workers=2,
+                               verify_executor="process",
+                               slice_expansions=50) as apipe:
+        out = [t.result(timeout=180) for t in apipe.submit_many(reqs)]
+    _assert_same(out, ref)
+    # the sliced searches really crossed the process boundary and resumed
+    if any(len(r.candidates) > 0 for r in ref):
+        assert apipe.scheduler.stats["verified_pairs"] > 0
+
+
+def test_process_pool_scheduler_direct(small_db, flat):
+    """VerifyScheduler(executor='process', workers=N) drains a sync
+    worklist through the pool with identical match sets."""
+    from repro.serve.graph_engine import VerifyScheduler
+    reqs = _requests(small_db, 6, seed=12)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    sched = VerifyScheduler(small_db, executor="process", workers=2,
+                            slice_expansions=40)
+    try:
+        jobs = [sched.add_job(r.graph, r.tau, res.candidates,
+                              [0] * len(res.candidates))
+                for r, res in zip(reqs, ref)]
+        sched.run_until_idle()
+    finally:
+        sched.close()
+        sched.shutdown()
+    for job, res in zip(jobs, ref):
+        assert sorted(job.matches) == res.matches
+
+
+def test_scheduler_rejects_unknown_executor(small_db):
+    from repro.serve.graph_engine import VerifyScheduler
+    with pytest.raises(ValueError):
+        VerifyScheduler(small_db, executor="fiber")
+
+
 # --------------------------------------------------------------------------
 # streaming delivery
 # --------------------------------------------------------------------------
