@@ -1,4 +1,9 @@
-.PHONY: check check-docs check-slow bench-throughput bench-smoke
+.PHONY: check check-docs check-slow lint bench-throughput bench-smoke
+
+# Static analysis gate (DESIGN.md §14): lock discipline, JAX hygiene,
+# Pallas contracts, doc citations. Pure stdlib — no jax/numpy needed.
+lint:
+	python scripts/lint.py
 
 # Tier-1 tests, offline-safe, with per-test + total timeouts (fail fast
 # instead of wedging CI). Override budgets via REPRO_TEST_TIMEOUT /
@@ -6,9 +11,9 @@
 check:
 	bash scripts/check.sh
 
-# Just the DESIGN.md citation gate (also part of `check`).
+# Just the DESIGN.md citation gate (alias into the lint framework).
 check-docs:
-	python scripts/check_docs.py
+	python scripts/lint.py --select DOC
 
 # Everything, including @pytest.mark.slow model cases.
 check-slow:

@@ -11,8 +11,9 @@ TOTAL_TIMEOUT="${REPRO_TOTAL_TIMEOUT:-1500}"
 export REPRO_TEST_TIMEOUT="$PER_TEST_TIMEOUT"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# docs gate: every `DESIGN.md §N` citation in the code must resolve
-python scripts/check_docs.py
+# static gate (DESIGN.md §14): lock discipline, JAX hygiene, Pallas
+# contracts, and the doc-citation check — must be clean before tests run
+python scripts/lint.py
 
 exec timeout --signal=INT --kill-after=30 "$TOTAL_TIMEOUT" \
     python -m pytest -q "$@"

@@ -1,83 +1,17 @@
 #!/usr/bin/env python
-"""Fail if any `DESIGN.md §N` citation in the code dangles.
+"""DESIGN.md citation gate — legacy entry point.
 
-Modules cite DESIGN.md sections by number (e.g. ``DESIGN.md §5``); this
-PR-gate greps the tree for those citations and checks that DESIGN.md has a
-heading for every cited section, so the doc and the code can never drift
-apart silently again.  Subsection letters (``§6c``) resolve to their
-numeric section.  Run by ``make check`` / ``scripts/check.sh``.
-
-    python scripts/check_docs.py [--root <repo root>]
+The check now lives in the lint framework (``repro.analysis.docs``,
+DESIGN.md §14); this shim is ``python scripts/lint.py --select DOC`` so
+``make check-docs`` and old muscle memory keep working.
 """
-from __future__ import annotations
-
-import argparse
 import os
-import re
 import sys
-from typing import Dict, List, Tuple
 
-SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "scripts")
-CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)[a-z]?")
-HEADING_RE = re.compile(r"^#{1,3}\s*§(\d+)\b", re.MULTILINE)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-
-def cited_sections(root: str) -> Dict[int, List[Tuple[str, int]]]:
-    """section number -> [(relative path, line number), ...]"""
-    cites: Dict[int, List[Tuple[str, int]]] = {}
-    for d in SCAN_DIRS:
-        top = os.path.join(root, d)
-        for dirpath, _, files in os.walk(top):
-            for name in files:
-                if not name.endswith(".py") or name == "check_docs.py":
-                    continue
-                path = os.path.join(dirpath, name)
-                with open(path, encoding="utf-8") as f:
-                    for ln, line in enumerate(f, 1):
-                        for m in CITE_RE.finditer(line):
-                            rel = os.path.relpath(path, root)
-                            cites.setdefault(int(m.group(1)), []).append(
-                                (rel, ln))
-    return cites
-
-
-def defined_sections(root: str) -> set:
-    design = os.path.join(root, "DESIGN.md")
-    if not os.path.exists(design):
-        return set()
-    with open(design, encoding="utf-8") as f:
-        return {int(m.group(1)) for m in HEADING_RE.finditer(f.read())}
-
-
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--root",
-                    default=os.path.join(os.path.dirname(__file__), ".."))
-    args = ap.parse_args()
-    root = os.path.abspath(args.root)
-
-    cites = cited_sections(root)
-    have = defined_sections(root)
-    if not have:
-        print("check_docs: DESIGN.md missing or has no §N headings",
-              file=sys.stderr)
-        return 1
-
-    missing = {n: locs for n, locs in sorted(cites.items()) if n not in have}
-    if missing:
-        for n, locs in missing.items():
-            print(f"check_docs: DESIGN.md §{n} cited but not defined:",
-                  file=sys.stderr)
-            for rel, ln in locs:
-                print(f"  {rel}:{ln}", file=sys.stderr)
-        return 1
-
-    n_cites = sum(len(v) for v in cites.values())
-    print(f"check_docs: OK — {n_cites} citations across "
-          f"{len(cites)} sections, all defined "
-          f"(§{min(have)}..§{max(have)} in DESIGN.md)")
-    return 0
-
+from repro.analysis.runner import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--select", "DOC", "--root", _ROOT]))

@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""repro-lint CLI — see src/repro/analysis/ and DESIGN.md §14.
+
+    python scripts/lint.py                 # full suite (make lint)
+    python scripts/lint.py --select DOC    # doc citations (make check-docs)
+    python scripts/lint.py --list-rules
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.runner import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--root") for a in argv):
+        argv += ["--root", _ROOT]
+    sys.exit(main(argv))

@@ -1,0 +1,19 @@
+"""repro-lint: domain-specific static analysis (DESIGN.md §14).
+
+Pure stdlib ``ast`` — importing this package must never pull in
+numpy/jax, so the lint gate can run before the heavy deps in CI.
+
+Rule families:
+  LCK  lock discipline (guarded_by annotations, Condition.wait loops,
+       thread lifecycle, lock-order inversion)
+  JAX  jit/shard_map hygiene (tracer branches, host syncs, static args,
+       jit-in-loop retraces)
+  PLC  Pallas kernel contracts (arity, index-map/grid rank, SMEM scalar
+       access, out_shape dtypes)
+  DOC  DESIGN.md citation gate
+"""
+from repro.analysis.core import (FileCtx, Finding, Rule, filter_suppressed,
+                                 load_baseline, new_findings, write_baseline)
+
+__all__ = ["FileCtx", "Finding", "Rule", "filter_suppressed",
+           "load_baseline", "new_findings", "write_baseline"]

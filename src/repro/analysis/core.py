@@ -1,0 +1,177 @@
+"""repro-lint core: findings, per-file context, suppressions, baseline.
+
+The analysis framework (DESIGN.md §14) is pure stdlib ``ast`` — it must
+run before any heavy dependency imports (CI runs it as the first gate),
+so nothing in ``repro.analysis`` may import numpy/jax.
+
+Concepts:
+
+* **Finding** — one diagnosed violation: a short code (``LCK001``), the
+  repo-relative path, line, and message.  The *fingerprint* (code, path,
+  message — deliberately no line number, so unrelated edits above a
+  baselined finding don't resurrect it) is what the baseline stores.
+* **FileCtx** — parsed source + comment-derived metadata: inline
+  ``# lint: disable=CODE[,CODE...]`` suppressions and the raw line text
+  rules need for their own annotations (``# guarded_by: self._lock``).
+* **Rule** — pluggable check.  Per-file rules implement ``run(ctx)``;
+  cross-file rules (lock-order inversion, doc citations) override
+  ``run_project(ctxs, root)``.
+* **Baseline** — a checked-in JSON list of fingerprints.  ``make lint``
+  fails only on findings *not* covered by the baseline, so pre-existing
+  debt is frozen (it can't silently grow) while new violations always
+  block.  The shipped baseline is empty: every real finding the three
+  rule families surfaced was fixed in the PR that introduced them.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9_*,\s]+)")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnosed violation at a source location."""
+
+    path: str          # repo-relative, forward slashes
+    line: int
+    code: str
+    message: str
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        """Baseline identity: line numbers drift with unrelated edits,
+        so they are deliberately not part of it."""
+        return (self.code, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+class FileCtx:
+    """One parsed source file plus its comment-level metadata."""
+
+    def __init__(self, abspath: str, rel: str, source: str):
+        self.abspath = abspath
+        self.rel = rel.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        self._suppressions: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                self._suppressions[i] = codes
+
+    @classmethod
+    def load(cls, abspath: str, rel: str) -> "FileCtx":
+        with open(abspath, encoding="utf-8") as f:
+            return cls(abspath, rel, f.read())
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def suppressed(self, lineno: int, code: str) -> bool:
+        codes = self._suppressions.get(lineno)
+        return bool(codes) and ("*" in codes or code in codes)
+
+    def finding(self, node_or_line, code: str, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        return Finding(path=self.rel, line=line, code=code, message=message)
+
+
+class Rule:
+    """A pluggable check.  ``codes`` lists every finding code the rule
+    can emit (used for ``--select`` and the docs)."""
+
+    codes: Tuple[str, ...] = ()
+    name: str = "rule"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        return ()
+
+    def run_project(self, ctxs: Sequence[FileCtx],
+                    root: str) -> Iterable[Finding]:
+        """Cross-file rules override this; the default just loops."""
+        for ctx in ctxs:
+            yield from self.run(ctx)
+
+
+def filter_suppressed(findings: Iterable[Finding],
+                      ctxs: Dict[str, FileCtx]) -> List[Finding]:
+    """Drop findings whose source line carries a matching
+    ``# lint: disable=`` comment.  Findings on files without a loaded
+    ctx (cross-file rules scanning extra files) are checked lazily."""
+    out = []
+    for f in findings:
+        ctx = ctxs.get(f.path)
+        if ctx is not None and ctx.suppressed(f.line, f.code):
+            continue
+        out.append(f)
+    return sorted(out)
+
+
+# ---- baseline -------------------------------------------------------------
+
+def load_baseline(path: str) -> Counter:
+    """Fingerprint multiset from the checked-in baseline file (missing
+    file = empty baseline)."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            entries = json.load(f)
+    except FileNotFoundError:
+        return Counter()
+    return Counter((e["code"], e["path"], e["message"]) for e in entries)
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    entries = [{"code": f.code, "path": f.path, "message": f.message}
+               for f in sorted(findings)]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(entries, f, indent=1)
+        f.write("\n")
+
+
+def new_findings(findings: Sequence[Finding],
+                 baseline: Counter) -> List[Finding]:
+    """Findings not covered by the baseline.  Multiplicity-aware: a
+    baselined fingerprint tolerates as many occurrences as were
+    baselined — the N+1th is new and blocks."""
+    budget = Counter(baseline)
+    out = []
+    for f in sorted(findings):
+        if budget[f.fingerprint()] > 0:
+            budget[f.fingerprint()] -= 1
+        else:
+            out.append(f)
+    return out
+
+
+# ---- shared AST helpers ---------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def last_name(node: ast.AST) -> Optional[str]:
+    """Trailing attribute ('jit' for jax.jit), or the bare name."""
+    d = dotted_name(node)
+    return d.rsplit(".", 1)[-1] if d else None

@@ -1,0 +1,97 @@
+"""DESIGN.md citation gate as a lint rule (DOC family, DESIGN.md §14).
+
+Port of the old ``scripts/check_docs.py``: every ``DESIGN.md §N``
+citation in source/docs must resolve to a real ``§N`` heading in
+DESIGN.md, so design references can't silently dangle as the doc grows.
+
+* **DOC400** — DESIGN.md missing or contains no ``§N`` headings.
+* **DOC401** — a citation to a section DESIGN.md doesn't define.
+
+This is a project rule (it scans text, not ASTs, and includes files the
+Python-rule walker never loads: markdown, shell, configs).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Iterable, List, Sequence, Set, Tuple
+
+from repro.analysis.core import FileCtx, Finding, Rule
+
+CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADING_RE = re.compile(r"^#{1,3}\s*§(\d+)\b")
+
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "scripts")
+SCAN_EXTS = (".py", ".md", ".sh", ".txt", ".toml", ".cfg", ".yml", ".yaml")
+# files that *define or discuss* the citation syntax itself
+SKIP_NAMES = {"check_docs.py", "docs.py"}
+SKIP_DIR_PARTS = {"fixtures", "__pycache__"}
+
+
+def collect_headings(design_path: str) -> Set[str]:
+    if not os.path.exists(design_path):
+        return set()
+    out = set()
+    with open(design_path, encoding="utf-8") as f:
+        for line in f:
+            m = HEADING_RE.match(line)
+            if m:
+                out.add(m.group(1))
+    return out
+
+
+def iter_files(root: str) -> Iterable[str]:
+    yield os.path.join(root, "README.md")
+    yield os.path.join(root, "ROADMAP.md")
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [x for x in dirnames if x not in SKIP_DIR_PARTS]
+            for name in sorted(filenames):
+                if name in SKIP_NAMES:
+                    continue
+                if os.path.splitext(name)[1] in SCAN_EXTS:
+                    yield os.path.join(dirpath, name)
+
+
+def check_citations(root: str) -> List[Tuple[str, int, str, str]]:
+    """(relpath, line, code, message) tuples — shared with the legacy
+    check_docs entry point."""
+    design = os.path.join(root, "DESIGN.md")
+    headings = collect_headings(design)
+    out: List[Tuple[str, int, str, str]] = []
+    if not headings:
+        out.append(("DESIGN.md", 1, "DOC400",
+                    "DESIGN.md is missing or defines no §N headings"))
+        return out
+    for path in iter_files(root):
+        if not os.path.exists(path):
+            continue
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        try:
+            with open(path, encoding="utf-8") as f:
+                lines = f.readlines()
+        except (OSError, UnicodeDecodeError):
+            continue
+        for i, line in enumerate(lines, 1):
+            for m in CITE_RE.finditer(line):
+                if m.group(1) not in headings:
+                    out.append((rel, i, "DOC401",
+                                f"dangling citation DESIGN.md §{m.group(1)} "
+                                f"(no such heading in DESIGN.md)"))
+    return out
+
+
+class DocCitationRule(Rule):
+    codes = ("DOC400", "DOC401")
+    name = "doc-citations"
+
+    def run_project(self, ctxs: Sequence[FileCtx],
+                    root: str) -> Iterable[Finding]:
+        for rel, line, code, msg in check_citations(root):
+            yield Finding(path=rel, line=line, code=code, message=msg)
+
+
+RULES = (DocCitationRule,)

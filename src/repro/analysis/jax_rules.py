@@ -1,0 +1,613 @@
+"""JAX retrace/host-sync hygiene rules (JAX family, DESIGN.md §14).
+
+Scope: functions *reachable from a jit/shard_map entry point* in a
+module.  Roots are
+
+* functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``,
+* functions passed to ``jax.jit(...)`` / ``shard_map(...)`` /
+  ``pl.pallas_call(...)`` (as a bare name, lambda, or
+  ``functools.partial(fn, ...)``),
+
+and reachability closes over same-module calls/references from there.
+
+Inside that closure the rules reason about *taint*: which local names
+hold traced values.  A root's parameters are tainted except for
+``static_argnames`` entries and kwargs bound by ``functools.partial``;
+taint flows through assignments and same-module calls (per-argument,
+via a worklist).  Shape arithmetic is the big sanitizer: ``x.shape`` /
+``.ndim`` / ``.dtype`` / ``.size``, ``len()``/``range()`` and
+``pl.num_programs``/``pl.program_id`` results, and ``is``/``is not``
+comparisons are host values, never traced.
+
+* **JAX101** — Python ``if``/``while`` (or ``for`` over) a traced value:
+  inside jit these either crash (ConcretizationTypeError) or silently
+  specialize, and on CPU-interpret paths they hide retraces.
+* **JAX102** — host syncs on traced values: ``.item()``,
+  ``np.asarray``/``np.array``, ``bool()``/``int()``/``float()``.
+* **JAX103** — ``static_argnames`` naming a parameter the wrapped
+  function doesn't have, or a static parameter with a mutable default
+  (unhashable -> TypeError on first call).
+* **JAX104** — constructing a jitted callable (``jax.jit``,
+  ``functools.partial(jax.jit, ...)``, ``shard_map``) inside a
+  ``for``/``while`` body: every construction is a fresh cache entry, the
+  retrace hazard the shape-bucket ladder exists to kill.
+
+The taint pass is a single forward walk per function body (no fixpoint
+for loops) — deliberately cheap, tuned to this repo's code shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import FileCtx, Finding, Rule, dotted_name, last_name
+
+_JIT_NAMES = frozenset({"jit"})
+_ROOT_WRAPPERS = frozenset({"jit", "shard_map", "pallas_call", "vmap",
+                            "pmap", "grad", "value_and_grad"})
+_SANITIZER_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+_SANITIZER_CALLS = frozenset({"len", "range", "enumerate", "num_programs",
+                              "program_id", "isinstance", "hasattr",
+                              "getattr", "zip", "min", "max", "tuple",
+                              "list", "sorted"})
+_HOST_SYNC_CASTS = frozenset({"bool", "int", "float"})
+_NP_SYNC = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                      "numpy.array", "onp.asarray", "onp.array"})
+
+
+def _is_partial(call: ast.Call) -> bool:
+    return last_name(call.func) == "partial"
+
+
+def _static_argnames(call: ast.Call) -> Optional[Set[str]]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            if kw.arg == "static_argnums":
+                return None  # positional statics: handled as unknown
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = set()
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, str):
+                        out.add(elt.value)
+                return out
+    return set()
+
+
+class _Root:
+    """One jit/shard_map entry point: target function + static info."""
+
+    def __init__(self, fn: ast.AST, statics: Set[str],
+                 bound_kwargs: Set[str], site: ast.AST):
+        self.fn = fn                     # FunctionDef | Lambda
+        self.statics = statics
+        self.bound_kwargs = bound_kwargs
+        self.site = site
+
+
+class ModuleModel:
+    """Module-level defs, jit roots, and the reachable-call closure."""
+
+    def __init__(self, ctx: FileCtx):
+        self.ctx = ctx
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        for node in ctx.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self.defs.setdefault(f"{node.name}.{sub.name}", sub)
+        # kwargs bound by any functools.partial(fn, kw=...) in the module
+        # (kernels pass config this way; those params are never traced)
+        self.partial_bound: Dict[str, Set[str]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and _is_partial(node) \
+                    and node.args and isinstance(node.args[0], ast.Name):
+                self.partial_bound.setdefault(
+                    node.args[0].id, set()).update(
+                        kw.arg for kw in node.keywords if kw.arg)
+        self.roots: List[_Root] = []
+        self._find_roots()
+        self.reachable: Set[ast.AST] = set()
+        self._close()
+
+    # -- root discovery -----------------------------------------------------
+    def _find_roots(self) -> None:
+        for name, fn in self.defs.items():
+            for dec in getattr(fn, "decorator_list", ()):
+                statics = set()
+                hit = False
+                if last_name(dec) in _JIT_NAMES:
+                    hit = True
+                elif isinstance(dec, ast.Call):
+                    if last_name(dec.func) in _JIT_NAMES:
+                        hit = True
+                        statics = _static_argnames(dec) or set()
+                    elif _is_partial(dec) and dec.args and last_name(
+                            dec.args[0]) in _JIT_NAMES:
+                        hit = True
+                        statics = _static_argnames(dec) or set()
+                if hit:
+                    self.roots.append(_Root(fn, statics, set(), dec))
+        for node in ast.walk(self.ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if last_name(node.func) not in _ROOT_WRAPPERS:
+                continue
+            statics = _static_argnames(node) or set()
+            for arg in node.args[:1] + [kw.value for kw in node.keywords
+                                        if kw.arg in ("f", "fun", "kernel")]:
+                self._add_root_target(arg, statics, node)
+
+    def _add_root_target(self, arg: ast.AST, statics: Set[str],
+                         site: ast.AST) -> None:
+        if isinstance(arg, ast.Lambda):
+            self.roots.append(_Root(arg, statics, set(), site))
+        elif isinstance(arg, ast.Name) and arg.id in self.defs:
+            self.roots.append(_Root(self.defs[arg.id], statics, set(), site))
+        elif isinstance(arg, ast.Call) and _is_partial(arg) and arg.args:
+            inner = arg.args[0]
+            bound = {kw.arg for kw in arg.keywords if kw.arg}
+            if isinstance(inner, ast.Name) and inner.id in self.defs:
+                self.roots.append(
+                    _Root(self.defs[inner.id], statics, bound, site))
+            elif isinstance(inner, ast.Lambda):
+                self.roots.append(_Root(inner, statics, bound, site))
+
+    # -- reachability closure ------------------------------------------------
+    def _close(self) -> None:
+        work = [r.fn for r in self.roots]
+        by_short = {}
+        for name, fn in self.defs.items():
+            by_short.setdefault(name.rsplit(".", 1)[-1], fn)
+        while work:
+            fn = work.pop()
+            if fn in self.reachable:
+                continue
+            self.reachable.add(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Name):
+                    target = self.defs.get(node.id) or by_short.get(node.id)
+                    if target is not None and target not in self.reachable:
+                        work.append(target)
+
+
+def _params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class _TaintPass:
+    """Per-function taint of local names; emits JAX101/JAX102."""
+
+    def __init__(self, ctx: FileCtx, model: ModuleModel):
+        self.ctx = ctx
+        self.model = model
+        self.findings: List[Finding] = []
+        # fn -> per-param taint (True = traced); refined by the worklist
+        self.param_taint: Dict[ast.AST, List[bool]] = {}
+        # return-taint machinery (per-element for tuple returns)
+        self._ret_memo: Dict[Tuple, Tuple[bool, Optional[List[bool]]]] = {}
+        self._ret_stack: Set[ast.AST] = set()
+        self._sink: Optional[List] = None
+
+    def run(self) -> List[Finding]:
+        # seed: roots taint all params except statics/partial-bound kwargs
+        work: List[ast.AST] = []
+        for root in self.model.roots:
+            names = _params(root.fn)
+            skip = root.statics | root.bound_kwargs
+            taint = [n not in skip for n in names]
+            if self._merge(root.fn, taint):
+                work.append(root.fn)
+        # non-root reachable fns referenced (not directly called) get
+        # all-params-tainted conservatively once we see such a reference;
+        # directly-called fns get per-arg taint from call sites below.
+        called_directly: Set[ast.AST] = set()
+        for fn in self.model.reachable:
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and isinstance(
+                        node.func, ast.Name):
+                    t = self.model.defs.get(node.func.id)
+                    if t is not None:
+                        called_directly.add(t)
+        for fn in self.model.reachable:
+            if fn in self.param_taint or fn in called_directly:
+                continue
+            names = _params(fn)
+            kwonly = {p.arg for p in fn.args.kwonlyargs}
+            bound = self.model.partial_bound.get(
+                getattr(fn, "name", ""), set())
+            taint = [not (n in kwonly and n in bound) for n in names]
+            if self._merge(fn, taint):
+                work.append(fn)
+
+        # worklist: propagate per-arg taint through direct calls
+        seen_rounds = 0
+        while work and seen_rounds < 1000:
+            seen_rounds += 1
+            fn = work.pop()
+            env = dict(zip(_params(fn), self.param_taint[fn]))
+            for callee, taints in self._flow(fn, env, emit=False):
+                if self._merge(callee, taints):
+                    work.append(callee)
+
+        # final pass: emit findings with converged param taint
+        for fn in self.model.reachable:
+            taint = self.param_taint.get(fn, [False] * len(_params(fn)))
+            env = dict(zip(_params(fn), taint))
+            list(self._flow(fn, env, emit=True))
+        return self.findings
+
+    def _merge(self, fn: ast.AST, taint: List[bool]) -> bool:
+        cur = self.param_taint.get(fn)
+        if cur is None:
+            self.param_taint[fn] = list(taint)
+            return True
+        changed = False
+        for i, t in enumerate(taint):
+            if i < len(cur) and t and not cur[i]:
+                cur[i] = True
+                changed = True
+        return changed
+
+    # -- expression taint ---------------------------------------------------
+    def _tainted(self, node: ast.AST, env: Dict[str, bool]) -> bool:
+        if isinstance(node, ast.Name):
+            return env.get(node.id, False)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SANITIZER_ATTRS:
+                return False
+            return self._tainted(node.value, env)
+        if isinstance(node, ast.Subscript):
+            return self._tainted(node.value, env)
+        if isinstance(node, ast.Call):
+            fname = last_name(node.func)
+            if fname in _SANITIZER_CALLS:
+                return False
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr in ("astype", "reshape", "sum", "min",
+                                      "max", "dot", "transpose", "at"):
+                    return self._tainted(node.func.value, env)
+            # same-module calls: use the callee's return-taint summary
+            # (e.g. shape-arithmetic helpers return host ints even when
+            # fed traced arrays)
+            if isinstance(node.func, ast.Name):
+                callee = self.model.defs.get(node.func.id)
+                if callee is not None:
+                    scalar, _ = self._result_taint(callee, node, env)
+                    return scalar
+            # jnp/lax/pl calls over tainted args stay tainted; calls over
+            # clean args produce traced values too when they're jnp ctors,
+            # but flagging `if jnp.zeros(...)` style is out of scope
+            return any(self._tainted(a, env) for a in node.args) or any(
+                self._tainted(kw.value, env) for kw in node.keywords)
+        if isinstance(node, ast.BinOp):
+            return (self._tainted(node.left, env)
+                    or self._tainted(node.right, env))
+        if isinstance(node, ast.UnaryOp):
+            return self._tainted(node.operand, env)
+        if isinstance(node, ast.BoolOp):
+            return any(self._tainted(v, env) for v in node.values)
+        if isinstance(node, ast.Compare):
+            ops = node.ops
+            if all(isinstance(o, (ast.Is, ast.IsNot)) for o in ops):
+                return False  # identity tests never trace
+            return self._tainted(node.left, env) or any(
+                self._tainted(c, env) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._tainted(e, env) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self._tainted(node.body, env)
+                    or self._tainted(node.orelse, env))
+        if isinstance(node, ast.Starred):
+            return self._tainted(node.value, env)
+        return False
+
+    def _result_taint(self, callee: ast.AST, call: ast.Call,
+                      env: Dict[str, bool]
+                      ) -> Tuple[bool, Optional[List[bool]]]:
+        """(scalar, per-tuple-element) return taint of a same-module call
+        with this call site's argument taints.  Conservative (True, None)
+        on recursion or depth blowup."""
+        names = _params(callee)
+        taints = [False] * len(names)
+        for i, a in enumerate(call.args):
+            if i < len(taints):
+                taints[i] = self._tainted(a, env)
+        for kw in call.keywords:
+            if kw.arg in names:
+                taints[names.index(kw.arg)] = self._tainted(kw.value, env)
+        key = (callee, tuple(taints))
+        if key in self._ret_memo:
+            return self._ret_memo[key]
+        if callee in self._ret_stack or len(self._ret_stack) > 4:
+            return (True, None)
+        self._ret_stack.add(callee)
+        try:
+            if isinstance(callee, ast.Lambda):
+                inner = dict(zip(names, taints))
+                result = (self._tainted(callee.body, inner), None)
+            else:
+                sink: List = []
+                prev, self._sink = self._sink, sink
+                try:
+                    inner = dict(zip(names, taints))
+                    for _ in self._stmts(callee.body, inner, emit=False):
+                        pass
+                finally:
+                    self._sink = prev
+                scalar, elems = False, None
+                saw_tuple = saw_other = False
+                for val, renv in sink:
+                    if val is None:
+                        continue
+                    if isinstance(val, ast.Tuple):
+                        et = [self._tainted(e, renv) for e in val.elts]
+                        scalar = scalar or any(et)
+                        if not saw_tuple:
+                            elems = et
+                        elif elems is not None and len(elems) == len(et):
+                            elems = [a or b for a, b in zip(elems, et)]
+                        else:
+                            elems = None
+                        saw_tuple = True
+                    else:
+                        scalar = scalar or self._tainted(val, renv)
+                        saw_other = True
+                result = (scalar, None if saw_other else elems)
+        finally:
+            self._ret_stack.discard(callee)
+        self._ret_memo[key] = result
+        return result
+
+    # -- statement walk -----------------------------------------------------
+    def _flow(self, fn: ast.AST, env: Dict[str, bool],
+              emit: bool) -> Iterable[Tuple[ast.AST, List[bool]]]:
+        body = fn.body if isinstance(body_attr := getattr(fn, "body", None),
+                                     list) else [body_attr]
+        yield from self._stmts(body, env, emit)
+
+    def _stmts(self, body: List[ast.AST], env: Dict[str, bool],
+               emit: bool) -> Iterable[Tuple[ast.AST, List[bool]]]:
+        for stmt in body:
+            if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = getattr(stmt, "value", None)
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                elems = None
+                if (len(targets) == 1
+                        and isinstance(targets[0], (ast.Tuple, ast.List))
+                        and isinstance(value, ast.Call)
+                        and isinstance(value.func, ast.Name)
+                        and value.func.id in self.model.defs):
+                    # tuple unpack of a same-module call: per-element taint
+                    # (e.g. `x, pad = _pad_axis(q, ...)` — pad is host int)
+                    _, elems = self._result_taint(
+                        self.model.defs[value.func.id], value, env)
+                if elems is not None and len(elems) == len(targets[0].elts):
+                    for e, et in zip(targets[0].elts, elems):
+                        self._bind(e, et, env)
+                else:
+                    t = (self._tainted(value, env)
+                         if value is not None else False)
+                    for tgt in targets:
+                        self._bind(tgt, t, env)
+                if value is not None:
+                    yield from self._calls(value, env, emit)
+            elif isinstance(stmt, ast.If):
+                if emit and self._tainted(stmt.test, env):
+                    self._emit(stmt.test, "JAX101",
+                               "Python `if` on a traced value inside a "
+                               "jit-reachable function (concretization "
+                               "error or silent specialization)")
+                yield from self._calls(stmt.test, env, emit)
+                yield from self._stmts(stmt.body, env, emit)
+                yield from self._stmts(stmt.orelse, env, emit)
+            elif isinstance(stmt, ast.While):
+                if emit and self._tainted(stmt.test, env):
+                    self._emit(stmt.test, "JAX101",
+                               "Python `while` on a traced value inside a "
+                               "jit-reachable function (use lax.while_loop)")
+                yield from self._calls(stmt.test, env, emit)
+                yield from self._stmts(stmt.body, env, emit)
+            elif isinstance(stmt, ast.For):
+                if emit and self._tainted(stmt.iter, env):
+                    self._emit(stmt.iter, "JAX101",
+                               "Python `for` over a traced value inside a "
+                               "jit-reachable function (use lax.fori_loop "
+                               "or lax.scan)")
+                yield from self._calls(stmt.iter, env, emit)
+                self._bind(stmt.target, False, env)  # range-style iteration
+                yield from self._stmts(stmt.body, env, emit)
+                yield from self._stmts(stmt.orelse, env, emit)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                inner_env = dict(env)
+                for p in _params(stmt):
+                    inner_env.setdefault(p, False)
+                yield from self._stmts(stmt.body, inner_env, emit)
+            elif isinstance(stmt, ast.Return):
+                if self._sink is not None:
+                    self._sink.append((stmt.value, dict(env)))
+                if stmt.value is not None:
+                    yield from self._calls(stmt.value, env, emit)
+            elif isinstance(stmt, ast.Expr):
+                yield from self._calls(stmt.value, env, emit)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    yield from self._calls(item.context_expr, env, emit)
+                yield from self._stmts(stmt.body, env, emit)
+            elif isinstance(stmt, ast.Try):
+                yield from self._stmts(stmt.body, env, emit)
+                for h in stmt.handlers:
+                    yield from self._stmts(h.body, env, emit)
+                yield from self._stmts(stmt.orelse, env, emit)
+                yield from self._stmts(stmt.finalbody, env, emit)
+            elif isinstance(stmt, (ast.Raise, ast.Assert)):
+                for v in ast.iter_child_nodes(stmt):
+                    if isinstance(v, ast.expr):
+                        yield from self._calls(v, env, emit)
+
+    def _bind(self, target: ast.AST, tainted: bool,
+              env: Dict[str, bool]) -> None:
+        if isinstance(target, ast.Name):
+            env[target.id] = tainted
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, tainted, env)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, env)
+
+    def _calls(self, expr: ast.AST, env: Dict[str, bool],
+               emit: bool) -> Iterable[Tuple[ast.AST, List[bool]]]:
+        """Host-sync detection + per-arg taint propagation to callees."""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Lambda):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func) or ""
+            short = fname.rsplit(".", 1)[-1]
+            # JAX102: host syncs on traced values
+            if emit:
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"
+                        and self._tainted(node.func.value, env)):
+                    self._emit(node, "JAX102",
+                               ".item() on a traced value inside a "
+                               "jit-reachable function (host sync)")
+                elif fname in _NP_SYNC and node.args and self._tainted(
+                        node.args[0], env):
+                    self._emit(node, "JAX102",
+                               f"{fname}() on a traced value inside a "
+                               f"jit-reachable function (device->host "
+                               f"transfer)")
+                elif (isinstance(node.func, ast.Name)
+                      and node.func.id in _HOST_SYNC_CASTS
+                      and node.args and self._tainted(node.args[0], env)):
+                    self._emit(node, "JAX102",
+                               f"{node.func.id}() on a traced value inside "
+                               f"a jit-reachable function (implicit "
+                               f"concretization)")
+            # per-arg propagation to same-module direct calls
+            if isinstance(node.func, ast.Name):
+                callee = self.model.defs.get(node.func.id)
+                if callee is not None and callee in self.model.reachable:
+                    names = _params(callee)
+                    taints = [False] * len(names)
+                    for i, a in enumerate(node.args):
+                        if i < len(taints):
+                            taints[i] = self._tainted(a, env)
+                    for kw in node.keywords:
+                        if kw.arg in names:
+                            taints[names.index(kw.arg)] = self._tainted(
+                                kw.value, env)
+                    yield (callee, taints)
+
+    def _emit(self, node: ast.AST, code: str, msg: str) -> None:
+        self.findings.append(self.ctx.finding(node, code, msg))
+
+
+class JaxTracerRule(Rule):
+    """JAX101 + JAX102 via the reachability/taint pass."""
+
+    codes = ("JAX101", "JAX102")
+    name = "jax-tracer"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        model = ModuleModel(ctx)
+        if not model.roots:
+            return
+        yield from _TaintPass(ctx, model).run()
+
+
+class JaxStaticArgsRule(Rule):
+    """JAX103: static_argnames must name real params; mutable defaults
+    on static params are unhashable at call time."""
+
+    codes = ("JAX103",)
+    name = "jax-static-args"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        model = ModuleModel(ctx)
+        for root in model.roots:
+            if not isinstance(root.fn, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                continue
+            names = set(_params(root.fn))
+            for s in sorted(root.statics):
+                if s not in names:
+                    yield ctx.finding(
+                        root.site, "JAX103",
+                        f"static_argnames entry '{s}' does not match any "
+                        f"parameter of {root.fn.name}()")
+            a = root.fn.args
+            pos = a.posonlyargs + a.args
+            defaults = a.defaults
+            offset = len(pos) - len(defaults)
+            for i, d in enumerate(defaults):
+                pname = pos[offset + i].arg
+                if pname in root.statics and isinstance(
+                        d, (ast.List, ast.Dict, ast.Set)):
+                    yield ctx.finding(
+                        d, "JAX103",
+                        f"static parameter '{pname}' of {root.fn.name}() "
+                        f"has a mutable (unhashable) default")
+            for kw, d in zip(a.kwonlyargs, a.kw_defaults):
+                if d is not None and kw.arg in root.statics and isinstance(
+                        d, (ast.List, ast.Dict, ast.Set)):
+                    yield ctx.finding(
+                        d, "JAX103",
+                        f"static parameter '{kw.arg}' of {root.fn.name}() "
+                        f"has a mutable (unhashable) default")
+
+
+class JitInLoopRule(Rule):
+    """JAX104: jit/shard_map construction inside a loop body retraces."""
+
+    codes = ("JAX104",)
+    name = "jit-in-loop"
+
+    _CTORS = frozenset({"jit", "shard_map", "pmap"})
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        yield from self._walk(ctx.tree.body, ctx, in_loop=False)
+
+    def _walk(self, body: List[ast.AST], ctx: FileCtx,
+              in_loop: bool) -> Iterable[Finding]:
+        for stmt in body:
+            inner = in_loop or isinstance(stmt, (ast.For, ast.While))
+            if inner:
+                for node in ast.walk(stmt) if isinstance(
+                        stmt, (ast.For, ast.While)) else ():
+                    if isinstance(node, ast.Call):
+                        hit = last_name(node.func) in self._CTORS
+                        if (not hit and _is_partial(node) and node.args
+                                and last_name(node.args[0]) in self._CTORS):
+                            hit = True
+                        if hit:
+                            yield ctx.finding(
+                                node, "JAX104",
+                                f"jitted callable constructed inside a "
+                                f"loop body (fresh trace cache entry per "
+                                f"iteration — hoist or use a shape bucket)")
+                if isinstance(stmt, (ast.For, ast.While)):
+                    continue  # already walked the whole subtree
+            for field, value in ast.iter_fields(stmt):
+                vals = value if isinstance(value, list) else [value]
+                stmts = [v for v in vals if isinstance(v, ast.stmt)]
+                if stmts:
+                    yield from self._walk(stmts, ctx, inner)
+
+
+RULES = (JaxTracerRule, JaxStaticArgsRule, JitInLoopRule)

@@ -1,0 +1,372 @@
+"""Lock-discipline rules (LCK family, DESIGN.md §14).
+
+The serving stack's shared mutable state (the verification worklist, the
+async pipeline's inbox/counters, the device slab cache) is protected by
+per-object locks, and the protection is *declared in the source*: a field
+assignment carrying a ``# guarded_by: self._lock`` comment makes the
+invariant checkable.  Rules:
+
+* **LCK001** — a read/write of a ``guarded_by``-annotated field outside a
+  ``with`` block on the declared lock.  ``__init__`` is exempt (no other
+  thread can hold a reference yet).  A helper method whose *caller* holds
+  the lock declares it with the same comment on its ``def`` line.
+  Nested functions/lambdas reset the held-lock set: a closure created
+  under a lock usually runs after it was released.
+* **LCK002** — ``Condition.wait()`` outside a ``while`` predicate loop
+  (wakeups are spurious and racy by contract; an ``if`` is not enough).
+* **LCK003** — a class that starts ``threading.Thread`` workers but has
+  no ``join()`` path anywhere (no ``close()``/``wait()``-style shutdown
+  method), i.e. a structural thread leak.
+* **LCK004** — lock-order inversion: the directed graph of "acquired B
+  while holding A" edges (nested ``with`` blocks, plus calls made while
+  holding a lock into scanned methods that themselves take a lock) has a
+  cycle.  Edges are reported at their acquisition/call sites.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import FileCtx, Finding, Rule, dotted_name
+
+GUARDED_RE = re.compile(r"#\s*guarded_by:\s*(self\.[A-Za-z_]\w*)")
+
+# attribute-call names too generic to resolve to a scanned class's method
+# when building cross-class lock-order edges (dict/list/queue/threading
+# vocabulary would otherwise alias container calls onto scanned methods)
+_GENERIC_METHODS = frozenset({
+    "get", "put", "pop", "popitem", "setdefault", "move_to_end", "append",
+    "appendleft", "popleft", "extend", "clear", "update", "copy", "items",
+    "keys", "values", "wait", "notify", "notify_all", "acquire", "release",
+    "join", "start", "is_alive", "set", "is_set", "result", "add",
+    "remove", "discard", "get_nowait", "put_nowait", "sort", "index",
+    "count", "submit", "cancel",
+})
+
+_THREAD_CTORS = ("Thread",)
+_CONDITION_CTORS = ("Condition",)
+
+
+def _comment_annotation(ctx: FileCtx, lo: int, hi: int) -> Optional[str]:
+    """First ``# guarded_by:`` lock expression on source lines lo..hi."""
+    for ln in range(lo, hi + 1):
+        m = GUARDED_RE.search(ctx.line_text(ln))
+        if m:
+            return m.group(1)
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """'x' for a ``self.x`` attribute node."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+class ClassModel:
+    """Everything the lock rules need to know about one class."""
+
+    def __init__(self, ctx: FileCtx, node: ast.ClassDef):
+        self.ctx = ctx
+        self.node = node
+        self.name = node.name
+        self.methods: List[ast.FunctionDef] = [
+            n for n in node.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        self.guarded: Dict[str, str] = {}       # field -> "self._lock"
+        self.held_by_method: Dict[str, str] = {}  # method -> lock expr
+        self.condition_attrs: Set[str] = set()  # threading.Condition fields
+        self._collect()
+
+    def _collect(self) -> None:
+        for meth in self.methods:
+            held = _comment_annotation(
+                self.ctx, meth.lineno,
+                meth.body[0].lineno - 1 if meth.body else meth.lineno)
+            if held:
+                self.held_by_method[meth.name] = held
+            for stmt in ast.walk(meth):
+                if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    continue
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                attrs = [a for a in map(_self_attr, targets) if a]
+                if not attrs:
+                    continue
+                ann = _comment_annotation(
+                    self.ctx, stmt.lineno,
+                    getattr(stmt, "end_lineno", stmt.lineno))
+                value = getattr(stmt, "value", None)
+                for attr in attrs:
+                    if ann and attr not in self.guarded:
+                        self.guarded[attr] = ann
+                    if (isinstance(value, ast.Call)
+                            and _ctor_match(value, _CONDITION_CTORS)):
+                        self.condition_attrs.add(attr)
+
+
+def _ctor_match(call: ast.Call, names: Tuple[str, ...]) -> bool:
+    d = dotted_name(call.func)
+    return bool(d) and d.rsplit(".", 1)[-1] in names
+
+
+def _with_locks(stmt: ast.With) -> Set[str]:
+    """Lock expressions acquired by one ``with`` statement (self.* only)."""
+    out = set()
+    for item in stmt.items:
+        expr = item.context_expr
+        # unwrap `with self._lock:` and e.g. `with self._cv` alike; also
+        # accept `self._lock.acquire()`-style context managers
+        d = dotted_name(expr)
+        if d and d.startswith("self."):
+            out.add(d)
+    return out
+
+
+class GuardedFieldRule(Rule):
+    """LCK001: annotated fields only under their declared lock."""
+
+    codes = ("LCK001",)
+    name = "guarded-field"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                model = ClassModel(ctx, node)
+                if model.guarded:
+                    yield from self._check_class(ctx, model)
+
+    def _check_class(self, ctx: FileCtx,
+                     model: ClassModel) -> Iterable[Finding]:
+        for meth in model.methods:
+            if meth.name == "__init__":
+                continue
+            held: Set[str] = set()
+            if meth.name in model.held_by_method:
+                held = {model.held_by_method[meth.name]}
+            yield from self._walk(ctx, model, list(meth.body), held)
+
+    def _walk(self, ctx: FileCtx, model: ClassModel,
+              body: List[ast.stmt], held: Set[str]) -> Iterable[Finding]:
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                got = _with_locks(stmt)
+                for item in stmt.items:
+                    yield from self._scan_expr(ctx, model,
+                                               item.context_expr, held)
+                yield from self._walk(ctx, model, stmt.body, held | got)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a nested def may run on another thread after the lock
+                # is gone: reset the held set (unless annotated)
+                inner = _comment_annotation(
+                    ctx, stmt.lineno,
+                    stmt.body[0].lineno - 1 if stmt.body else stmt.lineno)
+                yield from self._walk(ctx, model, stmt.body,
+                                      {inner} if inner else set())
+            else:
+                for field, value in ast.iter_fields(stmt):
+                    vals = value if isinstance(value, list) else [value]
+                    for v in vals:
+                        if isinstance(v, ast.stmt):
+                            yield from self._walk(ctx, model, [v], held)
+                        elif isinstance(v, ast.expr):
+                            yield from self._scan_expr(ctx, model, v, held)
+
+    def _scan_expr(self, ctx: FileCtx, model: ClassModel, expr: ast.expr,
+                   held: Set[str]) -> Iterable[Finding]:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Lambda):
+                continue    # closure body: conservatively checked as a
+                            # lock-free context would over-flag captured
+                            # reads that callers lock; walk() resets defs
+            attr = _self_attr(node)
+            if attr and attr in model.guarded:
+                lock = model.guarded[attr]
+                if lock not in held:
+                    yield ctx.finding(
+                        node, "LCK001",
+                        f"{model.name}.{attr} is guarded_by {lock} but "
+                        f"accessed without holding it")
+
+
+class ConditionWaitRule(Rule):
+    """LCK002: Condition.wait() must sit inside a while predicate loop."""
+
+    codes = ("LCK002",)
+    name = "condition-wait"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                model = ClassModel(ctx, node)
+                if model.condition_attrs:
+                    yield from self._check_class(ctx, model)
+
+    def _check_class(self, ctx: FileCtx,
+                     model: ClassModel) -> Iterable[Finding]:
+        for meth in model.methods:
+            yield from self._walk(meth.body, ctx, model, in_while=False)
+
+    def _walk(self, body: List[ast.stmt], ctx: FileCtx, model: ClassModel,
+              in_while: bool) -> Iterable[Finding]:
+        for stmt in body:
+            inner = in_while or isinstance(stmt, ast.While)
+            for node in ast.iter_child_nodes(stmt):
+                if isinstance(node, ast.stmt):
+                    continue
+                yield from self._scan_expr(node, ctx, model, inner)
+            for field, value in ast.iter_fields(stmt):
+                vals = value if isinstance(value, list) else [value]
+                stmts = [v for v in vals if isinstance(v, ast.stmt)]
+                if stmts:
+                    yield from self._walk(stmts, ctx, model, inner)
+
+    def _scan_expr(self, expr: ast.AST, ctx: FileCtx, model: ClassModel,
+                   in_while: bool) -> Iterable[Finding]:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if (isinstance(func, ast.Attribute) and func.attr == "wait"
+                    and _self_attr(func.value) in model.condition_attrs
+                    and not in_while):
+                yield ctx.finding(
+                    node, "LCK002",
+                    f"{model.name}: Condition {dotted_name(func.value)}"
+                    f".wait() outside a while predicate loop (spurious "
+                    f"wakeups make an if-guard racy)")
+
+
+class ThreadLeakRule(Rule):
+    """LCK003: classes that start threads need a join path."""
+
+    codes = ("LCK003",)
+    name = "thread-leak"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            first_ctor: Optional[ast.Call] = None
+            has_join = False
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    if _ctor_match(sub, _THREAD_CTORS) and first_ctor is None:
+                        first_ctor = sub
+                    if (isinstance(sub.func, ast.Attribute)
+                            and sub.func.attr == "join"):
+                        has_join = True
+            if first_ctor is not None and not has_join:
+                yield ctx.finding(
+                    first_ctor, "LCK003",
+                    f"{node.name} starts threads but defines no "
+                    f"join()/close() shutdown path")
+
+
+class LockOrderRule(Rule):
+    """LCK004: cycle detection over the acquired-while-holding graph."""
+
+    codes = ("LCK004",)
+    name = "lock-order"
+
+    def run_project(self, ctxs: Sequence[FileCtx],
+                    root: str) -> Iterable[Finding]:
+        models: List[ClassModel] = []
+        for ctx in ctxs:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef):
+                    models.append(ClassModel(ctx, node))
+
+        # pass 1: per (class, method), the locks it acquires directly
+        acquires: Dict[str, List[Tuple[str, Set[str]]]] = {}
+        for model in models:
+            for meth in model.methods:
+                locks = set()
+                for sub in ast.walk(meth):
+                    if isinstance(sub, (ast.With, ast.AsyncWith)):
+                        locks |= {self._qual(model, l)
+                                  for l in _with_locks(sub)}
+                if locks:
+                    acquires.setdefault(meth.name, []).append(
+                        (model.name, locks))
+
+        # method names that resolve unambiguously to one scanned class
+        resolvable = {name: infos[0][1]
+                      for name, infos in acquires.items()
+                      if len(infos) == 1 and name not in _GENERIC_METHODS}
+
+        # pass 2: edges (held -> acquired) with their sites
+        edges: Dict[Tuple[str, str], Tuple[FileCtx, int]] = {}
+        for model in models:
+            for meth in model.methods:
+                self._edges(model, list(meth.body), set(),
+                            resolvable, edges)
+
+        graph: Dict[str, Set[str]] = {}
+        for (a, b) in edges:
+            graph.setdefault(a, set()).add(b)
+        bad = [(a, b) for (a, b) in edges if self._reaches(graph, b, a)]
+        for (a, b) in sorted(bad):
+            ctx, line = edges[(a, b)]
+            yield ctx.finding(
+                line, "LCK004",
+                f"lock-order inversion: acquires {b} while holding {a}, "
+                f"but {b} -> {a} is also taken elsewhere")
+
+    def _qual(self, model: ClassModel, lock_expr: str) -> str:
+        return f"{model.name}.{lock_expr[len('self.'):]}"
+
+    def _edges(self, model: ClassModel, body: List[ast.stmt],
+               held: Set[str], resolvable: Dict[str, Set[str]],
+               edges: Dict) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                got = {self._qual(model, l) for l in _with_locks(stmt)}
+                for g in got:
+                    for h in held:
+                        if h != g:
+                            edges.setdefault(
+                                (h, g), (model.ctx, stmt.lineno))
+                self._edges(model, stmt.body, held | got, resolvable, edges)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._edges(model, stmt.body, set(), resolvable, edges)
+            else:
+                if held:
+                    for node in ast.walk(stmt):
+                        if not isinstance(node, ast.Call):
+                            continue
+                        func = node.func
+                        if not isinstance(func, ast.Attribute):
+                            continue
+                        target_locks = resolvable.get(func.attr)
+                        if not target_locks:
+                            continue
+                        for g in target_locks:
+                            for h in held:
+                                if h != g:
+                                    edges.setdefault(
+                                        (h, g), (model.ctx, node.lineno))
+                for field, value in ast.iter_fields(stmt):
+                    vals = value if isinstance(value, list) else [value]
+                    stmts = [v for v in vals if isinstance(v, ast.stmt)]
+                    if stmts:
+                        self._edges(model, stmts, held, resolvable, edges)
+
+    def _reaches(self, graph: Dict[str, Set[str]], src: str,
+                 dst: str) -> bool:
+        seen, stack = set(), [src]
+        while stack:
+            n = stack.pop()
+            if n == dst:
+                return True
+            if n in seen:
+                continue
+            seen.add(n)
+            stack.extend(graph.get(n, ()))
+        return False
+
+
+RULES = (GuardedFieldRule, ConditionWaitRule, ThreadLeakRule, LockOrderRule)

@@ -1,0 +1,279 @@
+"""Pallas kernel-contract rules (PLC family, DESIGN.md §14).
+
+Every ``pl.pallas_call(...)`` site in ``kernels/`` makes promises the
+Python type system can't see: the kernel's positional refs must line up
+one-to-one with ``in_specs`` + outputs + ``scratch_shapes``; each
+BlockSpec index map must take exactly one argument per grid axis; SMEM
+blocks hold scalars and may only be read with scalar indices; and what
+the kernel stores must match the ``out_shape`` dtype.  Drift in any of
+these surfaces as an opaque Mosaic/XLA error (or worse, silent
+miscompilation under ``interpret=True``) far from the edit that caused
+it.  These rules re-check the contract on every lint run:
+
+* **PLC301** — kernel arity mismatch: positional params != len(in_specs)
+  + n_outputs + len(scratch_shapes).  Kwonly params bound by
+  ``functools.partial`` are excluded; an *unbound* kwonly param without a
+  default is its own finding.  Also: out_specs/out_shape count mismatch.
+* **PLC302** — a BlockSpec ``index_map`` lambda whose non-default arity
+  differs from the grid rank.
+* **PLC303** — an SMEM-spec'd kernel ref subscripted with a slice or
+  ``...`` (SMEM is scalar-access only on TPU).
+* **PLC304** — the kernel stores ``.astype(jnp.X)`` into an output ref
+  whose ``ShapeDtypeStruct`` declares ``jnp.Y``.
+
+Resolution is best-effort and local: specs/grids given as literals or as
+module/function-local ``name = (...)`` assignments resolve; anything
+dynamic is skipped rather than guessed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.core import FileCtx, Finding, Rule, dotted_name, last_name
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _Resolver:
+    """Resolve Name references to literal assignments (module scope plus
+    the local scope enclosing the pallas_call)."""
+
+    def __init__(self, ctx: FileCtx, site: ast.AST):
+        self.env: Dict[str, ast.AST] = {}
+        scopes: List[ast.AST] = [ctx.tree]
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(node):
+                    if sub is site:
+                        scopes.append(node)
+                        break
+        for scope in scopes:
+            for stmt in ast.walk(scope):
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    tgt = stmt.targets[0]
+                    if isinstance(tgt, ast.Name):
+                        self.env[tgt.id] = stmt.value
+
+    def resolve(self, node: Optional[ast.AST],
+                depth: int = 0) -> Optional[ast.AST]:
+        while isinstance(node, ast.Name) and depth < 8:
+            nxt = self.env.get(node.id)
+            if nxt is None or nxt is node:
+                return node
+            node = nxt
+            depth += 1
+        return node
+
+
+def _as_elements(node: Optional[ast.AST]) -> Optional[List[ast.AST]]:
+    """Elements of a tuple/list literal; a single non-sequence literal is
+    a 1-element spec; None if unresolvable."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    return [node]
+
+
+def _kernel_fn(ctx: FileCtx, arg: ast.AST,
+               resolver: _Resolver) -> Tuple[Optional[ast.AST], set]:
+    """(FunctionDef|Lambda, kwargs bound via functools.partial)."""
+    arg = resolver.resolve(arg)
+    bound: set = set()
+    if isinstance(arg, ast.Call) and last_name(arg.func) == "partial":
+        bound = {kw.arg for kw in arg.keywords if kw.arg}
+        if arg.args:
+            arg = resolver.resolve(arg.args[0])
+    if isinstance(arg, ast.Lambda):
+        return arg, bound
+    if isinstance(arg, ast.Name):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == arg.id:
+                return node, bound
+    if isinstance(arg, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return arg, bound
+    return None, bound
+
+
+def _dtype_of(node: Optional[ast.AST]) -> Optional[str]:
+    """'int32' from jnp.int32 / 'int32' literals; None if dynamic."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Call) and last_name(node.func) == "dtype":
+        return _dtype_of(node.args[0]) if node.args else None
+    return None
+
+
+def _is_smem(spec: ast.AST) -> bool:
+    for node in ast.walk(spec):
+        d = dotted_name(node)
+        if d and d.rsplit(".", 1)[-1] == "SMEM":
+            return True
+    return False
+
+
+class PallasContractRule(Rule):
+    codes = ("PLC301", "PLC302", "PLC303", "PLC304")
+    name = "pallas-contract"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and last_name(node.func) == "pallas_call":
+                yield from self._check_site(ctx, node)
+
+    def _check_site(self, ctx: FileCtx,
+                    call: ast.Call) -> Iterable[Finding]:
+        resolver = _Resolver(ctx, call)
+        kernel_arg = call.args[0] if call.args else _kw(call, "kernel")
+        if kernel_arg is None:
+            return
+        kernel, bound_kwargs = _kernel_fn(ctx, kernel_arg, resolver)
+
+        in_specs = _as_elements(resolver.resolve(_kw(call, "in_specs")))
+        out_specs = _as_elements(resolver.resolve(_kw(call, "out_specs")))
+        out_shape = _as_elements(resolver.resolve(_kw(call, "out_shape")))
+        scratch = _as_elements(resolver.resolve(_kw(call, "scratch_shapes")))
+        grid = resolver.resolve(_kw(call, "grid"))
+        grid_rank = (len(grid.elts) if isinstance(grid, (ast.Tuple, ast.List))
+                     else (1 if isinstance(grid, ast.Constant) else None))
+
+        n_in = len(in_specs) if in_specs is not None else None
+        n_out = len(out_shape) if out_shape is not None else (
+            len(out_specs) if out_specs is not None else None)
+        n_scratch = len(scratch) if scratch is not None else 0
+
+        # PLC301: arity
+        if kernel is not None and n_in is not None and n_out is not None:
+            a = kernel.args
+            pos = len(a.posonlyargs) + len(a.args)
+            unbound_kwonly = [
+                kw.arg for kw, d in zip(a.kwonlyargs, a.kw_defaults)
+                if kw.arg not in bound_kwargs and d is None]
+            expected = n_in + n_out + n_scratch
+            if pos != expected:
+                kname = getattr(kernel, "name", "<lambda>")
+                yield ctx.finding(
+                    call, "PLC301",
+                    f"kernel {kname} takes {pos} positional refs but "
+                    f"pallas_call provides {expected} "
+                    f"({n_in} in_specs + {n_out} outputs + "
+                    f"{n_scratch} scratch)")
+            for kwname in unbound_kwonly:
+                kname = getattr(kernel, "name", "<lambda>")
+                yield ctx.finding(
+                    call, "PLC301",
+                    f"kernel {kname} keyword-only param '{kwname}' is "
+                    f"neither partial-bound nor defaulted")
+        if (out_specs is not None and out_shape is not None
+                and len(out_specs) != len(out_shape)):
+            yield ctx.finding(
+                call, "PLC301",
+                f"out_specs has {len(out_specs)} entries but out_shape "
+                f"declares {len(out_shape)} outputs")
+
+        # PLC302: index-map arity vs grid rank
+        if grid_rank is not None:
+            specs = (in_specs or []) + (out_specs or [])
+            for spec in specs:
+                spec = resolver.resolve(spec)
+                if not isinstance(spec, ast.Call):
+                    continue
+                imap = (spec.args[1] if len(spec.args) > 1
+                        else _kw(spec, "index_map"))
+                imap = resolver.resolve(imap)
+                if isinstance(imap, ast.Lambda):
+                    la = imap.args
+                    required = (len(la.posonlyargs) + len(la.args)
+                                - len(la.defaults))
+                    if required != grid_rank:
+                        yield ctx.finding(
+                            spec, "PLC302",
+                            f"BlockSpec index_map takes {required} grid "
+                            f"indices but the grid has rank {grid_rank}")
+
+        # PLC303: SMEM refs only scalar-indexed
+        if kernel is not None and in_specs is not None \
+                and isinstance(kernel, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+            a = kernel.args
+            pos_params = [p.arg for p in a.posonlyargs + a.args]
+            for i, spec in enumerate(in_specs):
+                spec_r = resolver.resolve(spec)
+                if spec_r is None or not _is_smem(spec_r):
+                    continue
+                if i >= len(pos_params):
+                    continue
+                ref = pos_params[i]
+                for sub in ast.walk(kernel):
+                    if (isinstance(sub, ast.Subscript)
+                            and isinstance(sub.value, ast.Name)
+                            and sub.value.id == ref
+                            and self._nonscalar_index(sub.slice)):
+                        yield ctx.finding(
+                            sub, "PLC303",
+                            f"SMEM ref '{ref}' read with a non-scalar "
+                            f"index (SMEM is scalar-access only)")
+
+        # PLC304: stored dtype vs out_shape dtype
+        if kernel is not None and out_shape is not None \
+                and isinstance(kernel, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+            a = kernel.args
+            pos_params = [p.arg for p in a.posonlyargs + a.args]
+            n_in_eff = n_in if n_in is not None else 0
+            for j, shape_decl in enumerate(out_shape):
+                shape_decl = resolver.resolve(shape_decl)
+                declared = None
+                if isinstance(shape_decl, ast.Call) and last_name(
+                        shape_decl.func) == "ShapeDtypeStruct":
+                    dnode = (shape_decl.args[1] if len(shape_decl.args) > 1
+                             else _kw(shape_decl, "dtype"))
+                    declared = _dtype_of(resolver.resolve(dnode))
+                if declared is None:
+                    continue
+                idx = n_in_eff + j
+                if idx >= len(pos_params):
+                    continue
+                ref = pos_params[idx]
+                for sub in ast.walk(kernel):
+                    if not (isinstance(sub, ast.Assign)
+                            and len(sub.targets) == 1
+                            and isinstance(sub.targets[0], ast.Subscript)
+                            and isinstance(sub.targets[0].value, ast.Name)
+                            and sub.targets[0].value.id == ref):
+                        continue
+                    v = sub.value
+                    if isinstance(v, ast.Call) and isinstance(
+                            v.func, ast.Attribute) \
+                            and v.func.attr == "astype":
+                        stored = _dtype_of(v.args[0] if v.args
+                                           else _kw(v, "dtype"))
+                        if stored is not None and stored != declared:
+                            yield ctx.finding(
+                                sub, "PLC304",
+                                f"kernel stores .astype({stored}) into "
+                                f"'{ref}' but out_shape declares {declared}")
+
+    def _nonscalar_index(self, idx: ast.AST) -> bool:
+        if isinstance(idx, (ast.Slice,)):
+            return True
+        if isinstance(idx, ast.Constant) and idx.value is Ellipsis:
+            return True
+        if isinstance(idx, ast.Tuple):
+            return any(self._nonscalar_index(e) for e in idx.elts)
+        return False
+
+
+RULES = (PallasContractRule,)

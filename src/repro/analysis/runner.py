@@ -1,0 +1,131 @@
+"""repro-lint runner: load targets, run rules, apply suppressions and
+the baseline, report (DESIGN.md §14).
+
+CLI (via ``scripts/lint.py`` / ``make lint``):
+
+    python scripts/lint.py                 # whole suite, exit 1 on new
+    python scripts/lint.py --select LCK    # one family (prefix match)
+    python scripts/lint.py --select DOC    # == make check-docs
+    python scripts/lint.py --list-rules
+    python scripts/lint.py --update-baseline
+
+Pure stdlib — safe as the first CI gate before any heavy import.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import docs, jax_rules, locks, pallas_rules
+from repro.analysis.core import (FileCtx, Finding, Rule, filter_suppressed,
+                                 load_baseline, new_findings, write_baseline)
+from repro.analysis.targets import targets_for
+
+# family prefix -> rule classes
+FAMILIES: Dict[str, Tuple[type, ...]] = {
+    "LCK": locks.RULES,
+    "JAX": jax_rules.RULES,
+    "PLC": pallas_rules.RULES,
+    "DOC": docs.RULES,
+}
+
+DEFAULT_BASELINE = "scripts/lint_baseline.json"
+
+
+def all_rules() -> List[Tuple[str, Rule]]:
+    out = []
+    for fam, classes in FAMILIES.items():
+        for cls in classes:
+            out.append((fam, cls()))
+    return out
+
+
+def _load_ctxs(root: str, paths: Iterable[str]) -> Dict[str, FileCtx]:
+    ctxs: Dict[str, FileCtx] = {}
+    for rel in paths:
+        if rel in ctxs:
+            continue
+        abspath = os.path.join(root, rel)
+        try:
+            ctxs[rel] = FileCtx.load(abspath, rel)
+        except (OSError, SyntaxError) as e:
+            raise SystemExit(f"lint: cannot parse {rel}: {e}")
+    return ctxs
+
+
+def run_lint(root: str, select: Optional[str] = None,
+             files: Optional[Sequence[str]] = None
+             ) -> Tuple[List[Finding], Dict[str, FileCtx]]:
+    """All unsuppressed findings for the selected families."""
+    fam_targets = targets_for(root)
+    findings: List[Finding] = []
+    ctx_cache: Dict[str, FileCtx] = {}
+    for fam, rule in all_rules():
+        if select and not any(c.startswith(select.upper())
+                              for c in rule.codes):
+            continue
+        paths = list(files) if files is not None else fam_targets[fam]
+        missing = [p for p in paths if p not in ctx_cache]
+        ctx_cache.update(_load_ctxs(root, missing))
+        ctxs = [ctx_cache[p] for p in paths]
+        findings.extend(rule.run_project(ctxs, root))
+    return filter_suppressed(findings, ctx_cache), ctx_cache
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint.py",
+        description="repro-lint: lock discipline, JAX hygiene, Pallas "
+                    "contracts, doc citations (DESIGN.md §14)")
+    ap.add_argument("--root", default=".", help="repo root")
+    ap.add_argument("--select", default=None, metavar="PREFIX",
+                    help="only codes starting with PREFIX (LCK/JAX/PLC/DOC "
+                         "or a full code like LCK001)")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="override target files (repo-relative)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline with current findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for fam, rule in all_rules():
+            print(f"{','.join(rule.codes):24s} {rule.name}")
+        return 0
+
+    root = os.path.abspath(args.root)
+    baseline_path = os.path.join(
+        root, args.baseline or DEFAULT_BASELINE)
+
+    findings, _ = run_lint(root, select=args.select, files=args.files)
+
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"lint: baseline updated with {len(findings)} finding(s)")
+        return 0
+
+    if args.no_baseline:
+        fresh = findings
+    else:
+        fresh = new_findings(findings, load_baseline(baseline_path))
+
+    for f in fresh:
+        print(f.render())
+    n_base = len(findings) - len(fresh)
+    if fresh:
+        print(f"lint: {len(fresh)} new finding(s)"
+              + (f" ({n_base} baselined)" if n_base else ""))
+        return 1
+    print("lint: clean"
+          + (f" ({n_base} baselined finding(s) tolerated)" if n_base else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Which files each rule family scans (DESIGN.md §14).
+
+Rules are domain-specific, so they run where their domain lives rather
+than blanket-scanning the tree:
+
+* LCK — the threaded serving/training/data surface.
+* JAX — the jit/shard_map modules (plus kernel op wrappers).
+* PLC — every module under ``kernels/``.
+* DOC — project-wide text scan (handled inside the rule itself).
+
+``extra_roots`` lets tests point the runner at fixture trees instead.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Tuple
+
+LOCK_FILES = (
+    "src/repro/serve/graph_engine.py",
+    "src/repro/serve/pipeline.py",
+    "src/repro/core/device_cache.py",
+    "src/repro/train/checkpoint.py",
+    "src/repro/data/pipeline.py",
+)
+
+JAX_FILES = (
+    "src/repro/core/engine.py",
+    "src/repro/core/distributed.py",
+)
+
+KERNEL_DIR = "src/repro/kernels"
+
+
+def _glob_py(root: str, subdir: str) -> List[str]:
+    base = os.path.join(root, subdir)
+    out = []
+    if os.path.isdir(base):
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    out.append(os.path.relpath(
+                        os.path.join(dirpath, name), root))
+    return [p.replace(os.sep, "/") for p in out]
+
+
+def targets_for(root: str) -> Dict[str, List[str]]:
+    """family -> repo-relative paths (existing files only)."""
+    kernels = _glob_py(root, KERNEL_DIR)
+    fam = {
+        "LCK": [p for p in LOCK_FILES
+                if os.path.exists(os.path.join(root, p))],
+        "JAX": [p for p in JAX_FILES
+                if os.path.exists(os.path.join(root, p))] + kernels,
+        "PLC": kernels,
+        "DOC": [],  # the doc rule walks the tree itself
+    }
+    return fam

@@ -46,13 +46,23 @@ class DeviceSlabCache:
 
     def __init__(self, max_entries: int = 16):
         self.max_entries = int(max_entries)
-        self._entries: "OrderedDict[Hashable, Dict[str, Any]]" = OrderedDict()
         self._lock = threading.Lock()
-        self.stats: Dict[str, int] = {"hits": 0, "misses": 0,
-                                      "evictions": 0, "invalidations": 0}
+        self._entries: "OrderedDict[Hashable, Dict[str, Any]]" = \
+            OrderedDict()                       # guarded_by: self._lock
+        self.stats: Dict[str, int] = {          # guarded_by: self._lock
+            "hits": 0, "misses": 0, "evictions": 0, "invalidations": 0}
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
+
+    def snapshot(self) -> Dict[str, int]:
+        """Consistent copy of the counters plus the current size —
+        readers must not iterate ``stats`` while a builder commits."""
+        with self._lock:
+            out = dict(self.stats)
+            out["entries"] = len(self._entries)
+            return out
 
     def get_or_build(self, key: Hashable, field: str,
                      build: Callable[[], Any]) -> Any:

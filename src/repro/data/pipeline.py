@@ -14,7 +14,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -74,11 +74,37 @@ class ShardedLoader:
         self.timeout = straggler_timeout_s
         self.straggler = straggler
         self.reissues = 0
+        # live reader threads (daemonized; pruned per batch, joined by
+        # close() so lifecycle is deterministic, not exit-time luck)
+        self._readers: List[threading.Thread] = []
 
     def _read(self, index: int, out_q: "queue.Queue", attempt: int) -> None:
         if self.straggler is not None and attempt == 0:
             self.straggler.maybe_stall(index)
         out_q.put((index, self.ds.batch(index)))
+
+    def _spawn(self, index: int, q: "queue.Queue",
+               attempt: int) -> threading.Thread:
+        self._readers = [t for t in self._readers if t.is_alive()]
+        t = threading.Thread(target=self._read, args=(index, q, attempt),
+                             daemon=True)
+        self._readers.append(t)
+        t.start()
+        return t
+
+    def close(self, timeout: Optional[float] = 10.0) -> None:
+        """Join any still-running reader (a stalled speculative loser may
+        outlive its batch) — same shutdown semantics as
+        ``AsyncGraphQueryEngine.close``; safe to call repeatedly."""
+        for t in self._readers:
+            t.join(timeout)
+        self._readers = [t for t in self._readers if t.is_alive()]
+
+    def __enter__(self) -> "ShardedLoader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         return self.iterate()
@@ -88,17 +114,13 @@ class ShardedLoader:
         index = start
         while stop is None or index < stop:
             q: "queue.Queue" = queue.Queue()
-            t = threading.Thread(target=self._read, args=(index, q, 0),
-                                 daemon=True)
-            t.start()
+            self._spawn(index, q, 0)
             try:
                 _, batch = q.get(timeout=self.timeout)
             except queue.Empty:
                 # speculative double-issue: spare worker, first result wins
                 self.reissues += 1
-                t2 = threading.Thread(target=self._read, args=(index, q, 1),
-                                      daemon=True)
-                t2.start()
+                self._spawn(index, q, 1)
                 _, batch = q.get()
             yield batch
             index += 1

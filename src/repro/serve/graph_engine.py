@@ -76,10 +76,10 @@ class _LRU:
 
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
-        self._d: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
+        self._d: OrderedDict = OrderedDict()    # guarded_by: self._lock
+        self.hits = 0                           # guarded_by: self._lock
+        self.misses = 0                         # guarded_by: self._lock
 
     def get(self, key):
         with self._lock:
@@ -170,14 +170,20 @@ class VerifyScheduler:
             self._pool = ProcessPoolExecutor(
                 max_workers=self.workers,
                 mp_context=multiprocessing.get_context("spawn"))
-        self._heap: list = []
         self._seq = itertools.count()
         self._cv = threading.Condition()
-        self._inflight = 0          # pairs being run by cooperative drains
-        self._closed = False
+        self._heap: list = []       # guarded_by: self._cv
+        self._inflight = 0          # guarded_by: self._cv
+        self._closed = False        # guarded_by: self._cv
         self._interval_sink = interval_sink
-        self.stats: Dict[str, int] = {
+        self.stats: Dict[str, int] = {          # guarded_by: self._cv
             "verified_pairs": 0, "expired_pairs": 0, "resumed_runs": 0}
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Consistent copy of the worklist counters (readers must not
+        iterate ``stats`` while a verifier thread is publishing)."""
+        with self._cv:
+            return dict(self.stats)
 
     # ---- producer side -----------------------------------------------------
     def add_job(self, graph: Graph, tau: int, ids: Sequence[int],

@@ -46,11 +46,14 @@ class QueryTicket:
         self.request = request
         self._events: "queue.Queue" = queue.Queue()
         self._done = threading.Event()
+        # _result/_error are published under _lock by _resolve and only
+        # read after _done is set (or inside _lock) — the Event is the
+        # memory barrier, so they carry no guarded_by annotation
         self._result: Optional[QueryResult] = None
         self._error: Optional[BaseException] = None
         self._lock = threading.Lock()
-        self._resolved = False
-        self._callbacks: List = []        # fn(result_or_None, error_or_None)
+        self._resolved = False            # guarded_by: self._lock
+        self._callbacks: List = []        # guarded_by: self._lock
         self._streamed_live = False
 
     def done(self) -> bool:
@@ -200,10 +203,11 @@ class AsyncGraphQueryEngine:
             workers=num_workers)
         self._record_intervals = record_intervals
         self._cv = threading.Condition()
-        self._inbox: "deque[Tuple[float, QueryTicket]]" = deque()
-        self._outstanding = 0
-        self._closing = False
-        self._closed = False
+        self._inbox: "deque[Tuple[float, QueryTicket]]" = \
+            deque()                 # guarded_by: self._cv
+        self._outstanding = 0       # guarded_by: self._cv
+        self._closing = False       # guarded_by: self._cv
+        self._closed = False        # guarded_by: self._cv
         self._filter_thread = threading.Thread(
             target=self._filter_loop, name=f"{name}-filter", daemon=True)
         self._workers = [
@@ -261,12 +265,14 @@ class AsyncGraphQueryEngine:
             self.scheduler.close()   # workers exit once the heap is empty
             for w in self._workers:
                 w.join(timeout)
-            self._closed = not any(
+            closed = not any(
                 t.is_alive() for t in [self._filter_thread, *self._workers])
+            with self._cv:
+                self._closed = closed
             # tear the pool down even on a timed-out close: a wedged
             # worker's later dispatch falls back to in-process slices
             # (never wrong), whereas a leaked spawn pool lives forever
-            self.scheduler.shutdown(wait=self._closed)
+            self.scheduler.shutdown(wait=closed)
 
     def __enter__(self) -> "AsyncGraphQueryEngine":
         return self
@@ -276,9 +282,12 @@ class AsyncGraphQueryEngine:
 
     @property
     def stats(self) -> dict:
-        """Wrapped-engine counters plus the shared worklist's."""
-        s = dict(self.engine.stats)
-        s.update(self.scheduler.stats)
+        """Wrapped-engine counters plus the shared worklist's.  Each side
+        is copied under its own lock — sequentially, never nested, so no
+        lock-order edge between the pipeline and the scheduler exists."""
+        with self._cv:
+            s = dict(self.engine.stats)
+        s.update(self.scheduler.stats_snapshot())
         return s
 
     # ---- stage: dynamic batch former + device filter -----------------------
@@ -316,8 +325,11 @@ class AsyncGraphQueryEngine:
     def _process_batch(self, tickets: List[QueryTicket]) -> None:
         eng = self.engine
         requests = [t.request for t in tickets]
-        eng.stats["batches"] += 1
-        eng.stats["queries"] += len(requests)
+        # the wrapped engine's counters are shared with _on_done (verifier
+        # threads) and the stats property — mutate them under _cv only
+        with self._cv:
+            eng.stats["batches"] += 1
+            eng.stats["queries"] += len(requests)
         results, fresh, aliases, keys, qtuples = eng._admit(requests)
         # cache hits resolve immediately — no pipeline latency at all
         for i, res in enumerate(results):
@@ -336,7 +348,8 @@ class AsyncGraphQueryEngine:
         batch = eng._batched_candidates(graphs, taus,
                                         [qtuples[i] for i in fresh])
         t1 = time.perf_counter()
-        eng.stats["filter_s"] += t1 - t0
+        with self._cv:
+            eng.stats["filter_s"] += t1 - t0
         if self._record_intervals:
             self.filter_intervals.append((t0, t1))
 

@@ -71,6 +71,18 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
+    def close(self) -> None:
+        """Join the in-flight background write and surface its error —
+        the shutdown verb the serving/loader classes standardise on
+        (``AsyncGraphQueryEngine.close`` / ``ShardedLoader.close``)."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def _write(self, step: int, host_tree: Any) -> str:
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"

@@ -1,0 +1,3 @@
+"""Cites DESIGN.md (the fixture one): a good one and a dangling one."""
+GOOD = "DESIGN.md §1"
+BAD = "DESIGN.md §9"    # expect: DOC401

@@ -1,0 +1,23 @@
+"""Fixture: Python control flow on traced values inside jit."""
+import jax
+
+
+@jax.jit
+def branch(x):
+    if x > 0:               # expect: JAX101
+        return x
+    return -x
+
+
+@jax.jit
+def spin(x):
+    while x.sum() > 0:      # expect: JAX101
+        x = x - 1
+    return x
+
+
+@jax.jit
+def sweep(x):
+    for v in x:             # expect: JAX101
+        x = x + v
+    return x

@@ -1,0 +1,25 @@
+"""Fixture twin: control flow on host values only (shapes, statics,
+is-None tests, shape-arithmetic helpers)."""
+import functools
+
+import jax
+
+
+def _bucket(m, n):
+    while m < n:
+        m *= 2
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def clean(x, n=None, mode="dense"):
+    for i in range(x.ndim):
+        x = x + i
+    if x.shape[0] > 2:
+        x = x * 2
+    if mode == "sparse":
+        x = x * 3
+    k = _bucket(1, x.shape[0])
+    if n is None:
+        return x * k
+    return (x + n) * k

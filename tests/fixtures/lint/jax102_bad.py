@@ -1,0 +1,19 @@
+"""Fixture: host syncs on traced values inside jit."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def item_sync(x):
+    total = x.sum()
+    return total.item()     # expect: JAX102
+
+
+@jax.jit
+def np_sync(x):
+    return np.asarray(x)    # expect: JAX102
+
+
+@jax.jit
+def bool_sync(x):
+    return bool(x)          # expect: JAX102

@@ -1,0 +1,15 @@
+"""Fixture twin: .item()/np.asarray only on host values or outside the
+jit-reachable closure."""
+import jax
+import numpy as np
+
+
+def host_only(x):
+    return np.asarray(x)
+
+
+@jax.jit
+def clean(x):
+    n = x.shape[0]
+    pad = int(n * 2)
+    return x + pad

@@ -1,0 +1,14 @@
+"""Fixture: static_argnames drift and unhashable static defaults."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "missing"))  # expect: JAX103
+def stale(x, mode="dense"):
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def mutable_default(x, opts=[]):    # expect: JAX103
+    return x

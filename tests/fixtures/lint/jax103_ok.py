@@ -1,0 +1,9 @@
+"""Fixture twin: statics name real params, hashable defaults."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "width"))
+def clean(x, mode="dense", width=128):
+    return x

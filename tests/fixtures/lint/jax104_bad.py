@@ -1,0 +1,16 @@
+"""Fixture: jitted-callable construction inside a loop body."""
+import jax
+
+
+def run_all(fns, x):
+    outs = []
+    for f in fns:
+        jf = jax.jit(f)             # expect: JAX104
+        outs.append(jf(x))
+    return outs
+
+
+def retry(f, x):
+    while x is None:
+        x = jax.jit(f)(0)           # expect: JAX104
+    return x

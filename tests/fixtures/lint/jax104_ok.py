@@ -1,0 +1,10 @@
+"""Fixture twin: jit constructed once, called in the loop."""
+import jax
+
+
+def run_all(fns, x):
+    jitted = [jax.jit(f) for f in fns]
+    outs = []
+    for jf in jitted:
+        outs.append(jf(x))
+    return outs

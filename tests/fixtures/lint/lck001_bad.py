@@ -1,0 +1,18 @@
+"""Fixture: guarded field touched outside its lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0          # guarded_by: self._lock
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def peek(self):
+        return self.count       # expect: LCK001
+
+    def reset(self):
+        self.count = 0          # expect: LCK001

@@ -1,0 +1,26 @@
+"""Fixture twin: every guarded access holds the lock (or is __init__,
+or a caller-holds-lock helper)."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0          # guarded_by: self._lock
+
+    def bump(self):
+        with self._lock:
+            self._bump_locked()
+
+    def _bump_locked(self):     # guarded_by: self._lock
+        self.count += 1
+
+    def peek(self):
+        with self._lock:
+            return self.count
+
+    def schedule(self):
+        def later():
+            with self._lock:
+                self.count += 1
+        return later

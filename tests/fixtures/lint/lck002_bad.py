@@ -1,0 +1,14 @@
+"""Fixture: Condition.wait guarded by `if`, not a predicate loop."""
+import threading
+
+
+class Box:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.ready = False
+
+    def take(self):
+        with self._cv:
+            if not self.ready:
+                self._cv.wait()     # expect: LCK002
+            self.ready = False

@@ -1,0 +1,14 @@
+"""Fixture twin: the wait sits inside a while predicate loop."""
+import threading
+
+
+class Box:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.ready = False
+
+    def take(self):
+        with self._cv:
+            while not self.ready:
+                self._cv.wait()
+            self.ready = False

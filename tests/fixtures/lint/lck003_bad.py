@@ -1,0 +1,8 @@
+"""Fixture: thread started, no join/close path anywhere in the class."""
+import threading
+
+
+class Leaky:
+    def __init__(self):
+        self._t = threading.Thread(target=print, daemon=True)  # expect: LCK003
+        self._t.start()

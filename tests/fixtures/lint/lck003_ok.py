@@ -1,0 +1,11 @@
+"""Fixture twin: the worker thread has an explicit join path."""
+import threading
+
+
+class Managed:
+    def __init__(self):
+        self._t = threading.Thread(target=print, daemon=True)
+        self._t.start()
+
+    def close(self):
+        self._t.join()

@@ -1,0 +1,18 @@
+"""Fixture: AB/BA nested acquisition — a lock-order inversion."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._la = threading.Lock()
+        self._lb = threading.Lock()
+
+    def forward(self):
+        with self._la:
+            with self._lb:      # expect: LCK004
+                pass
+
+    def backward(self):
+        with self._lb:
+            with self._la:      # expect: LCK004
+                pass

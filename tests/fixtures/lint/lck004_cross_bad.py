@@ -1,0 +1,31 @@
+"""Fixture: cross-class inversion through method calls made under a
+lock into methods that themselves lock."""
+import threading
+
+
+class Sched:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.pipe = None
+
+    def kick(self):
+        with self._cv:
+            pass
+
+    def ping(self):
+        with self._cv:
+            self.pipe.poke_locked()     # expect: LCK004
+
+
+class Pipe:
+    def __init__(self):
+        self._cv2 = threading.Condition()
+        self.sched = Sched()
+
+    def poke_locked(self):
+        with self._cv2:
+            pass
+
+    def poke(self):
+        with self._cv2:
+            self.sched.kick()           # expect: LCK004

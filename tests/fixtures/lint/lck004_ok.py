@@ -1,0 +1,18 @@
+"""Fixture twin: both paths acquire in the same A-then-B order."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._la = threading.Lock()
+        self._lb = threading.Lock()
+
+    def forward(self):
+        with self._la:
+            with self._lb:
+                pass
+
+    def also_forward(self):
+        with self._la:
+            with self._lb:
+                pass

@@ -1,0 +1,18 @@
+"""Fixture: kernel arity disagrees with in_specs + outputs + scratch."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, ghost_ref):
+    o_ref[...] = x_ref[...]
+
+
+def call(x):
+    return pl.pallas_call(      # expect: PLC301
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    )(x)

@@ -1,0 +1,19 @@
+"""Fixture: SMEM block read with a non-scalar index."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, o_ref):
+    o_ref[...] = jnp.zeros((8,), jnp.float32) + s_ref[...]  # expect: PLC303
+
+
+def call(scalars):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+    )(scalars)

@@ -1,0 +1,18 @@
+"""Fixture: kernel stores a dtype other than the declared out_shape."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32)     # expect: PLC304
+
+
+def call(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.int32),
+    )(x)

@@ -1,0 +1,30 @@
+"""Fixture twin: a contract-clean pallas_call — arity, index maps,
+scalar SMEM reads, matching dtypes (partial-bound kwonly config)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(s_ref, x_ref, o_ref, acc_ref, *, scale: float):
+    n = s_ref[0]
+    acc_ref[...] = x_ref[...].astype(jnp.float32) * scale + n
+    o_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+def call(scalars, x):
+    kernel = functools.partial(_kernel, scale=2.0)
+    grid = (2, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((16, 128), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+    )(scalars, x)

@@ -1,0 +1,188 @@
+"""repro-lint analyzer tests (DESIGN.md §14).
+
+Fixture-driven golden findings: every rule code has a seeded-violation
+fixture under ``tests/fixtures/lint/`` whose ``# expect: CODE`` markers
+are the exact (line, code) set the analyzer must produce, plus a clean
+twin that must produce nothing.  Also covered: inline suppressions, the
+baseline mechanism (tolerates baselined fingerprints across line drift,
+blocks new ones, multiplicity-aware), the legacy check-docs shim, and
+the real tree linting clean end-to-end.
+
+Pure stdlib on purpose — these tests must run without jax/numpy, like
+the lint gate itself.
+"""
+import json
+import os
+import subprocess
+import sys
+from collections import Counter
+
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if os.path.join(REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.core import (Finding, FileCtx, filter_suppressed,
+                                 load_baseline, new_findings, write_baseline)
+from repro.analysis.docs import DocCitationRule
+from repro.analysis.locks import GuardedFieldRule
+from repro.analysis.runner import all_rules, run_lint
+
+FIX = "tests/fixtures/lint"
+
+
+def _expected(relpath):
+    """(line, code) pairs from the fixture's ``# expect:`` markers."""
+    out = set()
+    with open(os.path.join(REPO, relpath), encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if "# expect:" in line:
+                for code in line.split("# expect:")[1].split(","):
+                    out.add((i, code.strip().split()[0]))
+    return out
+
+
+def _got(relpath, select):
+    findings, _ = run_lint(REPO, select=select, files=[relpath])
+    return {(f.line, f.code) for f in findings}
+
+
+FIXTURES = [
+    ("lck001_bad.py", "LCK"), ("lck001_ok.py", "LCK"),
+    ("lck002_bad.py", "LCK"), ("lck002_ok.py", "LCK"),
+    ("lck003_bad.py", "LCK"), ("lck003_ok.py", "LCK"),
+    ("lck004_bad.py", "LCK"), ("lck004_cross_bad.py", "LCK"),
+    ("lck004_ok.py", "LCK"),
+    ("jax101_bad.py", "JAX"), ("jax101_ok.py", "JAX"),
+    ("jax102_bad.py", "JAX"), ("jax102_ok.py", "JAX"),
+    ("jax103_bad.py", "JAX"), ("jax103_ok.py", "JAX"),
+    ("jax104_bad.py", "JAX"), ("jax104_ok.py", "JAX"),
+    ("plc301_bad.py", "PLC"), ("plc302_bad.py", "PLC"),
+    ("plc303_bad.py", "PLC"), ("plc304_bad.py", "PLC"),
+    ("plc_ok.py", "PLC"),
+]
+
+
+@pytest.mark.parametrize("name,family", FIXTURES,
+                         ids=[n for n, _ in FIXTURES])
+def test_fixture_findings_exact(name, family):
+    rel = f"{FIX}/{name}"
+    want = _expected(rel)
+    if name.endswith("_ok.py"):
+        assert want == set(), f"clean twin {name} must carry no markers"
+    else:
+        assert want, f"violation fixture {name} must carry expect markers"
+    assert _got(rel, family) == want
+
+
+def test_every_rule_code_has_a_violation_fixture():
+    """The fixture set stays exhaustive as rule families grow."""
+    covered = set()
+    for name, _fam in FIXTURES:
+        covered |= {c for _ln, c in _expected(f"{FIX}/{name}")}
+    covered |= {"DOC400", "DOC401"}          # exercised by the doc tests
+    all_codes = {c for _f, r in all_rules() for c in r.codes}
+    assert all_codes <= covered, f"uncovered: {sorted(all_codes - covered)}"
+
+
+# ---- DOC family (scans a fixture docroot, not the real tree) --------------
+
+def test_doc_rule_flags_dangling_citation():
+    root = os.path.join(REPO, FIX, "docroot")
+    got = {(f.path, f.code)
+           for f in DocCitationRule().run_project([], root)}
+    assert got == {("src/mod.py", "DOC401")}
+
+
+def test_doc_rule_missing_design(tmp_path):
+    got = [f.code for f in DocCitationRule().run_project([], str(tmp_path))]
+    assert got == ["DOC400"]
+
+
+def test_check_docs_shim_green():
+    r = subprocess.run([sys.executable, "scripts/check_docs.py"],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ---- suppression ----------------------------------------------------------
+
+_SUPPRESSED_SRC = """\
+import threading
+
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0  # guarded_by: self._lock
+
+    def peek(self):
+        return self.n  # lint: disable=LCK001
+
+    def peek_all(self):
+        return self.n  # lint: disable=*
+
+    def leak(self):
+        return self.n
+"""
+
+
+def test_inline_suppression():
+    ctx = FileCtx("mem.py", "mem.py", _SUPPRESSED_SRC)
+    raw = list(GuardedFieldRule().run(ctx))
+    assert sorted(f.line for f in raw) == [10, 13, 16]
+    kept = filter_suppressed(raw, {"mem.py": ctx})
+    assert [f.line for f in kept] == [16]    # only the unsuppressed leak
+
+
+# ---- baseline mechanics ---------------------------------------------------
+
+def test_baseline_tolerates_old_blocks_new(tmp_path):
+    old = Finding("a.py", 3, "LCK001", "C.n unguarded")
+    drifted = Finding("a.py", 33, "LCK001", "C.n unguarded")
+    fresh = Finding("b.py", 1, "JAX101", "traced if")
+    path = str(tmp_path / "base.json")
+    write_baseline(path, [old])
+
+    base = load_baseline(path)
+    # same fingerprint at a different line: still baselined
+    assert new_findings([drifted], base) == []
+    # a finding the baseline has never seen: blocks
+    assert new_findings([drifted, fresh], base) == [fresh]
+
+
+def test_baseline_is_multiplicity_aware(tmp_path):
+    f = Finding("a.py", 1, "LCK001", "same message")
+    again = Finding("a.py", 9, "LCK001", "same message")
+    path = str(tmp_path / "base.json")
+    write_baseline(path, [f])
+    base = load_baseline(path)
+    # one baselined occurrence tolerates one finding; the second blocks
+    assert new_findings([f, again], base) == [again]
+
+
+def test_missing_baseline_is_empty():
+    assert load_baseline("/nonexistent/base.json") == Counter()
+
+
+def test_shipped_baseline_is_empty():
+    with open(os.path.join(REPO, "scripts", "lint_baseline.json")) as f:
+        assert json.load(f) == []
+
+
+# ---- end to end -----------------------------------------------------------
+
+def test_repo_lints_clean():
+    """The real tree has zero unsuppressed findings (empty baseline)."""
+    r = subprocess.run([sys.executable, "scripts/lint.py"],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "lint: clean" in r.stdout
+
+
+def test_select_single_code():
+    findings, _ = run_lint(REPO, select="LCK003",
+                           files=[f"{FIX}/lck003_bad.py",
+                                  f"{FIX}/lck001_bad.py"])
+    assert {f.code for f in findings} == {"LCK003"}
