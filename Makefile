@@ -25,8 +25,12 @@ bench-throughput:
 # Tiny offline pipeline smoke (CI): exercises the async pipelined engine
 # end-to-end — parity asserted, overlap recorded to artifacts/bench/ —
 # plus the query-batched fused filter kernel on a tiny shape, asserting
-# batched/looped bounds identical (DESIGN.md §13).
+# batched/looped bounds identical (DESIGN.md §13), and the SLO traffic
+# simulator on a tiny trace (both tenant mixes, open + closed loop),
+# asserting the report schema — non-empty percentiles, goodput,
+# partial-rate (DESIGN.md §15).
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.query_throughput --n 300 --q 16 \
 	    --pipeline --pipeline-workers 2
 	PYTHONPATH=src python -m benchmarks.kernels_bench --smoke-batched
+	PYTHONPATH=src python -m benchmarks.serving_slo --smoke

@@ -1,0 +1,185 @@
+"""Mixed-tenant SLO benchmark for the async serving pipeline.
+
+Replays deterministic seeded traffic traces (``repro.serve.traffic``,
+DESIGN.md §15) — per-tenant mixes of range-τ, top-k, and deadline
+queries, in open- and closed-loop arrival models — against an
+``AsyncGraphQueryEngine`` and records p50/p99 latency, goodput under
+each tenant's deadline SLO, and partial-result rates.
+
+    PYTHONPATH=src python -m benchmarks.serving_slo [--n 2000] [--smoke]
+
+``--record --commit <sha> --date <YYYY-MM-DD>`` appends one row per run
+to the repo-root ``BENCH_serving_slo.json`` trajectory (same convention
+as ``BENCH_query_throughput.json``): this is the serving harness every
+later PR gets judged by.  ``--smoke`` runs a tiny trace and asserts the
+report schema (non-empty percentiles, goodput, partial-rate) — wired
+into ``make bench-smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import Csv, art_path, dataset, save_json
+from repro.serve.traffic import TenantSpec, generate_trace, replay
+
+BENCH_LOG = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serving_slo.json"))
+
+# the two standing tenant mixes every serving PR is judged on: an
+# interactive/bulk split and a deadline-heavy top-k explorer mix
+MIXES: Dict[str, List[TenantSpec]] = {
+    "interactive_bulk": [
+        TenantSpec("interactive", weight=1.0, rate_qps=60.0, clients=3,
+                   queries_per_client=6, topk_frac=0.7, k_range=(1, 4),
+                   cap=4, tau_range=(1, 2), deadline_s=0.25,
+                   edits_range=(1, 2)),
+        TenantSpec("bulk", weight=1.0, rate_qps=25.0, clients=2,
+                   queries_per_client=5, topk_frac=0.0, tau_range=(1, 3),
+                   deadline_s=None, edits_range=(1, 2)),
+    ],
+    "topk_explorer": [
+        TenantSpec("explorer", weight=1.0, rate_qps=45.0, clients=3,
+                   queries_per_client=6, topk_frac=1.0, k_range=(2, 6),
+                   cap=5, deadline_s=0.35, edits_range=(1, 3)),
+        TenantSpec("analytics", weight=1.0, rate_qps=20.0, clients=2,
+                   queries_per_client=4, topk_frac=0.3, k_range=(1, 3),
+                   cap=4, tau_range=(2, 3), deadline_s=0.8,
+                   edits_range=(1, 2)),
+    ],
+}
+
+
+def make_pipe(db, *, backend: str = "numpy", workers: int = 2,
+              max_batch: int = 8):
+    from repro.core.search import FlatMSQIndex
+    from repro.serve.graph_engine import GraphQueryEngine
+    from repro.serve.pipeline import AsyncGraphQueryEngine
+    eng = GraphQueryEngine(FlatMSQIndex(db), backend=backend,
+                           result_cache_size=0)
+    return AsyncGraphQueryEngine(eng, max_batch=max_batch,
+                                 max_delay_s=0.002, num_workers=workers)
+
+
+def check_report(rep: dict) -> None:
+    """Schema gate (the bench-smoke assertion): percentiles present and
+    finite, goodput/partial-rate/SLO fields populated."""
+    for scope, b in [("overall", rep["overall"]),
+                     *rep["per_tenant"].items()]:
+        assert b["n"] > 0, f"{scope}: empty bucket"
+        for fld in ("p50_ms", "p99_ms"):
+            assert math.isfinite(b[fld]) and b[fld] > 0, \
+                f"{scope}.{fld} not a positive finite latency: {b[fld]}"
+        for fld in ("goodput_qps", "partial_rate", "slo_miss_rate"):
+            assert fld in b and b[fld] >= 0, f"{scope}.{fld} missing"
+        assert b["errors"] == 0, f"{scope}: {b['errors']} query errors"
+
+
+def run_mix(csv: Csv, db, mix: str, mode: str, *, backend: str,
+            workers: int, duration_s: float, seed: int,
+            speed: float) -> Dict:
+    trace = generate_trace(MIXES[mix], len(db), mode=mode,
+                           duration_s=duration_s, seed=seed)
+    pipe = make_pipe(db, backend=backend, workers=workers)
+    try:
+        # warm the slab + caches so the first arrivals don't pay build
+        # cost — the bench measures steady-state serving
+        from repro.serve.graph_engine import GraphQuery
+        pipe.submit(GraphQuery(db[0], 1, verify=False)).result(60)
+        report = replay(trace, pipe, db, speed=speed)
+    finally:
+        pipe.close()
+    rep = report.to_json()
+    check_report(rep)
+    o = rep["overall"]
+    key = f"{mix}/{mode}"
+    csv.add(f"slo_{mix}_{mode}_p99", o["p99_ms"] / 1e3,
+            f"{o['goodput_qps']:.1f} good q/s, "
+            f"{o['partial_rate'] * 100:.1f}% partial")
+    print(f"[{key}] n={o['n']} (topk {o['n_topk']}) "
+          f"p50={o['p50_ms']:.1f}ms p99={o['p99_ms']:.1f}ms "
+          f"goodput={o['goodput_qps']:.1f} q/s "
+          f"partial={o['partial_rate']:.3f} "
+          f"slo_miss={o['slo_miss_rate']:.3f}")
+    return {"mix": mix, "mode": mode, "seed": seed,
+            "n_db": len(db), "backend": backend, "workers": workers,
+            "trace_digest": trace.digest(), **rep}
+
+
+def record_trajectory(recs: List[Dict], commit: str, date: str,
+                      path: str = BENCH_LOG) -> Dict:
+    """Append one per-PR row (per mix x loop SLO metrics) to the
+    repo-root trajectory log and return it."""
+    row = {
+        "commit": commit, "date": date, "n_db": recs[0]["n_db"],
+        "mixes": {f"{r['mix']}/{r['mode']}": {
+            "n": r["overall"]["n"],
+            "p50_ms": r["overall"]["p50_ms"],
+            "p99_ms": r["overall"]["p99_ms"],
+            "goodput_qps": r["overall"]["goodput_qps"],
+            "partial_rate": r["overall"]["partial_rate"],
+            "slo_miss_rate": r["overall"]["slo_miss_rate"],
+        } for r in recs},
+    }
+    log = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            log = json.load(f)
+    log.append(row)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(log, f, indent=1)
+    print(f"recorded {sorted(row['mixes'])} @ {commit} -> {path}")
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2000, help="db size")
+    ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--duration", type=float, default=0.6,
+                    help="open-loop trace duration (trace seconds)")
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="open-loop replay speedup")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--mix", default="all",
+                    choices=["all", *MIXES])
+    ap.add_argument("--mode", default="both",
+                    choices=["both", "open", "closed"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace; assert report schema only")
+    ap.add_argument("--record", action="store_true",
+                    help=f"append SLO metrics to {BENCH_LOG}")
+    ap.add_argument("--commit", default="unknown",
+                    help="commit label for --record")
+    ap.add_argument("--date", default=time.strftime("%Y-%m-%d"),
+                    help="date label for --record")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.n = min(args.n, 300)
+        args.duration = min(args.duration, 0.2)
+
+    db = dataset("aids", args.n)
+    csv = Csv()
+    mixes = list(MIXES) if args.mix == "all" else [args.mix]
+    modes = ["open", "closed"] if args.mode == "both" else [args.mode]
+    recs = [run_mix(csv, db, mix, mode, backend=args.backend,
+                    workers=args.workers, duration_s=args.duration,
+                    seed=args.seed, speed=args.speed)
+            for mix in mixes for mode in modes]
+
+    save_json("serving_slo.json", recs)
+    csv.dump(art_path("serving_slo.csv"))
+    if args.smoke:
+        print(f"smoke OK: {len(recs)} mix/mode reports, schema checked")
+    if args.record:
+        record_trajectory(recs, args.commit, args.date)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,11 @@ from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
                                       VerifyScheduler)
 from repro.serve.pipeline import (AsyncGraphQueryEngine, QueryTicket,
                                   as_completed)
+from repro.serve.traffic import (TenantSpec, TrafficReport, TrafficTrace,
+                                 generate_trace, replay)
 
 __all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine",
            "ShardedGraphQueryEngine", "VerifyScheduler",
-           "AsyncGraphQueryEngine", "QueryTicket", "as_completed"]
+           "AsyncGraphQueryEngine", "QueryTicket", "as_completed",
+           "TenantSpec", "TrafficReport", "TrafficTrace",
+           "generate_trace", "replay"]

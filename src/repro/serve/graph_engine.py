@@ -54,12 +54,31 @@ class GraphQuery:
     """One similarity-search request.  ``deadline_s`` (seconds, relative
     to worklist admission) bounds verification: expired candidate pairs
     are skipped and the result is flagged ``partial`` in stats — recall
-    safe, because the candidate list is never truncated (DESIGN.md §12)."""
+    safe, because the candidate list is never truncated (DESIGN.md §12).
+
+    ``top_k`` switches the query modality from range-τ to k-nearest
+    (DESIGN.md §15): the result's ``matches`` are the ``top_k`` graphs
+    with the smallest ``(ged, gid)`` among all graphs with ged <= ``tau``
+    (``tau`` becomes the search *cap*, bounding the NP-hard verification),
+    sorted by ``(ged, gid)`` ascending.  Answered by adaptive-τ
+    escalation: the filter cascade runs at a cheap τ first and re-enters
+    at a widened τ until the kth-best confirmed distance proves no wider
+    τ can help — never recomputing a decided (query, gid) pair."""
 
     graph: Graph
     tau: int
     verify: bool = True
     deadline_s: Optional[float] = None
+    top_k: Optional[int] = None
+
+    def __post_init__(self):
+        if self.top_k is not None:
+            if int(self.top_k) < 1:
+                raise ValueError("top_k must be >= 1")
+            if not self.verify:
+                raise ValueError(
+                    "top_k requires verify=True: ranking needs exact GEDs, "
+                    "filter lower bounds alone cannot order the k-nearest")
 
 
 def _graph_key(g: Graph) -> bytes:
@@ -102,10 +121,11 @@ class VerifyJob:
     """One query's verification context on the shared worklist."""
 
     __slots__ = ("graph", "tau", "deadline", "remaining", "matches",
-                 "verify_s", "unverified", "on_match", "on_done", "token")
+                 "verify_s", "unverified", "pruned", "should_skip",
+                 "on_match", "on_done", "token")
 
     def __init__(self, graph: Graph, tau: int, deadline: Optional[float],
-                 token=None, on_match=None, on_done=None):
+                 token=None, on_match=None, on_done=None, should_skip=None):
         self.graph = graph
         self.tau = int(tau)
         self.deadline = deadline
@@ -113,9 +133,107 @@ class VerifyJob:
         self.matches: List[Tuple[int, int]] = []
         self.verify_s = 0.0
         self.unverified = 0
+        self.pruned = 0
+        self.should_skip = should_skip
         self.on_match = on_match
         self.on_done = on_done
         self.token = token
+
+
+class TopKState:
+    """Per-query adaptive-τ escalation state for ``top_k`` queries
+    (DESIGN.md §15).
+
+    The filter τ starts cheap (0) and widens each round — jumping
+    straight to the kth-best confirmed distance once k matches exist —
+    while every admitted (query, gid) pair runs its ``GEDSearch`` at the
+    query's *cap*, never the round τ.  A round-τ cutoff would poison the
+    frontier for later rounds (children pruned at ``cost > τ_r`` are
+    unrecoverable), so the cap cutoff is what keeps decisions final and
+    frontiers resumable across escalation: ``seen`` gids are never
+    resubmitted, which is the no-recompute invariant the scheduler stats
+    assert in tests.
+
+    ``confirmed`` is fed live from verifier threads (``record_match``)
+    so the worklist's ``should_skip`` hook prunes pairs that can no
+    longer displace the current kth-best — sound regardless of timing,
+    because a pair with ``(bound, gid)`` lexicographically above the kth
+    confirmed ``(ged, gid)`` can never enter the answer set."""
+
+    __slots__ = ("k", "cap", "tau", "deadline", "rounds", "seen",
+                 "confirmed", "filter_s", "verify_s", "unverified",
+                 "pruned", "deadline_hit", "_lock")
+
+    def __init__(self, k: int, cap: int, deadline: Optional[float] = None):
+        self.k = int(k)
+        self.cap = int(cap)
+        self.tau = 0                    # round τ (filter admission only)
+        self.deadline = deadline
+        self.rounds = 0
+        self.seen: set = set()          # gids ever submitted to the worklist
+        self.confirmed: Dict[int, int] = {}     # guarded_by: self._lock
+        self.filter_s = 0.0
+        self.verify_s = 0.0
+        self.unverified = 0
+        self.pruned = 0
+        self.deadline_hit = False
+        self._lock = threading.Lock()
+
+    def record_match(self, gid: int, d: int) -> None:
+        with self._lock:
+            self.confirmed[int(gid)] = int(d)
+
+    def kth(self) -> Optional[Tuple[int, int]]:
+        """The current kth-best confirmed ``(ged, gid)``, or None while
+        fewer than k matches are confirmed."""
+        with self._lock:
+            if len(self.confirmed) < self.k:
+                return None
+            return sorted((d, g)
+                          for g, d in self.confirmed.items())[self.k - 1]
+
+    def should_skip(self, gid: int, bound: int) -> bool:
+        """Worklist pruning hook: a pair whose (lower bound, gid) already
+        exceeds the kth-best confirmed (ged, gid) can never enter the
+        top-k (its final ged >= bound), so running it is wasted A*."""
+        kth = self.kth()
+        return kth is not None and (int(bound), int(gid)) > kth
+
+    def topk_matches(self) -> List[Tuple[int, int]]:
+        """The k smallest confirmed ``(ged, gid)``, as (gid, ged) tuples
+        sorted by (ged, gid) ascending — the deterministic tie rule."""
+        with self._lock:
+            best = sorted((d, g)
+                          for g, d in self.confirmed.items())[:self.k]
+        return [(g, d) for d, g in best]
+
+    def absorb_round(self, job: VerifyJob) -> None:
+        """Fold one drained round's accounting into the query state (the
+        match set itself arrives live via ``record_match``)."""
+        self.verify_s += job.verify_s
+        self.unverified += job.unverified
+        self.pruned += job.pruned
+
+    def satisfied(self) -> bool:
+        """True when no wider τ can change the answer: the kth-best
+        confirmed distance is covered by the τ the filter already ran at
+        (every graph with a smaller (ged, gid) had a lower bound <= its
+        ged <= d_k <= τ, so it was admitted and decided), or the cap has
+        been reached with every candidate decided."""
+        if self.tau >= self.cap:
+            return True
+        kth = self.kth()
+        return kth is not None and kth[0] <= self.tau
+
+    def escalate(self) -> None:
+        """Widen the filter τ for the next round: geometric growth while
+        fewer than k matches are confirmed, else one adaptive jump to the
+        kth-best distance (the round that proves optimality)."""
+        kth = self.kth()
+        if kth is not None:
+            self.tau = min(self.cap, max(int(kth[0]), self.tau + 1))
+        else:
+            self.tau = min(self.cap, max(1, 2 * self.tau))
 
 
 class VerifyScheduler:
@@ -189,13 +307,17 @@ class VerifyScheduler:
     def add_job(self, graph: Graph, tau: int, ids: Sequence[int],
                 bounds: Sequence[int], *, deadline: Optional[float] = None,
                 token=None, on_match: Optional[Callable] = None,
-                on_done: Optional[Callable] = None) -> VerifyJob:
+                on_done: Optional[Callable] = None,
+                should_skip: Optional[Callable] = None) -> VerifyJob:
         """Enqueue one query's candidate pairs (cheapest bound first is
         the heap's job).  ``on_done`` fires exactly once, on the thread
         that retires the query's last pair (immediately, on the calling
-        thread, for candidate-less queries)."""
+        thread, for candidate-less queries).  ``should_skip(gid, bound)``
+        is consulted at pop time — a True verdict retires the pair as
+        ``pruned`` without running A* (the top-k kth-best cutoff)."""
         job = VerifyJob(graph, tau, deadline, token=token,
-                        on_match=on_match, on_done=on_done)
+                        on_match=on_match, on_done=on_done,
+                        should_skip=should_skip)
         job.remaining = len(ids)
         if not ids:
             if on_done is not None:
@@ -331,6 +453,17 @@ class VerifyScheduler:
                     job.unverified += 1
                     self.stats["expired_pairs"] += 1
                 return
+            # top-k pruning: once the job's kth-best is confirmed, pairs
+            # whose (bound, gid) can no longer displace it are retired
+            # without A*.  A resumed pair's bound reflects its improved
+            # frontier min_f, so partially-run searches prune too.
+            if job.should_skip is not None \
+                    and job.should_skip(int(gid), int(bound)):
+                with self._cv:
+                    job.pruned += 1
+                    self.stats["pruned_pairs"] = self.stats.get(
+                        "pruned_pairs", 0) + 1
+                return
             if search is None:
                 search = GEDSearch(self.db[gid], job.graph, job.tau)
             else:
@@ -404,7 +537,8 @@ class GraphQueryEngine:
         self._res_cache = _LRU(result_cache_size)
         self.stats: Dict[str, float] = {
             "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
-            "verified_pairs": 0, "expired_pairs": 0, "cache_hits": 0}
+            "verified_pairs": 0, "expired_pairs": 0, "pruned_pairs": 0,
+            "cache_hits": 0, "topk_rounds": 0}
 
     # ---- encoding cache ----------------------------------------------------
     def _qtuple(self, g: Graph) -> Tuple[bytes, QueryTuple]:
@@ -448,7 +582,11 @@ class GraphQueryEngine:
         qtuples: List[Optional[QueryTuple]] = [None] * len(requests)
         for i, r in enumerate(requests):
             key, qt = self._qtuple(r.graph)
-            k3 = (key, int(r.tau), bool(r.verify))
+            # the cache key carries the full query modality: a range-τ
+            # entry must never answer a top_k query (or vice versa) —
+            # same graph, same τ, different answer shape (DESIGN.md §15)
+            k3 = (key, int(r.tau), bool(r.verify),
+                  None if r.top_k is None else int(r.top_k))
             hit = self._res_cache.get(k3)
             if hit is not None:
                 # cached results are always complete (partials are never
@@ -473,8 +611,9 @@ class GraphQueryEngine:
 
     def _cache_result(self, key: bytes, request: GraphQuery,
                       res: QueryResult) -> None:
-        self._res_cache.put((key, int(request.tau), bool(request.verify)),
-                            res)
+        self._res_cache.put(
+            (key, int(request.tau), bool(request.verify),
+             None if request.top_k is None else int(request.top_k)), res)
 
     @staticmethod
     def _job_bounds(batch, row: int) -> List[int]:
@@ -501,12 +640,105 @@ class GraphQueryEngine:
             candidates=cand, matches=matches, n_filtered=n_db - len(cand),
             filter_time_s=per_q_filter, verify_time_s=verify_s, stats=stats)
 
+    def _assemble_topk(self, st: TopKState, n_db: int) -> QueryResult:
+        """Result for one top-k query from its escalation state: matches
+        are the k smallest (ged, gid) — the deterministic tie rule — and
+        candidates are every gid ever admitted across rounds (never
+        truncated, the recall-safety analog of the range path)."""
+        matches = st.topk_matches()
+        stats: Dict[str, int] = {
+            "batched": 1, "top_k": st.k, "topk_rounds": st.rounds,
+            "topk_tau_final": st.tau, "topk_pruned": st.pruned}
+        if len(matches) < st.k:
+            stats["topk_exhausted"] = 1   # fewer than k graphs within cap
+        if st.unverified or st.deadline_hit:
+            # deadline fired mid-escalation: the verified prefix is
+            # returned, flagged partial, and never cached (DESIGN.md §15)
+            stats["partial"] = 1
+            stats["unverified"] = st.unverified
+        cand = sorted(st.seen)
+        return QueryResult(
+            candidates=cand, matches=matches, n_filtered=n_db - len(cand),
+            filter_time_s=st.filter_s, verify_time_s=st.verify_s,
+            stats=stats)
+
+    def _submit_topk(self, requests: Sequence[GraphQuery],
+                     fresh: List[int], keys, qtuples, results) -> None:
+        """The sync adaptive-τ escalation loop (DESIGN.md §15): per round,
+        one joint filter pass over every still-active top-k query at its
+        own round τ, then the shared cheapest-first worklist drains the
+        *new* pairs (decided gids are never resubmitted).  Escalation
+        stops per query when its kth-best confirmed distance is covered
+        by the round τ, the cap is reached, or its deadline fires."""
+        sched = VerifyScheduler(self.source.db)
+        now = time.perf_counter()
+        states: Dict[int, TopKState] = {}
+        for i in fresh:
+            r = requests[i]
+            deadline = (None if r.deadline_s is None
+                        else now + float(r.deadline_s))
+            states[i] = TopKState(int(r.top_k), int(r.tau), deadline)
+        n_db = len(self.source.db)
+        active = list(fresh)
+        while active:
+            graphs = [requests[i].graph for i in active]
+            taus = [states[i].tau for i in active]
+            t0 = time.perf_counter()
+            batch = self._batched_candidates(graphs, taus,
+                                             [qtuples[i] for i in active])
+            t1 = time.perf_counter()
+            self.stats["filter_s"] += t1 - t0
+            share = (t1 - t0) / len(active)
+            jobs: Dict[int, VerifyJob] = {}
+            for row, i in enumerate(active):
+                st = states[i]
+                st.rounds += 1
+                self.stats["topk_rounds"] += 1
+                st.filter_s += share
+                bounds = self._job_bounds(batch, row)
+                new = [(int(g), int(b))
+                       for g, b in zip(batch.ids[row], bounds)
+                       if int(g) not in st.seen]
+                st.seen.update(g for g, _ in new)
+                # pairs run at the query CAP, not the round τ — decisions
+                # stay final and frontiers resumable (DESIGN.md §15)
+                jobs[i] = sched.add_job(
+                    requests[i].graph, st.cap, [g for g, _ in new],
+                    [b for _, b in new], deadline=st.deadline,
+                    on_match=lambda job, g, d, s=st: s.record_match(g, d),
+                    should_skip=st.should_skip)
+            sched.run_until_idle()   # the one-worker special case
+            still: List[int] = []
+            for i in active:
+                st = states[i]
+                st.absorb_round(jobs[i])
+                expired = (st.deadline is not None
+                           and time.perf_counter() >= st.deadline)
+                if st.unverified or expired:
+                    st.deadline_hit = True
+                if st.deadline_hit or st.satisfied():
+                    res = self._assemble_topk(st, n_db)
+                    results[i] = res
+                    if not (st.unverified or st.deadline_hit):
+                        self._cache_result(keys[i], requests[i], res)
+                else:
+                    st.escalate()
+                    still.append(i)
+            active = still
+        ss = sched.stats_snapshot()
+        self.stats["verify_s"] += sum(s.verify_s for s in states.values())
+        self.stats["verified_pairs"] += ss["verified_pairs"]
+        self.stats["expired_pairs"] += ss["expired_pairs"]
+        self.stats["pruned_pairs"] += ss.get("pruned_pairs", 0)
+
     # ---- the batched path --------------------------------------------------
     def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
         """Answer a batch; results align with ``requests`` order."""
         self.stats["batches"] += 1
         self.stats["queries"] += len(requests)
-        results, fresh, aliases, keys, qtuples = self._admit(requests)
+        results, all_fresh, aliases, keys, qtuples = self._admit(requests)
+        fresh = [i for i in all_fresh if requests[i].top_k is None]
+        fresh_topk = [i for i in all_fresh if requests[i].top_k is not None]
         if fresh:
             graphs = [requests[i].graph for i in fresh]
             taus = [int(requests[i].tau) for i in fresh]
@@ -546,15 +778,24 @@ class GraphQueryEngine:
                 # without the deadline must not replay incomplete matches
                 if job is None or not job.unverified:
                     self._cache_result(keys[i], requests[i], res)
+        if fresh_topk:
+            self._submit_topk(requests, fresh_topk, keys, qtuples, results)
         # resolve from results, not the cache: small caches may already
         # have evicted the entry by the time the batch finishes
         for i, src in aliases:
             results[i] = results[src]
         return results  # type: ignore[return-value]
 
-    # ---- single-query wrapper ----------------------------------------------
+    # ---- single-query wrappers ---------------------------------------------
     def query(self, graph: Graph, tau: int, verify: bool = True) -> QueryResult:
         return self.submit([GraphQuery(graph, tau, verify)])[0]
+
+    def query_topk(self, graph: Graph, k: int, cap: int,
+                   deadline_s: Optional[float] = None) -> QueryResult:
+        """k-nearest within a GED cap: matches are the k smallest
+        (ged, gid), sorted by (ged, gid) — see ``GraphQuery.top_k``."""
+        return self.submit([GraphQuery(graph, cap, top_k=k,
+                                       deadline_s=deadline_s)])[0]
 
     @property
     def cache_info(self) -> Dict[str, int]:

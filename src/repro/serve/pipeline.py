@@ -34,7 +34,7 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.search import QueryResult
 from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
-                                      VerifyScheduler)
+                                      TopKState, VerifyScheduler)
 
 _DONE = object()                     # stream sentinel
 
@@ -55,6 +55,13 @@ class QueryTicket:
         self._resolved = False            # guarded_by: self._lock
         self._callbacks: List = []        # guarded_by: self._lock
         self._streamed_live = False
+        # top-k escalation context (engine-internal, DESIGN.md §15): the
+        # ticket re-enters the batch former once per widened-τ round, so
+        # its state/encoding ride along instead of being recomputed
+        self._topk: Optional[TopKState] = None
+        self._topk_counted = False
+        self._topk_key = None
+        self._topk_qt = None
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -206,6 +213,7 @@ class AsyncGraphQueryEngine:
         self._inbox: "deque[Tuple[float, QueryTicket]]" = \
             deque()                 # guarded_by: self._cv
         self._outstanding = 0       # guarded_by: self._cv
+        self._topk_pending = 0      # guarded_by: self._cv
         self._closing = False       # guarded_by: self._cv
         self._closed = False        # guarded_by: self._cv
         self._filter_thread = threading.Thread(
@@ -318,35 +326,69 @@ class AsyncGraphQueryEngine:
                         return [self._inbox.popleft()[1] for _ in range(n)]
                     self._cv.wait(self.max_delay_s - age)
                 elif self._closing:
-                    return None
+                    if self._topk_pending == 0:
+                        return None
+                    # in-flight top-k queries may still re-enter for a
+                    # wider-τ round — the filter stage must outlive them
+                    self._cv.wait()
                 else:
                     self._cv.wait()
 
     def _process_batch(self, tickets: List[QueryTicket]) -> None:
         eng = self.engine
-        requests = [t.request for t in tickets]
+        # a re-entered top-k ticket is already admitted (cache checked,
+        # encoding cached, state attached): it only needs its next filter
+        # round at the widened τ, batched with fresh arrivals
+        reenter = [t for t in tickets if t._topk is not None]
+        new = [t for t in tickets if t._topk is None]
+        # rows: (ticket, request, filter τ, qtuple, key, top-k state)
+        rows: List[tuple] = []
         # the wrapped engine's counters are shared with _on_done (verifier
         # threads) and the stats property — mutate them under _cv only
         with self._cv:
             eng.stats["batches"] += 1
-            eng.stats["queries"] += len(requests)
-        results, fresh, aliases, keys, qtuples = eng._admit(requests)
-        # cache hits resolve immediately — no pipeline latency at all
-        for i, res in enumerate(results):
-            if res is not None:
-                self._finish(tickets[i], res)
-        # in-batch duplicates follow their source ticket (errors included)
-        for i, src in aliases:
-            tickets[src]._add_callback(
-                lambda res, err, t=tickets[i]: self._finish(t, res, err))
-        if not fresh:
+            eng.stats["queries"] += len(new)
+        if new:
+            requests = [t.request for t in new]
+            results, fresh, aliases, keys, qtuples = eng._admit(requests)
+            # cache hits resolve immediately — no pipeline latency at all
+            for i, res in enumerate(results):
+                if res is not None:
+                    self._finish(new[i], res)
+            # in-batch duplicates follow their source ticket (errors incl.)
+            for i, src in aliases:
+                new[src]._add_callback(
+                    lambda res, err, t=new[i]: self._finish(t, res, err))
+            now = time.perf_counter()
+            for i in fresh:
+                r, t = requests[i], new[i]
+                if r.top_k is not None:
+                    dl_s = (r.deadline_s if r.deadline_s is not None
+                            else self.default_deadline_s)
+                    st = TopKState(
+                        int(r.top_k), int(r.tau),
+                        None if dl_s is None else now + float(dl_s))
+                    t._topk = st
+                    t._topk_key = keys[i]
+                    t._topk_qt = qtuples[i]
+                    with self._cv:
+                        self._topk_pending += 1
+                        t._topk_counted = True
+                    rows.append((t, r, st.tau, qtuples[i], keys[i], st))
+                else:
+                    rows.append((t, r, int(r.tau), qtuples[i], keys[i],
+                                 None))
+        for t in reenter:
+            rows.append((t, t.request, t._topk.tau, t._topk_qt,
+                         t._topk_key, t._topk))
+        if not rows:
             return
 
-        graphs = [requests[i].graph for i in fresh]
-        taus = [int(requests[i].tau) for i in fresh]
+        graphs = [r.graph for _, r, _, _, _, _ in rows]
+        taus = [tau for _, _, tau, _, _, _ in rows]
         t0 = time.perf_counter()
         batch = eng._batched_candidates(graphs, taus,
-                                        [qtuples[i] for i in fresh])
+                                        [qt for _, _, _, qt, _, _ in rows])
         t1 = time.perf_counter()
         with self._cv:
             eng.stats["filter_s"] += t1 - t0
@@ -354,24 +396,83 @@ class AsyncGraphQueryEngine:
             self.filter_intervals.append((t0, t1))
 
         n_db = len(eng.source.db)
-        per_q_filter = (t1 - t0) / max(len(fresh), 1)
+        per_q_filter = (t1 - t0) / len(rows)
         now = time.perf_counter()
-        for row, i in enumerate(fresh):
-            ticket, r = tickets[i], requests[i]
+        for row, (ticket, r, tau, _qt, key, st) in enumerate(rows):
             cand = batch.ids[row]
+            if st is not None:
+                st.rounds += 1
+                st.filter_s += per_q_filter
+                with self._cv:
+                    eng.stats["topk_rounds"] += 1
+                bounds = eng._job_bounds(batch, row)
+                fresh_pairs = [(int(g), int(b))
+                               for g, b in zip(cand, bounds)
+                               if int(g) not in st.seen]
+                st.seen.update(g for g, _ in fresh_pairs)
+                # pairs run at the query CAP, not the round τ: decisions
+                # stay final, frontiers stay resumable in the shared heap
+                # across escalation rounds (DESIGN.md §15)
+                self.scheduler.add_job(
+                    r.graph, st.cap, [g for g, _ in fresh_pairs],
+                    [b for _, b in fresh_pairs], deadline=st.deadline,
+                    token=(ticket, key, r, st),
+                    on_match=self._on_topk_match,
+                    on_done=self._on_topk_round_done,
+                    should_skip=st.should_skip)
+                continue
             if not r.verify:
                 res = eng._assemble(cand, None, n_db, per_q_filter)
-                eng._cache_result(keys[i], r, res)
+                eng._cache_result(key, r, res)
                 self._finish(ticket, res)
                 continue
             dl_s = (r.deadline_s if r.deadline_s is not None
                     else self.default_deadline_s)
             deadline = None if dl_s is None else now + float(dl_s)
             self.scheduler.add_job(
-                r.graph, taus[row], cand, eng._job_bounds(batch, row),
+                r.graph, tau, cand, eng._job_bounds(batch, row),
                 deadline=deadline,
-                token=(ticket, keys[i], r, cand, n_db, per_q_filter),
+                token=(ticket, key, r, cand, n_db, per_q_filter),
                 on_match=self._on_match, on_done=self._on_done)
+
+    # ---- stage: top-k escalation (runs on verifier threads) ----------------
+    def _reenter(self, ticket: QueryTicket) -> None:
+        """Queue a top-k query's next widened-τ filter round.  Bypasses
+        ``submit_many``: escalation of an in-flight query must proceed
+        even while admission is closing (close() waits for it)."""
+        with self._cv:
+            self._inbox.append((time.perf_counter(), ticket))
+            self._cv.notify_all()
+
+    def _on_topk_match(self, job, gid: int, d: int) -> None:
+        # matches feed the state (so should_skip prunes live), not the
+        # ticket stream: only the final k-best may be streamed, and those
+        # are known only at resolution
+        job.token[3].record_match(gid, d)
+
+    def _on_topk_round_done(self, job) -> None:
+        """One escalation round drained: finish the query (satisfied /
+        deadline) or widen τ and re-enter the batch former."""
+        ticket, key, request, st = job.token
+        eng = self.engine
+        try:
+            st.absorb_round(job)
+            with self._cv:
+                eng.stats["verify_s"] += job.verify_s
+            if st.unverified or (st.deadline is not None
+                                 and time.perf_counter() >= st.deadline):
+                st.deadline_hit = True
+            if st.deadline_hit or st.satisfied():
+                res = eng._assemble_topk(st, len(eng.source.db))
+                # deadline partials are never cached (DESIGN.md §15)
+                if not (st.unverified or st.deadline_hit):
+                    eng._cache_result(key, request, res)
+                self._finish(ticket, res)
+            else:
+                st.escalate()
+                self._reenter(ticket)
+        except Exception as e:       # noqa: BLE001 — resolve, don't kill
+            self._finish(ticket, None, e)
 
     # ---- stage: delivery (runs on verifier threads) ------------------------
     def _on_match(self, job, gid: int, d: int) -> None:
@@ -397,4 +498,7 @@ class AsyncGraphQueryEngine:
             return                       # already resolved — keep accounting
         with self._cv:
             self._outstanding -= 1
+            if ticket._topk_counted:     # escalation over — release close()
+                ticket._topk_counted = False
+                self._topk_pending -= 1
             self._cv.notify_all()

@@ -1,0 +1,319 @@
+"""Deterministic SLO traffic simulator for the serving pipeline
+(DESIGN.md §15).
+
+Production graph-similarity serving is judged under *mixed-tenant*
+traffic — interactive top-k lookups with tight deadlines sharing the
+pipeline with bulk range-τ scans — not under the uniform batched
+throughput loop of ``benchmarks/query_throughput.py``.  This module
+generates such traffic **deterministically** (a seeded trace is a plain
+JSON value, goldens live under ``tests/fixtures/traffic/``) and replays
+it against an ``AsyncGraphQueryEngine``, reporting per-tenant latency
+percentiles, goodput under each tenant's deadline SLO, and
+partial-result rates.
+
+Two arrival models:
+
+* **open loop** — each tenant is a Poisson process at ``rate_qps``;
+  arrivals are scheduled on the trace clock regardless of completions
+  (queueing delay shows up as latency).  This is the load-test model:
+  the offered load does not back off when the pipeline falls behind.
+* **closed loop** — each tenant runs ``clients`` synchronous clients,
+  each issuing its next query the moment the previous one resolves.
+  This is the interactive model: concurrency, not rate, is fixed.
+
+The trace pins *everything* random — arrival times, tenant interleave,
+query graphs (a db index + perturbation seed, materialised at replay),
+modality choice, τ/k/deadline draws — so two replays of one trace issue
+byte-identical query streams and any metric drift is the engine's.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["TenantSpec", "TraceQuery", "TrafficTrace", "TrafficReport",
+           "generate_trace", "replay", "percentile"]
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's traffic shape.
+
+    * ``weight`` — relative share when mixing tenants in one stream.
+    * ``rate_qps`` — open-loop Poisson arrival rate.
+    * ``clients`` / ``queries_per_client`` — closed-loop shape.
+    * ``topk_frac`` — fraction of queries that are top-k (the rest are
+      range-τ); top-k queries draw ``k`` from ``k_range`` and run with
+      filter cap ``cap``, range queries draw τ from ``tau_range``.
+    * ``deadline_s`` — per-query SLO deadline (None = best effort).
+    * ``edits_range`` — perturbation edits applied to the base db graph
+      when materialising the query (controls answer difficulty).
+    """
+    name: str
+    weight: float = 1.0
+    rate_qps: float = 50.0
+    clients: int = 2
+    queries_per_client: int = 8
+    topk_frac: float = 0.0
+    tau_range: Tuple[int, int] = (1, 3)
+    k_range: Tuple[int, int] = (1, 5)
+    cap: int = 4
+    deadline_s: Optional[float] = None
+    edits_range: Tuple[int, int] = (1, 2)
+
+
+@dataclass(frozen=True)
+class TraceQuery:
+    """One scheduled query — everything needed to materialise and issue
+    it, no randomness left."""
+    t: float                     # arrival time (open) / issue order (closed)
+    tenant: str
+    client: int                  # closed-loop client lane (0 in open loop)
+    base: int                    # db graph index the query perturbs
+    edits: int
+    qseed: int                   # perturbation seed
+    kind: str                    # "range" | "topk"
+    tau: int                     # range τ, or the top-k filter cap
+    k: Optional[int]
+    deadline_s: Optional[float]
+
+
+@dataclass
+class TrafficTrace:
+    """A fully-determined schedule of queries plus its provenance."""
+    mode: str                    # "open" | "closed"
+    seed: int
+    n_db: int
+    tenants: List[TenantSpec]
+    queries: List[TraceQuery]
+    version: int = 1
+
+    def to_json(self) -> dict:
+        return {"version": self.version, "mode": self.mode,
+                "seed": self.seed, "n_db": self.n_db,
+                "tenants": [asdict(t) for t in self.tenants],
+                "queries": [asdict(q) for q in self.queries]}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "TrafficTrace":
+        tenants = [TenantSpec(**{**t,
+                                 "tau_range": tuple(t["tau_range"]),
+                                 "k_range": tuple(t["k_range"]),
+                                 "edits_range": tuple(t["edits_range"])})
+                   for t in obj["tenants"]]
+        queries = [TraceQuery(**q) for q in obj["queries"]]
+        return cls(mode=obj["mode"], seed=obj["seed"], n_db=obj["n_db"],
+                   tenants=tenants, queries=queries,
+                   version=obj.get("version", 1))
+
+    def digest(self) -> str:
+        """Canonical content hash — the replay test's identity check."""
+        blob = json.dumps(self.to_json(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def materialise(self, db) -> List:
+        """Regenerate every query graph from the db + pinned seeds."""
+        from repro.graphs.generators import perturb_graph
+        out = []
+        for q in self.queries:
+            rng = np.random.default_rng(q.qseed)
+            out.append(perturb_graph(db[q.base % len(db)], q.edits, rng,
+                                     db.n_vlabels, db.n_elabels))
+        return out
+
+
+def _draw_query(rng, spec: TenantSpec, n_db: int, t: float,
+                client: int) -> TraceQuery:
+    base = int(rng.integers(0, n_db))
+    edits = int(rng.integers(spec.edits_range[0], spec.edits_range[1] + 1))
+    qseed = int(rng.integers(0, 2 ** 31 - 1))
+    if float(rng.random()) < spec.topk_frac:
+        k = int(rng.integers(spec.k_range[0], spec.k_range[1] + 1))
+        return TraceQuery(t=t, tenant=spec.name, client=client, base=base,
+                          edits=edits, qseed=qseed, kind="topk",
+                          tau=int(spec.cap), k=k,
+                          deadline_s=spec.deadline_s)
+    tau = int(rng.integers(spec.tau_range[0], spec.tau_range[1] + 1))
+    return TraceQuery(t=t, tenant=spec.name, client=client, base=base,
+                      edits=edits, qseed=qseed, kind="range", tau=tau,
+                      k=None, deadline_s=spec.deadline_s)
+
+
+def generate_trace(tenants: Sequence[TenantSpec], n_db: int, *,
+                   mode: str = "open", duration_s: float = 1.0,
+                   seed: int = 0) -> TrafficTrace:
+    """Build a deterministic trace.  Open loop: per-tenant Poisson
+    arrivals over ``duration_s`` (weights scale the rates).  Closed
+    loop: per-tenant client lanes, ``queries_per_client`` each;
+    ``duration_s`` is unused there — the wall clock is the pipeline's.
+    One child generator per tenant keeps a tenant's stream invariant
+    under changes to the rest of the mix."""
+    if mode not in ("open", "closed"):
+        raise ValueError(f"unknown traffic mode {mode!r}")
+    root = np.random.default_rng(seed)
+    streams = {t.name: np.random.default_rng(s)
+               for t, s in zip(tenants, root.spawn(len(tenants)))}
+    queries: List[TraceQuery] = []
+    for spec in tenants:
+        rng = streams[spec.name]
+        if mode == "open":
+            rate = spec.rate_qps * spec.weight
+            t = 0.0
+            while True:
+                t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+                if t >= duration_s:
+                    break
+                queries.append(_draw_query(rng, spec, n_db, round(t, 6), 0))
+        else:
+            for c in range(spec.clients):
+                for i in range(spec.queries_per_client):
+                    queries.append(
+                        _draw_query(rng, spec, n_db, float(i), c))
+    # stable global order: arrival time, then (tenant, client) as the
+    # deterministic tie-break
+    queries.sort(key=lambda q: (q.t, q.tenant, q.client))
+    return TrafficTrace(mode=mode, seed=seed, n_db=n_db,
+                        tenants=list(tenants), queries=queries)
+
+
+# ---- replay ----------------------------------------------------------------
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    idx = min(len(s) - 1, max(0, int(np.ceil(p / 100.0 * len(s))) - 1))
+    return s[idx]
+
+
+@dataclass
+class _Obs:
+    tenant: str
+    kind: str
+    latency_s: float
+    deadline_s: Optional[float]
+    partial: bool
+    error: bool
+
+
+@dataclass
+class TrafficReport:
+    """Replay outcome: per-tenant and overall SLO metrics.
+
+    * ``p50_ms`` / ``p99_ms`` — completion latency percentiles (from
+      issue to resolution, queueing included).
+    * ``goodput_qps`` — completed, non-partial queries that met their
+      deadline (when one was set), per wall-clock second.
+    * ``partial_rate`` — fraction resolved as deadline partials.
+    * ``slo_miss_rate`` — fraction that missed their deadline (partials
+      and late completions both count; deadline-less queries never
+      miss).
+    """
+    wall_s: float
+    per_tenant: Dict[str, dict] = field(default_factory=dict)
+    overall: dict = field(default_factory=dict)
+
+    @staticmethod
+    def _bucket(obs: List[_Obs], wall_s: float) -> dict:
+        lat = [o.latency_s for o in obs if not o.error]
+        good = [o for o in obs
+                if not o.error and not o.partial
+                and (o.deadline_s is None or o.latency_s <= o.deadline_s)]
+        missed = [o for o in obs
+                  if o.deadline_s is not None
+                  and (o.error or o.partial
+                       or o.latency_s > o.deadline_s)]
+        n = len(obs)
+        return {
+            "n": n,
+            "n_topk": sum(o.kind == "topk" for o in obs),
+            "p50_ms": round(percentile(lat, 50) * 1e3, 3),
+            "p99_ms": round(percentile(lat, 99) * 1e3, 3),
+            "goodput_qps": round(len(good) / max(wall_s, 1e-9), 2),
+            "partial_rate": round(sum(o.partial for o in obs)
+                                  / max(n, 1), 4),
+            "slo_miss_rate": round(len(missed) / max(n, 1), 4),
+            "errors": sum(o.error for o in obs),
+        }
+
+    @classmethod
+    def build(cls, obs: List[_Obs], wall_s: float) -> "TrafficReport":
+        rep = cls(wall_s=round(wall_s, 4))
+        rep.overall = cls._bucket(obs, wall_s)
+        for name in sorted({o.tenant for o in obs}):
+            rep.per_tenant[name] = cls._bucket(
+                [o for o in obs if o.tenant == name], wall_s)
+        return rep
+
+    def to_json(self) -> dict:
+        return {"wall_s": self.wall_s, "overall": self.overall,
+                "per_tenant": self.per_tenant}
+
+
+def _to_request(q: TraceQuery, graph):
+    from repro.serve.graph_engine import GraphQuery
+    if q.kind == "topk":
+        return GraphQuery(graph, q.tau, top_k=q.k, deadline_s=q.deadline_s)
+    return GraphQuery(graph, q.tau, deadline_s=q.deadline_s)
+
+
+def replay(trace: TrafficTrace, pipe, db, *, speed: float = 1.0,
+           timeout_s: float = 300.0) -> TrafficReport:
+    """Drive ``pipe`` (an ``AsyncGraphQueryEngine``) with the trace and
+    measure.  ``speed`` compresses the open-loop schedule (2.0 = issue
+    twice as fast); closed loop ignores it.  Latency is measured from
+    issue to ticket resolution on the resolving thread."""
+    graphs = trace.materialise(db)
+    obs: List[_Obs] = []
+    obs_lock = threading.Lock()
+
+    def record(q: TraceQuery, t_issue: float, res, err) -> None:
+        lat = time.perf_counter() - t_issue
+        partial = bool(res is not None and res.stats.get("partial"))
+        with obs_lock:
+            obs.append(_Obs(q.tenant, q.kind, lat, q.deadline_s, partial,
+                            err is not None))
+
+    t_start = time.perf_counter()
+    if trace.mode == "open":
+        for q, g in zip(trace.queries, graphs):
+            target = t_start + q.t / max(speed, 1e-9)
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            t_issue = time.perf_counter()
+            pipe.submit(_to_request(q, g))._add_callback(
+                lambda res, err, q=q, ti=t_issue: record(q, ti, res, err))
+        pipe.drain(timeout_s)
+    else:
+        lanes: Dict[Tuple[str, int], List[Tuple[TraceQuery, object]]] = {}
+        for q, g in zip(trace.queries, graphs):
+            lanes.setdefault((q.tenant, q.client), []).append((q, g))
+
+        def run_lane(items) -> None:
+            for q, g in items:
+                t_issue = time.perf_counter()
+                ticket = pipe.submit(_to_request(q, g))
+                try:
+                    res = ticket.result(timeout_s)
+                    record(q, t_issue, res, None)
+                except Exception as e:       # noqa: BLE001 — count, go on
+                    record(q, t_issue, None, e)
+
+        threads = [threading.Thread(target=run_lane, args=(items,),
+                                    daemon=True)
+                   for items in lanes.values()]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout_s)
+    wall = time.perf_counter() - t_start
+    return TrafficReport.build(obs, wall)

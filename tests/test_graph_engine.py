@@ -128,3 +128,165 @@ def test_filter_eval_reused_across_batches(flat):
     ev2 = flat.filter_eval("numpy")
     assert ev1 is ev2
     assert isinstance(ev1, BatchedFilterEval)
+
+
+# ---- top-k modality (adaptive-τ escalation, DESIGN.md §15) -----------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: deterministic fallback (tests/_propshim.py)
+    from _propshim import given, settings, strategies as st
+
+
+@pytest.fixture(scope="module")
+def topk_db():
+    # small enough that the k-smallest-GED brute-force oracle is cheap
+    return aids_like_db(100, seed=9)
+
+
+@pytest.fixture(scope="module")
+def topk_flat(topk_db):
+    return FlatMSQIndex(topk_db)
+
+
+def _topk_queries(db, n=4, seed=21):
+    rng = np.random.default_rng(seed)
+    return [perturb_graph(db[int(rng.integers(0, len(db)))],
+                          int(rng.integers(1, 3)), rng, db.n_vlabels,
+                          db.n_elabels) for _ in range(n)]
+
+
+def _oracle_topk(db, g, k, cap):
+    """Brute-force k smallest GEDs over the whole db, tie rule (ged, gid)
+    — independent of every filter/index/scheduler code path."""
+    from repro.core.verify import ged_upto
+    ds = sorted((ged_upto(g, h, cap), gid) for gid, h in enumerate(db))
+    return [(gid, d) for d, gid in ds if d <= cap][:k]
+
+
+@pytest.fixture(scope="module")
+def topk_oracle(topk_db):
+    """One oracle evaluation shared across the backend x layout matrix."""
+    qs = _topk_queries(topk_db)
+    return qs, {(i, k, cap): _oracle_topk(topk_db, g, k, cap)
+                for i, g in enumerate(qs)
+                for k, cap in ((1, 3), (3, 4), (5, 4))}
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+@pytest.mark.parametrize("slab", ["dense", "hot", "packed"])
+def test_topk_equals_oracle_backend_layout_matrix(topk_db, topk_flat,
+                                                  topk_oracle, backend,
+                                                  slab):
+    """Engine top-k is bit-identical to the brute-force k-smallest-GED
+    oracle for every backend x FilterSlab layout, and the escalation
+    never decides a (query, gid) pair twice (scheduler stats account for
+    every seen candidate exactly once: verified, pruned, or expired)."""
+    qs, oracle = topk_oracle
+    eng = GraphQueryEngine(topk_flat, backend=backend, slab_layout=slab,
+                           hot_d=8, result_cache_size=0)
+    reqs, want = [], []
+    for i, g in enumerate(qs):
+        for k, cap in ((1, 3), (3, 4), (5, 4)):
+            reqs.append(GraphQuery(g, cap, top_k=k))
+            want.append(oracle[(i, k, cap)])
+    out = eng.submit(reqs)
+    for r, got, ref in zip(reqs, out, want):
+        assert [tuple(m) for m in got.matches] == ref, \
+            (backend, slab, r.top_k, r.tau)
+        assert got.stats["top_k"] == r.top_k
+    decided = (eng.stats["verified_pairs"] + eng.stats["pruned_pairs"]
+               + eng.stats["expired_pairs"])
+    assert decided == sum(len(r.candidates) for r in out), \
+        "a decided (query, gid) pair was re-verified across escalation"
+    assert eng.stats["expired_pairs"] == 0
+
+
+def test_topk_escalates_and_stops_early(topk_db, topk_flat):
+    """k hits inside a small τ: escalation stops once the kth-best bound
+    proves no wider τ helps (final τ < cap), and stats record rounds."""
+    g = topk_db[5]                       # exact member: d(g, 5) = 0
+    eng = GraphQueryEngine(topk_flat, backend="numpy",
+                           result_cache_size=0)
+    res = eng.query_topk(g, k=1, cap=6)
+    assert [tuple(m) for m in res.matches] == [(5, 0)]
+    assert res.stats["topk_rounds"] >= 1
+    assert res.stats["topk_tau_final"] < 6   # kth-best (0) ended it early
+    assert "partial" not in res.stats
+
+
+def test_topk_exhausted_when_k_exceeds_cap_ball(topk_db, topk_flat):
+    """Fewer than k graphs within the cap: every one is returned, the
+    result is flagged exhausted, never partial."""
+    qs = _topk_queries(topk_db, n=2, seed=33)
+    eng = GraphQueryEngine(topk_flat, backend="numpy",
+                           result_cache_size=0)
+    for g in qs:
+        want = _oracle_topk(topk_db, g, len(topk_db), 1)
+        res = eng.query_topk(g, k=len(topk_db), cap=1)
+        assert [tuple(m) for m in res.matches] == want
+        assert res.stats["topk_exhausted"] == 1
+        assert "partial" not in res.stats
+
+
+def test_topk_mixed_batch_matches_solo(topk_db, topk_flat):
+    """Top-k and range queries share one submit(): same answers as when
+    issued alone (the split paths must not interfere)."""
+    qs = _topk_queries(topk_db, n=3, seed=44)
+    mixed = [GraphQuery(qs[0], 4, top_k=2), GraphQuery(qs[1], 2),
+             GraphQuery(qs[2], 4, top_k=4), GraphQuery(qs[0], 1),
+             GraphQuery(qs[1], 3, top_k=1)]
+    eng = GraphQueryEngine(topk_flat, backend="numpy",
+                           result_cache_size=0)
+    out = eng.submit(mixed)
+    solo = GraphQueryEngine(topk_flat, backend="numpy",
+                            result_cache_size=0)
+    for r, got in zip(mixed, out):
+        ref = solo.submit([r])[0]
+        assert got.matches == ref.matches
+        assert got.candidates == ref.candidates
+
+
+def test_topk_validation(topk_db):
+    with pytest.raises(ValueError, match="top_k"):
+        GraphQuery(topk_db[0], 3, top_k=0)
+    with pytest.raises(ValueError, match="verify"):
+        GraphQuery(topk_db[0], 3, top_k=2, verify=False)
+
+
+def test_topk_result_cache_is_modality_safe(topk_db, topk_flat):
+    """A cached range-τ result must never answer a top-k query at the
+    same (graph, τ) — and vice versa; repeats within a modality hit."""
+    g = _topk_queries(topk_db, n=1, seed=55)[0]
+    eng = GraphQueryEngine(topk_flat, backend="numpy")
+    r_range = eng.query(g, 4)
+    r_topk = eng.query_topk(g, k=2, cap=4)
+    assert "top_k" not in r_range.stats
+    assert r_topk.stats["top_k"] == 2
+    # same modality repeats are cache hits with identical payloads
+    again_r = eng.query(g, 4)
+    again_k = eng.query_topk(g, k=2, cap=4)
+    assert again_r.stats.get("cache_hit") == 1
+    assert again_k.stats.get("cache_hit") == 1
+    assert again_r.matches == r_range.matches
+    assert again_k.matches == r_topk.matches
+    # distinct k at the same (graph, τ) is a distinct entry
+    r_k3 = eng.query_topk(g, k=3, cap=4)
+    assert "cache_hit" not in r_k3.stats
+    assert len(r_k3.matches) >= len(r_topk.matches)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_topk_property_random_k_cap(topk_db, topk_flat, k, cap, seed):
+    """Property: for random (k, cap, query) draws the engine's top-k list
+    equals the oracle's k-smallest (ged, gid) — including sort order."""
+    rng = np.random.default_rng(seed)
+    g = perturb_graph(topk_db[int(rng.integers(0, len(topk_db)))],
+                      int(rng.integers(1, 3)), rng, topk_db.n_vlabels,
+                      topk_db.n_elabels)
+    eng = GraphQueryEngine(topk_flat, backend="numpy",
+                           result_cache_size=0)
+    res = eng.query_topk(g, k=k, cap=cap)
+    assert [tuple(m) for m in res.matches] == _oracle_topk(
+        topk_db, g, k, cap)

@@ -393,3 +393,116 @@ def test_as_completed_timeout_and_error_contract(small_db, flat):
         bad = apipe.submit(GraphQuery(None, 1))       # type: ignore[arg-type]
         with pytest.raises(AttributeError):
             list(as_completed([bad], timeout=30))
+
+
+# --------------------------------------------------------------------------
+# top-k modality: escalation re-entry, cache modality safety, deadline
+# partials under both verify executors (DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+def _topk_requests(db, n=4, seed=21, cap=4, deadline_s=None):
+    from repro.graphs.generators import perturb_graph
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        g = perturb_graph(db[int(rng.integers(0, len(db)))],
+                          int(rng.integers(1, 3)), rng, db.n_vlabels,
+                          db.n_elabels)
+        out.append(GraphQuery(g, cap, top_k=int(rng.integers(1, 5)),
+                              deadline_s=deadline_s))
+    return out
+
+
+def test_async_topk_equals_sync_and_never_redecides(small_db, flat):
+    """Pipelined top-k (tickets re-entering the batch former per widened-τ
+    round) returns exactly the sync engine's k-best, range queries mixed
+    in; scheduler stats account for every seen pair once — escalation
+    never re-verifies a decided (query, gid) pair."""
+    topk = _topk_requests(small_db, 4, seed=21)
+    mixed = topk + _requests(small_db, 3, seed=22)
+    ref = GraphQueryEngine(flat, backend="numpy",
+                           result_cache_size=0).submit(mixed)
+    eng = GraphQueryEngine(flat, backend="numpy", result_cache_size=0)
+    with AsyncGraphQueryEngine(eng, max_batch=3, num_workers=2,
+                               slice_expansions=40) as apipe:
+        out = [t.result(timeout=120) for t in apipe.submit_many(mixed)]
+    _assert_same(out, ref)
+    s = apipe.stats
+    assert s["topk_rounds"] > len(topk)       # someone actually escalated
+    decided = (s["verified_pairs"] + s["pruned_pairs"]
+               + s["expired_pairs"])
+    assert decided == sum(len(r.candidates) for r in out)
+    if s["pruned_pairs"]:                     # kth-best cutoff engaged
+        assert all([tuple(m) for m in a.matches]
+                   == [tuple(m) for m in b.matches]
+                   for a, b in zip(out, ref))
+
+
+def test_async_topk_cache_modality_safe(small_db, flat):
+    """A cached range-τ entry must not answer a top-k query at the same
+    (graph, τ) and vice versa; repeats within each modality do hit, and
+    the cache_hits counter stays exact."""
+    g = _topk_requests(small_db, 1, seed=23)[0].graph
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=1, num_workers=2) as apipe:
+        r_range = apipe.submit(GraphQuery(g, 4)).result(timeout=120)
+        r_topk = apipe.submit(
+            GraphQuery(g, 4, top_k=2)).result(timeout=120)
+        assert "top_k" not in r_range.stats
+        assert r_topk.stats["top_k"] == 2
+        assert "cache_hit" not in r_topk.stats    # range entry didn't leak
+        hits_before = apipe.stats["cache_hits"]
+        again_r = apipe.submit(GraphQuery(g, 4)).result(timeout=120)
+        again_k = apipe.submit(
+            GraphQuery(g, 4, top_k=2)).result(timeout=120)
+        other_k = apipe.submit(
+            GraphQuery(g, 4, top_k=3)).result(timeout=120)
+    assert again_r.stats.get("cache_hit") == 1
+    assert again_k.stats.get("cache_hit") == 1
+    assert again_k.matches == r_topk.matches
+    assert "cache_hit" not in other_k.stats       # k is part of the key
+    assert apipe.stats["cache_hits"] == hits_before + 2
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_topk_deadline_partial_both_executors(small_db, flat, executor):
+    """A deadline hit mid-escalation resolves the verified prefix flagged
+    ``partial`` — under the thread AND the process verify executor — and
+    the partial is never cached: a deadline-free repeat recomputes the
+    exact k-best."""
+    reqs = _topk_requests(small_db, 3, seed=24, deadline_s=0.0)
+    free = [GraphQuery(r.graph, r.tau, top_k=r.top_k) for r in reqs]
+    ref = GraphQueryEngine(flat, backend="numpy",
+                           result_cache_size=0).submit(free)
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=3, num_workers=2,
+                               verify_executor=executor,
+                               slice_expansions=30) as apipe:
+        out = [t.result(timeout=180) for t in apipe.submit_many(reqs)]
+        for a, b in zip(out, ref):
+            assert a.stats["partial"] == 1
+            assert a.stats["top_k"] == b.stats["top_k"]
+            # the verified prefix is a prefix of the true k-best list
+            assert [tuple(m) for m in a.matches] \
+                == [tuple(m) for m in b.matches][:len(a.matches)]
+        # never cached: the deadline-free repeat is exact, not a hit
+        full = [t.result(timeout=180) for t in apipe.submit_many(free)]
+    for a, b in zip(full, ref):
+        assert a.matches == b.matches
+        assert "partial" not in a.stats
+        assert "cache_hit" not in a.stats
+
+
+def test_topk_escalation_survives_close(small_db, flat):
+    """close() immediately after submission: in-flight escalation rounds
+    keep the filter stage alive until every top-k ticket resolves."""
+    reqs = _topk_requests(small_db, 3, seed=25)
+    ref = GraphQueryEngine(flat, backend="numpy",
+                           result_cache_size=0).submit(reqs)
+    eng = GraphQueryEngine(flat, backend="numpy", result_cache_size=0)
+    apipe = AsyncGraphQueryEngine(eng, max_batch=2, num_workers=2,
+                                  slice_expansions=30)
+    tickets = apipe.submit_many(reqs)
+    apipe.close(timeout=120)
+    out = [t.result(timeout=1) for t in tickets]   # already resolved
+    _assert_same(out, ref)

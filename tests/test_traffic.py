@@ -1,0 +1,143 @@
+"""Traffic simulator determinism: golden traces, replay, SLO reports.
+
+The simulator is the serving harness's load source (DESIGN.md §15,
+``benchmarks/serving_slo.py``): the same (tenants, mode, seed) must
+regenerate byte-identical traces forever — the goldens under
+``tests/fixtures/traffic/`` pin that contract — and a live replay must
+issue every scheduled query and produce a schema-complete SLO report.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve.traffic import (TenantSpec, TrafficTrace, generate_trace,
+                                 percentile, replay)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "traffic")
+
+# the exact mix the goldens were generated from — changing it (or the
+# generator's draw order) is a fixture-breaking change and must be
+# deliberate: regenerate the goldens and say so in the PR
+GOLDEN_TENANTS = [
+    TenantSpec("interactive", weight=1.0, rate_qps=40.0, clients=2,
+               queries_per_client=4, topk_frac=0.6, k_range=(1, 4), cap=4,
+               tau_range=(1, 2), deadline_s=0.25, edits_range=(1, 2)),
+    TenantSpec("bulk", weight=1.0, rate_qps=15.0, clients=2,
+               queries_per_client=3, topk_frac=0.0, tau_range=(1, 3),
+               deadline_s=None, edits_range=(1, 2)),
+]
+
+
+def _golden(mode):
+    with open(os.path.join(FIXTURES, f"golden_{mode}_seed42.json"),
+              encoding="utf-8") as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mode", ["open", "closed"])
+def test_generate_reproduces_golden_trace(mode):
+    """Same (tenants, mode, seed) -> the stored golden, field for field:
+    arrival schedule, tenant interleave, query parameters, digest."""
+    trace = generate_trace(GOLDEN_TENANTS, 120, mode=mode,
+                           duration_s=0.5, seed=42)
+    golden = TrafficTrace.from_json(_golden(mode))
+    assert trace.digest() == golden.digest()
+    assert trace.to_json() == golden.to_json()
+    # and the digest covers what it claims: any schedule drift is caught
+    assert [q.t for q in trace.queries] == [q.t for q in golden.queries]
+    assert [q.tenant for q in trace.queries] \
+        == [q.tenant for q in golden.queries]
+
+
+@pytest.mark.parametrize("mode", ["open", "closed"])
+def test_trace_roundtrip_and_per_tenant_stats(mode):
+    """JSON round-trip is lossless, and per-tenant counts/modality splits
+    are identical across independent generations."""
+    a = generate_trace(GOLDEN_TENANTS, 120, mode=mode, duration_s=0.5,
+                       seed=42)
+    b = generate_trace(GOLDEN_TENANTS, 120, mode=mode, duration_s=0.5,
+                       seed=42)
+    assert TrafficTrace.from_json(a.to_json()).digest() == a.digest()
+    for t in ("interactive", "bulk"):
+        qa = [q for q in a.queries if q.tenant == t]
+        qb = [q for q in b.queries if q.tenant == t]
+        assert len(qa) == len(qb) > 0
+        assert [q.kind for q in qa] == [q.kind for q in qb]
+        assert [q.qseed for q in qa] == [q.qseed for q in qb]
+    assert all(q.kind == "range" for q in a.queries if q.tenant == "bulk")
+
+
+def test_tenant_stream_invariant_under_mix_changes():
+    """Per-tenant child generators: adding a tenant to the mix must not
+    change an existing tenant's query stream (same seed)."""
+    solo = generate_trace(GOLDEN_TENANTS[:1], 120, mode="open",
+                          duration_s=0.5, seed=42)
+    mixed = generate_trace(GOLDEN_TENANTS, 120, mode="open",
+                           duration_s=0.5, seed=42)
+    mine = [q for q in mixed.queries if q.tenant == "interactive"]
+    assert [(q.t, q.qseed, q.kind) for q in solo.queries] \
+        == [(q.t, q.qseed, q.kind) for q in mine]
+
+
+def test_materialise_is_deterministic():
+    from repro.graphs.generators import aids_like_db
+    db = aids_like_db(120, seed=3)
+    trace = TrafficTrace.from_json(_golden("closed"))
+    g1 = trace.materialise(db)
+    g2 = trace.materialise(db)
+    assert len(g1) == len(trace.queries)
+    for a, b in zip(g1, g2):
+        assert a.n == b.n and np.array_equal(a.vlabels, b.vlabels)
+        assert np.array_equal(a.edges, b.edges)
+
+
+def test_generate_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        generate_trace(GOLDEN_TENANTS, 10, mode="lockstep")
+
+
+def test_percentile_nearest_rank():
+    xs = [0.1, 0.2, 0.3, 0.4]
+    assert percentile(xs, 50) == 0.2
+    assert percentile(xs, 99) == 0.4
+    assert np.isnan(percentile([], 50))
+
+
+@pytest.mark.parametrize("mode", ["open", "closed"])
+def test_replay_issues_every_query_and_reports(mode):
+    """Live replay against a tiny pipeline: every scheduled query is
+    issued and observed, per-tenant buckets are complete, and the report
+    carries finite percentiles (deadlines off so nothing is partial)."""
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import aids_like_db
+    from repro.serve.graph_engine import GraphQueryEngine
+    from repro.serve.pipeline import AsyncGraphQueryEngine
+
+    db = aids_like_db(60, seed=3)
+    tenants = [TenantSpec(t.name, weight=t.weight, rate_qps=t.rate_qps,
+                          clients=t.clients,
+                          queries_per_client=t.queries_per_client,
+                          topk_frac=t.topk_frac, tau_range=t.tau_range,
+                          k_range=t.k_range, cap=t.cap, deadline_s=None,
+                          edits_range=t.edits_range)
+               for t in GOLDEN_TENANTS]
+    trace = generate_trace(tenants, len(db), mode=mode, duration_s=0.25,
+                           seed=5)
+    eng = GraphQueryEngine(FlatMSQIndex(db), backend="numpy")
+    pipe = AsyncGraphQueryEngine(eng, max_batch=4, max_delay_s=0.002,
+                                 num_workers=2)
+    try:
+        report = replay(trace, pipe, db, speed=4.0)
+    finally:
+        pipe.close()
+    rep = report.to_json()
+    assert rep["overall"]["n"] == len(trace.queries)
+    assert rep["overall"]["errors"] == 0
+    assert rep["overall"]["partial_rate"] == 0.0   # no deadlines set
+    assert sum(b["n"] for b in rep["per_tenant"].values()) \
+        == len(trace.queries)
+    for b in rep["per_tenant"].values():
+        assert b["p50_ms"] > 0 and b["p99_ms"] >= b["p50_ms"]
+        assert b["goodput_qps"] > 0
