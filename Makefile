@@ -24,8 +24,9 @@ bench-throughput:
 
 # Tiny offline pipeline smoke (CI): exercises the async pipelined engine
 # end-to-end — parity asserted, overlap recorded to artifacts/bench/ —
-# plus the query-batched fused filter kernel on a tiny shape, asserting
-# batched/looped bounds identical (DESIGN.md §13), and the SLO traffic
+# plus the query-batched fused filter and assignment-LB kernels on tiny
+# shapes, asserting bounds identical to their references (DESIGN.md §13,
+# §16), and the SLO traffic
 # simulator on a tiny trace (both tenant mixes, open + closed loop),
 # asserting the report schema — non-empty percentiles, goodput,
 # partial-rate (DESIGN.md §15).

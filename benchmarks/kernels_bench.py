@@ -2,9 +2,9 @@
 (correctness-scale; real-TPU time comes from the §Roofline model) plus the
 analytic HBM-traffic roofline of each kernel on v5e constants.
 
-``--smoke-batched`` runs only ``bench_qgram_filter`` in batched mode on a
-tiny shape and asserts the query-batched kernel's bounds are identical to
-the looped single-query kernel (the CI smoke for DESIGN.md §13)."""
+``--smoke-batched`` runs only the batched fused-filter and assignment-LB
+kernels on tiny shapes and asserts bit-identical bounds against their
+references (the CI smoke for DESIGN.md §13 and §16)."""
 from __future__ import annotations
 
 import argparse
@@ -105,6 +105,51 @@ def bench_qgram_filter_batched(csv: Csv, Q: int = 16, B: int = 256,
             "speedup": t_loop / t_batch, "identical": True}
 
 
+def bench_assign_lb(csv: Csv, Q: int = 8, N: int = 256, VMq: int = 32,
+                    VM: int = 32, interpret: bool = True) -> dict:
+    """Stage-1.5 assignment-LB kernel (DESIGN.md §16) vs the jnp
+    reference on one padded block; the kernel == ref integer assertion
+    is the CI smoke gate (the bound is exact integers, not a tolerance)."""
+    from repro.kernels.assign_lb.ops import assign_lb_bounds_batched
+    from repro.kernels.assign_lb.ref import batched_assign_lb_ref
+    rng = np.random.default_rng(6)
+    NE = 3
+
+    def feats(rows, vm):
+        cnt = rng.integers(1, vm + 1, rows).astype(np.int32)
+        v = np.full((rows, vm), -1, np.int32)
+        d = np.zeros((rows, vm), np.int32)
+        eh = np.zeros((rows, vm, NE), np.int32)
+        for r, c in enumerate(cnt):
+            v[r, :c] = rng.integers(0, 5, c)
+            eh[r, :c] = rng.integers(0, 3, (c, NE))
+            d[r, :c] = eh[r, :c].sum(1)
+        return v, d, eh, cnt
+
+    qv, qd, qeh, qn = feats(Q, VMq)
+    dv, dd, deh, dn = feats(N, VM)
+    args = (qv, qd, qeh, qn, dv, dd, deh, dn)
+    jargs = [jnp.asarray(x) for x in args]
+    ref_fn = jax.jit(batched_assign_lb_ref)
+    ref_out = np.asarray(ref_fn(*jargs))
+
+    def kern():
+        return np.asarray(assign_lb_bounds_batched(
+            *args, qb=min(8, Q), bb=min(128, N), interpret=interpret))
+
+    assert np.array_equal(kern(), ref_out), \
+        "assign_lb kernel bounds diverged from the jnp reference"
+    _, t_ref = timer(lambda: np.asarray(ref_fn(*jargs)), repeat=3)
+    _, t_k = timer(kern, repeat=3)
+    csv.add(f"kernel/assign_lb/ref_q{Q}_n{N}", t_ref,
+            f"pairs_per_s={Q * N / t_ref:.0f}")
+    csv.add(f"kernel/assign_lb/pallas_q{Q}_n{N}", t_k,
+            f"pairs_per_s={Q * N / t_k:.0f}")
+    print(f"assign_lb [{Q}x{N}, vm {VMq}/{VM}]: kernel {t_k * 1e3:.1f}ms "
+          f"vs jnp ref {t_ref * 1e3:.1f}ms, identical bounds")
+    return {"ref_s": t_ref, "kernel_s": t_k, "identical": True}
+
+
 def bench_bitunpack(csv: Csv, n: int = 1 << 18) -> dict:
     from repro.kernels.bitunpack.ops import pack_hybrid, packed_size_bits
     from repro.kernels.bitunpack.ref import unpack_hybrid_ref
@@ -167,12 +212,15 @@ def main() -> None:
     csv = Csv()
     if args.smoke_batched:
         out = {"qgram_filter_batched":
-               bench_qgram_filter_batched(csv, Q=6, B=48, U=160)}
+               bench_qgram_filter_batched(csv, Q=6, B=48, U=160),
+               "assign_lb":
+               bench_assign_lb(csv, Q=4, N=32, VMq=8, VM=16)}
         save_json("kernels_bench_smoke.json", out)
         return
     out = {
         "qgram_filter": bench_qgram_filter(csv),
         "qgram_filter_batched": bench_qgram_filter_batched(csv),
+        "assign_lb": bench_assign_lb(csv),
         "bitunpack": bench_bitunpack(csv),
         "rank1": bench_rank(csv),
         "flash_attention": bench_attention(csv),

@@ -47,8 +47,10 @@ BENCH_LOG = os.path.normpath(os.path.join(
 
 
 def record_trajectory(recs: List[Dict], commit: str, date: str,
-                      path: str = BENCH_LOG) -> Dict:
-    """Append one per-PR row (q/s per backend x layout) to the repo-root
+                      path: str = BENCH_LOG,
+                      verified: Dict = None) -> Dict:
+    """Append one per-PR row (q/s per backend x layout, plus the
+    verified-q/s LB on/off section when measured) to the repo-root
     trajectory log and return it."""
     row = {
         "commit": commit, "date": date,
@@ -57,6 +59,16 @@ def record_trajectory(recs: List[Dict], commit: str, date: str,
         "qps": {f"{r['backend']}/{r['slab']}": round(r["qps_batched"], 1)
                 for r in recs},
     }
+    if verified is not None:
+        row["verified"] = {
+            "dataset": verified["dataset"], "tau": verified["tau"],
+            "n_queries": verified["n_queries"],
+            "qps_off": round(verified["qps_verified_off"], 3),
+            "qps_on": round(verified["qps_verified_on"], 3),
+            "speedup": round(verified["verified_speedup"], 2),
+            "lb_pruned": verified["lb_pruned"],
+            "identical_matches": verified["identical_matches"],
+        }
     log = []
     if os.path.exists(path):
         with open(path, encoding="utf-8") as f:
@@ -90,11 +102,19 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     reqs = [GraphQuery(g, t, verify=False) for g, t in zip(graphs, taus)]
 
     # looped per-query baseline (candidate generation only; verification
-    # cost is identical on both paths)
-    t0 = time.perf_counter()
+    # cost is identical on both paths).  Warm once, then best-of-repeats —
+    # the same protocol as the engine path below, so qps_loop is
+    # comparable across --record rows instead of drifting with whatever
+    # first-pass cache/alloc effects the host happens to have.
     base = [flat.query(g, t, verify=False).candidates
-            for g, t in zip(graphs, taus)]
-    t_loop = time.perf_counter() - t0
+            for g, t in zip(graphs, taus)]              # warm
+    t_loops = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        base = [flat.query(g, t, verify=False).candidates
+                for g, t in zip(graphs, taus)]
+        t_loops.append(time.perf_counter() - t0)
+    t_loop = min(t_loops)
 
     # result_cache_size=0: every timed submit does the real filter work
     engine = GraphQueryEngine(flat, backend=backend, result_cache_size=0,
@@ -128,6 +148,72 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     print(f"batched engine [{engine.backend}/{slab}]: {qps_eng:.1f} q/s vs "
           f"looped {qps_loop:.1f} q/s -> {speedup:.2f}x "
           f"({slab_bits:.0f} slab bits/graph, identical candidate sets)")
+    return rec
+
+
+def run_verified(csv: Csv, n_db: int = 5000, n_queries: int = 16,
+                 backend: str = "auto", tau: int = 6,
+                 repeats: int = 2) -> Dict:
+    """Verified q/s (filter + A* verification end-to-end) with the
+    stage-1.5 assignment lower bound off vs on (DESIGN.md §16).
+
+    Runs on the label-poor graphgen DB ('s100k', 5 vertex labels) at a
+    verification-heavy tau: the q-gram filter admits hundreds of
+    candidates per query whose true GED is far above tau, and the A*
+    exhaustion bill on those non-matches dominates wall time.  The
+    branch bound prices exactly that gap, so the LB pass prunes the
+    worklist before a single A* node expands.  Match sets are asserted
+    bit-identical — the bound is provable, it moves work, not recall.
+    """
+    from repro.core.search import FlatMSQIndex
+    from repro.graphs.generators import perturb_graph
+    from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+
+    db = dataset("s100k", n_db)
+    flat = FlatMSQIndex(db)
+    rng = np.random.default_rng(2)
+    idx = rng.choice(len(db), size=n_queries, replace=False)
+    graphs = [perturb_graph(db[int(i)], max(tau // 2, 1), rng,
+                            db.n_vlabels, db.n_elabels) for i in idx]
+    reqs = [GraphQuery(g, tau, verify=True) for g in graphs]
+
+    def rate(assign_lb: bool):
+        eng = GraphQueryEngine(flat, backend=backend, result_cache_size=0,
+                               assign_lb=assign_lb)
+        eng.submit([GraphQuery(g, tau, verify=False)    # warm: slab + jit
+                    for g in graphs[:4]])
+        best, out = np.inf, None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            o = eng.submit(reqs)
+            dt = time.perf_counter() - t0
+            if dt < best:
+                best, out = dt, o
+        return n_queries / best, out, dict(eng.stats)
+
+    qps_off, ref, _ = rate(False)
+    qps_on, got, st = rate(True)
+    for a, b in zip(got, ref):
+        assert a.candidates == b.candidates, "candidate sets diverged"
+        assert a.matches == b.matches, "match sets diverged (LB unsound?)"
+
+    speedup = qps_on / qps_off
+    rec = {"dataset": "s100k", "n_db": n_db, "n_queries": n_queries,
+           "tau": tau,
+           "qps_verified_off": qps_off, "qps_verified_on": qps_on,
+           "verified_speedup": speedup,
+           "lb_pruned": st.get("lb_pruned", 0),
+           "lb_tightened": st.get("lb_tightened", 0),
+           "verified_pairs_on": st.get("verified_pairs", 0),
+           "identical_matches": True}
+    csv.add(f"verified_lb_off_s100k_n{n_db}_q{n_queries}_t{tau}",
+            1.0 / qps_off, f"{qps_off:.2f} q/s")
+    csv.add(f"verified_lb_on_s100k_n{n_db}_q{n_queries}_t{tau}",
+            1.0 / qps_on, f"{qps_on:.2f} q/s ({speedup:.1f}x)")
+    print(f"verified q/s [s100k n={n_db} tau={tau}]: LB on "
+          f"{qps_on:.2f} q/s vs off {qps_off:.2f} q/s -> {speedup:.2f}x "
+          f"({rec['lb_pruned']} pairs pruned before A*, identical "
+          f"match sets)")
     return rec
 
 
@@ -330,6 +416,16 @@ def main() -> None:
     ap.add_argument("--pipeline-workers", type=int, default=2)
     ap.add_argument("--pipeline-batch", type=int, default=0,
                     help="async batch-former size (0 = n_queries // 8)")
+    ap.add_argument("--verified", action="store_true",
+                    help="also measure verified q/s (A* verification ON) "
+                         "with the stage-1.5 assignment LB off vs on "
+                         "(DESIGN.md §16) on the verification-heavy "
+                         "s100k workload")
+    ap.add_argument("--verified-q", type=int, default=16)
+    ap.add_argument("--verified-tau", type=int, default=6,
+                    help="tau for the verified section (6 is "
+                         "verification-heavy on s100k: the filter admits "
+                         "~100+ candidates/query, almost all non-matches)")
     ap.add_argument("--record", action="store_true",
                     help="append this run (q/s per backend x layout) to "
                          "the repo-root BENCH_query_throughput.json "
@@ -354,9 +450,14 @@ def main() -> None:
     recs = [run(csv, n_db=args.n, n_queries=args.q, backend=args.backend,
                 slab=s, hot_d=args.hot_d) for s in slabs]
     save_json("query_throughput.json", recs[0])
+    vrec = None
+    if args.verified:
+        vrec = run_verified(csv, n_db=args.n, n_queries=args.verified_q,
+                            backend=args.backend, tau=args.verified_tau)
+        save_json("query_throughput_verified.json", vrec)
     csv.dump(art_path("query_throughput.csv"))
     if args.record:
-        record_trajectory(recs, args.commit, args.date)
+        record_trajectory(recs, args.commit, args.date, verified=vrec)
     if len(recs) > 1:
         # the space/speed trade-off on the serving format, one row per
         # layout (bits-per-graph of the resident F_D carrier vs q/s)

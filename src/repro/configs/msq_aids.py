@@ -47,12 +47,29 @@ class MSQConfig:
     # falls back to the built-in default tiles, so tuning is always
     # optional.
     tile_tune_path: Optional[str] = None
+    # stage-1.5 batched assignment lower bound (DESIGN.md §16): a
+    # device-batched Hausdorff branch bound between the q-gram filter and
+    # A* verification.  Provable (LB <= GED), so match sets are
+    # bit-identical with it on or off — it only prunes/tightens the
+    # verification worklist.  lb_hungarian > 0 additionally runs the exact
+    # Hungarian assignment on that many top-LB survivors per query (a
+    # tighter bound, host-side, off by default).
+    assign_lb: bool = True
+    lb_hungarian: int = 0
+    # persisted (qb, bb) tile table for the assignment-LB kernel
+    # (kernels.assign_lb.autotune); None = artifacts/tune/assign_lb.json.
+    lb_tune_path: Optional[str] = None
 
     def tile_table(self):
         """The autotuned TileTable this config serves with (lazy import —
         configs stay jax-free until a kernel path actually needs it)."""
         from repro.kernels.qgram_filter.autotune import load_tile_table
         return load_tile_table(self.tile_tune_path)
+
+    def lb_tile_table(self):
+        """The assignment-LB kernel's (qb, bb) TileTable (lazy import)."""
+        from repro.kernels.assign_lb.autotune import load_tile_table
+        return load_tile_table(self.lb_tune_path)
 
 
 def get_config() -> MSQConfig:

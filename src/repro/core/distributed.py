@@ -196,6 +196,39 @@ def make_sharded_multi_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
     return jax.jit(shmap), (db_spec, q_spec) + extra_spec, out_spec
 
 
+def assign_lb_specs(batch_axes: Sequence[str]) -> Tuple[Tuple, Tuple]:
+    """PartitionSpecs for the stage-1.5 assignment-LB operands
+    (DESIGN.md §16): the replicated stacked query branch block
+    ``(qv, qd, qeh, qn)`` and the row-sharded db branch block
+    ``(dv, dd, deh, dn)`` — (N, VM) labels/degrees, the (N, VM, NE)
+    incident edge-label histograms, and the (N,) vertex counts, all
+    block-partitioned over the batch axes like every other slab row."""
+    batch_axes = tuple(batch_axes)
+    q_specs = (P(None, None), P(None, None), P(None, None, None), P(None))
+    db_specs = (P(batch_axes, None), P(batch_axes, None),
+                P(batch_axes, None, None), P(batch_axes))
+    return q_specs, db_specs
+
+
+def make_sharded_assign_lb(mesh: Mesh,
+                           batch_axes: Sequence[str] = ("data",)):
+    """Jitted sharded assignment-LB pass: each device prices its slab
+    shard's branch rows against the replicated query block and emits its
+    (Q, N/S) slice of the LB matrix — column-sharded output, no
+    collectives (the min-reduce is per (query, graph) pair, so shards
+    are independent).  Bit-identical to the single-host paths."""
+    from repro.kernels.assign_lb.ref import batched_assign_lb_ref
+    q_specs, db_specs = assign_lb_specs(batch_axes)
+
+    def local_step(qv, qd, qeh, qn, dv, dd, deh, dn):
+        return batched_assign_lb_ref(qv, qd, qeh, qn, dv, dd, deh, dn)
+
+    shmap = jc.shard_map(local_step, mesh=mesh,
+                         in_specs=q_specs + db_specs,
+                         out_specs=P(None, tuple(batch_axes)))
+    return jax.jit(shmap)
+
+
 def make_sharded_search(mesh: Mesh, x0: int, y0: int, l: int, k: int,
                         batch_axes: Sequence[str] = ("data",),
                         model_axis: Optional[str] = None):

@@ -87,10 +87,19 @@ class CandidateSource(Protocol):
 @dataclass
 class CandidateBatch:
     """Per-query candidate ids plus (when the source computes them) the
-    filter lower bounds, used to order the shared verification worklist."""
+    filter lower bounds, used to order the shared verification worklist.
+
+    ``lbs`` carries the stage-1.5 assignment lower bounds (DESIGN.md
+    §16), aligned with ``ids`` like ``bounds``.  The LB never drops a
+    candidate — ``ids`` stays bit-identical with the stage off — it only
+    tightens what verification sees: the serving engine prunes pairs
+    whose LB exceeds the working radius from the worklist and seeds the
+    survivors' A* with ``max(bound, lb)``.
+    """
 
     ids: List[List[int]]
     bounds: List[Optional[np.ndarray]]     # aligned with ids; None for trees
+    lbs: Optional[List[Optional[np.ndarray]]] = None
 
 
 def bucket_queries(partition: RegionPartition, graphs: Sequence[Graph],
@@ -169,6 +178,16 @@ def _bounds_multi_jit(layout: str = "dense"):
     return jax.jit(multi)
 
 
+@functools.lru_cache(maxsize=1)
+def _assign_lb_jit():
+    """jit'd (Q, N) assignment-LB pass (the jax backend's stage 1.5) —
+    the reference body under jit, on shape-bucketed operands."""
+    import jax
+
+    from repro.kernels.assign_lb.ref import batched_assign_lb_ref
+    return jax.jit(batched_assign_lb_ref)
+
+
 def sparse_query_fd(qfd: np.ndarray, pad: int = 16
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """(Q, K) nonzero ids + counts of a stacked query F_D block, K rounded
@@ -216,7 +235,9 @@ class BatchedFilterEval:
                  shard_pad: int = _N_PAD, slab: str = "dense",
                  hot_d: Optional[int] = None,
                  hot_mass: Optional[float] = None,
-                 tile_table=None, device_cache_entries: int = 16):
+                 tile_table=None, device_cache_entries: int = 16,
+                 assign_lb: bool = True, lb_hungarian: int = 0,
+                 lb_tile_table=None):
         if backend == "auto":
             backend = resolve_backend()
         if backend not in ("jax", "numpy", "pallas", "distributed"):
@@ -236,6 +257,11 @@ class BatchedFilterEval:
         # shared by every backend path (DESIGN.md §13)
         self.device_cache = DeviceSlabCache(device_cache_entries)
         self._tile_table = tile_table
+        # stage 1.5: batched assignment lower bounds (DESIGN.md §16)
+        self.assign_lb = bool(assign_lb)
+        self.lb_hungarian = int(lb_hungarian)
+        self._lb_tile_table = lb_tile_table
+        self._lb_dist_fn = None
         if backend == "distributed":
             self._init_distributed(mesh, layout, k, shard_pad)
 
@@ -279,6 +305,104 @@ class BatchedFilterEval:
         key = bucket_key(idx, n_pad)
         return key, self.device_cache.get_or_build(
             key, "sub", lambda: self.slab.gather(idx, n_pad))
+
+    # ---- stage 1.5: batched assignment lower bounds (DESIGN.md §16) -------
+    @property
+    def lb_tile_table(self):
+        """(qb, bb) per shape bucket for the assign_lb kernel (lazy, like
+        ``tile_table``)."""
+        if self._lb_tile_table is None:
+            from repro.kernels.assign_lb import autotune
+            self._lb_tile_table = autotune.default_table()
+        return self._lb_tile_table
+
+    def bucket_assign_lbs(self, hs: Sequence[Graph],
+                          cand_ids: Sequence[List[int]]
+                          ) -> List[np.ndarray]:
+        """Per-query assignment LBs aligned with each query's candidate
+        list, computed in one batched pass over the bucket's *union* of
+        surviving ids (post-filter survivors are a small fraction of the
+        bucket, and coalescing the union keeps it one device launch)."""
+        union = sorted(set().union(*(set(c) for c in cand_ids)))
+        if not union:
+            return [np.zeros(0, np.int64) for _ in cand_ids]
+        uidx = np.asarray(union, np.int64)
+        from repro.core.slab import branch_features
+        vmq = max((h.n for h in hs), default=1)
+        qv, qd, qeh = branch_features(hs, self.db.n_elabels, max(vmq, 1))
+        qn = np.asarray([h.n for h in hs], np.int32)
+        lbm = self._assign_lb_matrix(uidx, qv, qd, qeh, qn)
+        pos = {g: i for i, g in enumerate(union)}
+        out = []
+        for r, ids in enumerate(cand_ids):
+            out.append(np.asarray(
+                lbm[r, [pos[g] for g in ids]], np.int64))
+        if self.lb_hungarian > 0:
+            self._hungarian_refine(hs, cand_ids, out)
+        return out
+
+    def _hungarian_refine(self, hs, cand_ids, lbs) -> None:
+        """Tighten the ``lb_hungarian`` highest-LB survivors per query
+        with the exact assignment relaxation (still a provable bound, so
+        still recall-safe) — the pairs closest to the radius are the ones
+        an exact assignment is most likely to push over it."""
+        from repro.kernels.assign_lb.ops import hungarian_lb_pair
+        slab = self.slab
+        for r, (h, ids) in enumerate(zip(hs, cand_ids)):
+            if not len(ids):
+                continue
+            from repro.core.slab import branch_features
+            hv, hd, heh = branch_features([h], self.db.n_elabels,
+                                          max(h.n, 1))
+            top = np.argsort(lbs[r], kind="stable")[-self.lb_hungarian:]
+            for t in top:
+                g = int(ids[int(t)])
+                n = int(slab.nv[g])
+                hung = hungarian_lb_pair(
+                    hv[0][:h.n], hd[0][:h.n], heh[0][:h.n],
+                    slab.bvlab[g][:n], slab.bdeg[g][:n], slab.behist[g][:n])
+                if hung is not None:
+                    lbs[r][int(t)] = max(int(lbs[r][int(t)]), hung)
+
+    def _assign_lb_matrix(self, uidx: np.ndarray, qv, qd, qeh, qn
+                          ) -> np.ndarray:
+        """(Q, |union|) LB matrix on the configured backend.  All
+        backends compute the same integers (the bound is provable and the
+        paths share one padding contract), so downstream verification
+        decisions are bit-identical across backend x layout x mesh."""
+        from repro.kernels.assign_lb import ops as aops
+        Q, N = len(qn), len(uidx)
+        if self.backend == "numpy":
+            _, sub = self._gather_cached(uidx, N)
+            return aops.assign_lb_np(qv, qd, qeh, qn, sub.bvlab, sub.bdeg,
+                                     sub.behist, sub.nv)
+        import jax.numpy as jnp
+        np_ = aops.shape_bucket(max(N, 1), aops.N_BASE, aops.N_CAP)
+        if self.backend == "distributed":
+            np_ = _pad_to(np_, self.n_shards)
+        key, sub = self._gather_cached(uidx, np_)
+        dev = self.device_cache.get_or_build(
+            key, "lb_db",
+            lambda: tuple(jnp.asarray(x) for x in
+                          (sub.bvlab, sub.bdeg, sub.behist, sub.nv)))
+        qvp, qdp, qehp, qnp = aops.pad_query_block(qv, qd, qeh, qn)
+        qargs = tuple(jnp.asarray(x) for x in (qvp, qdp, qehp, qnp))
+        if self.backend == "pallas":
+            qb_t, bb_t = self.lb_tile_table.lookup(
+                qvp.shape[0], np_, qvp.shape[1], sub.bvlab.shape[1])
+            out = aops.assign_lb_bounds_batched(*qargs, *dev,
+                                                qb=qb_t, bb=bb_t)
+        elif self.backend == "distributed":
+            from repro.core import jax_compat as jc
+            if self._lb_dist_fn is None:
+                from repro.core import distributed as dist
+                self._lb_dist_fn = dist.make_sharded_assign_lb(
+                    self.mesh, self._batch_axes)
+            with jc.set_mesh(self.mesh):
+                out = self._lb_dist_fn(*qargs, *dev)
+        else:
+            out = _assign_lb_jit()(*qargs, *dev)
+        return np.asarray(out)[:Q, :N]
 
     # ---- distributed slab-shard bookkeeping -------------------------------
     def _init_distributed(self, mesh, layout: str, k: int,
@@ -572,16 +696,22 @@ def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
                             qtuples: Optional[Sequence[QueryTuple]] = None
                             ) -> CandidateBatch:
     """Stages 1-3 for a flat source: bucket, lay the slab out (gathered or
-    sharded), one filter pass per bucket, per-query candidate lists."""
+    sharded), one filter pass per bucket, per-query candidate lists, then
+    (when ``ev.assign_lb``) the stage-1.5 assignment LB pass over each
+    bucket's surviving candidates (DESIGN.md §16)."""
     Qn = len(graphs)
     ids: List[List[int]] = [[] for _ in range(Qn)]
     bnds: List[Optional[np.ndarray]] = [None] * Qn
+    lbs: Optional[List[Optional[np.ndarray]]] = \
+        [None] * Qn if ev.assign_lb else None
     for rect, qis in bucket_queries(ev.partition, graphs, taus).items():
         idx = ev.graphs_in_rect(rect)
         if len(idx) == 0:
             for qi in qis:
                 ids[qi] = []
                 bnds[qi] = np.zeros(0, np.int64)
+                if lbs is not None:
+                    lbs[qi] = np.zeros(0, np.int64)
             continue
         qs = [ev.query_arrays(graphs[qi], int(taus[qi]),
                               None if qtuples is None else qtuples[qi])
@@ -589,4 +719,10 @@ def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
         cands = ev.bucket_candidates(idx, qs, [int(taus[qi]) for qi in qis])
         for row, qi in enumerate(qis):
             ids[qi], bnds[qi] = cands[row]
-    return CandidateBatch(ids=ids, bounds=bnds)
+        if lbs is not None:
+            blbs = ev.bucket_assign_lbs([graphs[qi] for qi in qis],
+                                        [cands[row][0]
+                                         for row in range(len(qis))])
+            for row, qi in enumerate(qis):
+                lbs[qi] = blbs[row]
+    return CandidateBatch(ids=ids, bounds=bnds, lbs=lbs)

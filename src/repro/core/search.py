@@ -173,7 +173,9 @@ class FlatMSQIndex:
     def filter_eval(self, backend: str = "auto", slab: str = "dense",
                     hot_d: Optional[int] = None,
                     hot_mass: Optional[float] = None,
-                    tile_table=None) -> BatchedFilterEval:
+                    tile_table=None, assign_lb: bool = True,
+                    lb_hungarian: int = 0,
+                    lb_tile_table=None) -> BatchedFilterEval:
         """The batched (Q, N) filter evaluator over this index's arrays
         (built lazily once per backend x FilterSlab layout, then reused
         across batches — DESIGN.md §11)."""
@@ -203,16 +205,24 @@ class FlatMSQIndex:
                 hot_d = DEFAULT_HOT_D
         elif slab != "hot":
             hot_d = None              # meaningless off-hot; don't fork keys
-        key = (backend, slab, hot_d)
+        # assign_lb / lb_hungarian fork the key: they change what the
+        # evaluator computes per batch (the stage-1.5 LB pass, §16)
+        key = (backend, slab, hot_d, bool(assign_lb), int(lb_hungarian))
         if key not in cache:
             cache[key] = BatchedFilterEval(self.db, self.enc,
                                            self.partition, backend,
                                            slab=slab, hot_d=hot_d,
-                                           tile_table=tile_table)
-        elif tile_table is not None:
-            # tiles never change results, so a late table swaps in
-            # without forking the evaluator cache key
-            cache[key]._tile_table = tile_table
+                                           tile_table=tile_table,
+                                           assign_lb=assign_lb,
+                                           lb_hungarian=lb_hungarian,
+                                           lb_tile_table=lb_tile_table)
+        else:
+            if tile_table is not None:
+                # tiles never change results, so a late table swaps in
+                # without forking the evaluator cache key
+                cache[key]._tile_table = tile_table
+            if lb_tile_table is not None:
+                cache[key]._lb_tile_table = lb_tile_table
         return cache[key]
 
     def set_filter_eval(self, backend: str, ev: BatchedFilterEval) -> None:
@@ -239,10 +249,14 @@ class FlatMSQIndex:
                            backend: str = "auto", slab: str = "dense",
                            hot_d: Optional[int] = None,
                            hot_mass: Optional[float] = None,
-                           tile_table=None) -> CandidateBatch:
+                           tile_table=None, assign_lb: bool = True,
+                           lb_hungarian: int = 0,
+                           lb_tile_table=None) -> CandidateBatch:
         return batched_flat_candidates(
             self.filter_eval(backend, slab=slab, hot_d=hot_d,
-                             hot_mass=hot_mass, tile_table=tile_table),
+                             hot_mass=hot_mass, tile_table=tile_table,
+                             assign_lb=assign_lb, lb_hungarian=lb_hungarian,
+                             lb_tile_table=lb_tile_table),
             graphs, taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:

@@ -63,6 +63,33 @@ def hot_d_from_mass(enc: EncodedDB, mass: float) -> int:
     return max(1, min(H, U))
 
 
+def branch_features(graphs, n_elabels: int, vmax: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-vertex *branch* structures for the assignment lower bound
+    (DESIGN.md §16): for every vertex its label, degree, and incident
+    edge-label histogram.  Padded to ``vmax`` with label -1 / degree 0 /
+    zero histograms — pad slots then price exactly like the ε
+    (insert/delete) column of the branch cost matrix, so the batched
+    min-reduce needs no explicit pad masking on the min axes.
+
+    Returns ``(vlab (B, vmax) int32, deg (B, vmax) int32,
+    ehist (B, vmax, n_elabels) int32)``.
+    """
+    B = len(graphs)
+    vlab = np.full((B, vmax), -1, np.int32)
+    deg = np.zeros((B, vmax), np.int32)
+    eh = np.zeros((B, vmax, max(n_elabels, 1)), np.int32)
+    for i, g in enumerate(graphs):
+        n = min(int(g.n), vmax)
+        vlab[i, :n] = np.asarray(g.vlabels[:n], np.int32)
+        if g.m:
+            edges = np.asarray(g.edges, np.int64)
+            elab = np.asarray(g.elabels, np.int64)
+            np.add.at(deg[i], edges.ravel(), 1)
+            np.add.at(eh[i], (edges.ravel(), np.repeat(elab, 2)), 1)
+    return vlab, deg, eh
+
+
 def _ragged_take(off: np.ndarray, ids: np.ndarray, cnt: np.ndarray,
                  rows: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -103,6 +130,11 @@ class FilterSlab:
     t_ids: Optional[np.ndarray] = None
     t_cnt: Optional[np.ndarray] = None
     packed: Optional["PackedRows"] = None        # noqa: F821
+    # per-vertex branch structures for the stage-1.5 assignment lower
+    # bound (DESIGN.md §16) — layout-independent, like nv/degseq
+    bvlab: Optional[np.ndarray] = None           # (B, vmax), pad -1
+    bdeg: Optional[np.ndarray] = None            # (B, vmax), pad 0
+    behist: Optional[np.ndarray] = None          # (B, vmax, NE), pad 0
     _fd_cache: Optional[np.ndarray] = None       # lazy packed host decode
     _t_rows: Optional[np.ndarray] = None         # lazy tail entry -> row map
 
@@ -128,6 +160,8 @@ class FilterSlab:
             ehist=batch.elabel_hist.astype(np.int32),
             region_i=ri.astype(np.int32), region_j=rj.astype(np.int32),
             U=U, hot_d=U, vmax=vmax)
+        slab.bvlab, slab.bdeg, slab.behist = branch_features(
+            db.graphs, db.n_elabels, vmax)
         if layout == "dense":
             fd, _ = enc.dense_hot(U)
             slab.fd = fd.astype(np.int32)
@@ -185,7 +219,10 @@ class FilterSlab:
             nv=take(self.nv), ne=take(self.ne), degseq=take(self.degseq),
             vhist=take(self.vhist), ehist=take(self.ehist),
             region_i=take(self.region_i, _IMPOSSIBLE),
-            region_j=take(self.region_j, _IMPOSSIBLE))
+            region_j=take(self.region_j, _IMPOSSIBLE),
+            bvlab=None if self.bvlab is None else take(self.bvlab, -1),
+            bdeg=None if self.bdeg is None else take(self.bdeg),
+            behist=None if self.behist is None else take(self.behist))
         if self.fd is not None:
             sub.fd = take(self.fd)
         if self.layout == "hot":

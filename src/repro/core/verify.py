@@ -99,12 +99,21 @@ class GEDSearch:
     unbudgeted search regardless of how the work was sliced.
     """
 
-    __slots__ = ("g", "h", "tau", "order", "h_edges", "g_edges",
+    __slots__ = ("g", "h", "tau", "lb", "order", "h_edges", "g_edges",
                  "g_vlab_all", "g_elab_all", "vlab_suffix", "elab_suffix",
                  "heap", "result", "expansions")
 
-    def __init__(self, g: Graph, h: Graph, tau: int):
+    def __init__(self, g: Graph, h: Graph, tau: int, *,
+                 initial_bound: int = 0):
+        """``initial_bound`` is an externally proven GED lower bound (the
+        stage-1.5 assignment LB, DESIGN.md §16): ``initial_bound > tau``
+        decides ``tau + 1`` with zero expansions, and ``min_f`` never
+        reports below it — the search's own frontier usually starts
+        looser, so the seeded bound keeps the worklist priority honest.
+        Decisions are unchanged: a provable bound can only shortcut work
+        A* would have done anyway."""
         self.g, self.h, self.tau = g, h, int(tau)
+        self.lb = int(initial_bound)
         tau = self.tau
         self.order = order = _order_query_vertices(h)
         self.h_edges = h_edges = _edge_dict(h)
@@ -133,7 +142,7 @@ class GEDSearch:
         start_h = _heuristic(g, h, order, 0, 0, vlab_suffix[0],
                              elab_suffix[0], self.g_vlab_all,
                              self.g_elab_all, Counter(), Counter())
-        if start_h > tau:
+        if max(start_h, self.lb) > tau:
             self.result = tau + 1
         elif h.n == 0:
             c = self._completion_cost(0)
@@ -152,7 +161,8 @@ class GEDSearch:
         priority of a partially-run search)."""
         if self.result is not None:
             return self.result
-        return self.heap[0][0] if self.heap else self.tau + 1
+        f = self.heap[0][0] if self.heap else self.tau + 1
+        return max(f, self.lb)
 
     def _completion_cost(self, used_g: int) -> int:
         """Insert the unmatched g vertices and all their incident edges."""

@@ -1,0 +1,1 @@
+"""Batched branch-assignment GED lower bounds (DESIGN.md §16)."""

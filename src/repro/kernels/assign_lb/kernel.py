@@ -1,0 +1,109 @@
+"""Pallas kernel for the batched Hausdorff branch lower bound
+(DESIGN.md §16).
+
+One (qb, bb) tile prices every query-vertex / db-vertex branch pair of
+its block and reduces straight to the per-pair LB — a pure min-reduce,
+no cross-tile accumulation, so the grid is just (Q/QB, N/BB) and the
+kernel needs no scratch.
+
+The db-side branch operands (labels, degrees, incident edge-label
+histograms) are the device-resident slab arrays; the query block rides a
+leading Q axis like the fused filter kernel (§13).  True query vertex
+counts arrive as an SMEM (QB, 1) scalar block; db vertex counts as a
+(BB, 1) VMEM column.  Pad vertices price exactly as the ε column (the
+``branch_features`` padding contract), so only the two sums mask.
+
+The static Python loop over the query-vertex axis keeps every
+intermediate at rank 3 — (QB, BB, VM) — which the TPU vector unit
+handles natively; VMq is shape-bucketed (ops.VM_BASE ladder) so the
+unroll count stays bounded per compiled program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+N_SCALARS = 1                 # per-query scalar block: [true vertex count]
+
+
+def _lb_kernel(scalars_ref,   # SMEM (QB, 1) int32: query vertex counts
+               qv_ref,        # (QB, VMq) int32 query vertex labels (pad -1)
+               qd_ref,        # (QB, VMq) int32 query degrees (pad 0)
+               qeh_ref,       # (QB, VMq, NE) int32 incident-label hists
+               dv_ref,        # (BB, VM) int32 db vertex labels (pad -1)
+               dd_ref,        # (BB, VM) int32 db degrees (pad 0)
+               deh_ref,       # (BB, VM, NE) int32 db incident-label hists
+               dn_ref,        # (BB, 1) int32 db vertex counts
+               lb_ref):       # (QB, BB) int32 out
+    QB, VMq = qv_ref.shape
+    dv = dv_ref[...]
+    dd = dd_ref[...]
+    deh = deh_ref[...]
+    BB, VM = dv.shape
+    NE = deh.shape[2]
+
+    # per-query scalar column as a (QB, 1) vector; SMEM reads stay
+    # scalar (TPU-safe), QB is static so the stack unrolls
+    qn = jnp.stack([scalars_ref[r, 0] for r in range(QB)])[:, None]
+
+    rowsum = jnp.zeros((QB, BB), jnp.int32)
+    colmin = jnp.broadcast_to((2 + dd)[None, :, :], (QB, BB, VM))
+    for u in range(VMq):
+        lbl = 2 * (qv_ref[:, u][:, None, None] != dv[None, :, :]
+                   ).astype(jnp.int32)
+        dmax = jnp.maximum(qd_ref[:, u][:, None, None], dd[None, :, :])
+        inter = jnp.zeros((QB, BB, VM), jnp.int32)
+        for e in range(NE):
+            inter += jnp.minimum(qeh_ref[:, u, e][:, None, None],
+                                 deh[None, :, :, e])
+        c2 = lbl + dmax - inter                           # (QB, BB, VM)
+        rmin = jnp.minimum(c2.min(axis=2),
+                           (2 + qd_ref[:, u])[:, None])   # (QB, BB)
+        rowsum += jnp.where(u < qn, rmin, 0)
+        colmin = jnp.minimum(colmin, c2)
+
+    dn = dn_ref[...][:, 0]                                # (BB,)
+    vvalid = (jax.lax.broadcasted_iota(jnp.int32, (BB, VM), 1)
+              < dn[:, None])
+    colsum = jnp.where(vvalid[None, :, :], colmin, 0).sum(axis=2)
+    lb2 = jnp.maximum(rowsum, colsum)
+    lb_ref[...] = ((lb2 + 1) // 2).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("qb", "bb", "interpret"))
+def assign_lb_call(qv, qd, qeh, qn, dv, dd, deh, dn, *, qb: int = 8,
+                   bb: int = 128, interpret: bool = False):
+    """Raw pallas_call; shapes must already be tile-aligned.
+
+    qv/qd (Q, VMq); qeh (Q, VMq, NE); qn (Q,); dv/dd (N, VM);
+    deh (N, VM, NE); dn (N,).  Returns (Q, N) int32 LBs.
+    """
+    Q, VMq = qv.shape
+    N, VM = dv.shape
+    NE = deh.shape[2]
+    assert Q % qb == 0 and N % bb == 0, (Q, N, qb, bb)
+    scalars = jnp.asarray(qn, jnp.int32).reshape(Q, N_SCALARS)
+    dn2 = jnp.asarray(dn, jnp.int32).reshape(N, 1)
+    grid = (Q // qb, N // bb)
+    return pl.pallas_call(
+        _lb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qb, N_SCALARS), lambda q, i: (q, 0),
+                         memory_space=pltpu.SMEM),               # scalars
+            pl.BlockSpec((qb, VMq), lambda q, i: (q, 0)),        # qv
+            pl.BlockSpec((qb, VMq), lambda q, i: (q, 0)),        # qd
+            pl.BlockSpec((qb, VMq, NE), lambda q, i: (q, 0, 0)),  # qeh
+            pl.BlockSpec((bb, VM), lambda q, i: (i, 0)),         # dv
+            pl.BlockSpec((bb, VM), lambda q, i: (i, 0)),         # dd
+            pl.BlockSpec((bb, VM, NE), lambda q, i: (i, 0, 0)),  # deh
+            pl.BlockSpec((bb, 1), lambda q, i: (i, 0)),          # dn
+        ],
+        out_specs=pl.BlockSpec((qb, bb), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.int32),
+        interpret=interpret,
+    )(scalars, qv, qd, qeh, dv, dd, deh, dn2)

@@ -1,0 +1,56 @@
+"""jax.numpy reference for the batched assignment lower bound — the
+oracle the Pallas kernel is tested against, and the body the jit'd jax
+backend path runs (DESIGN.md §16).
+
+The bound (BRANCH family, à la EmbAssi / Nass): every vertex carries a
+*branch* — its label plus the multiset of incident edge labels.  With
+doubled integer costs
+
+  C2(u, v) = 2·[l(u) != l(v)] + max(d(u), d(v)) - sum_e min(EH_u[e], EH_v[e])
+  C2(u, ε) = 2 + d(u)          C2(ε, v) = 2 + d(v)
+
+the optimal assignment of query branches to database branches (ε =
+insert/delete) satisfies ``ceil(assignment(C2) / 2) <= GED``.  The
+Hausdorff relaxation drops the one-to-one constraint: every row (and
+every column) of *any* assignment dominates its own min, so
+
+  LB2 = max( sum_u min_{v ∪ ε} C2(u, v),  sum_v min_{u ∪ ε} C2(u, v) )
+  LB  = (LB2 + 1) // 2  <=  assignment LB  <=  GED
+
+which is exactly a batched min-reduce — the shape the device wants.
+
+Padding contract (``core.slab.branch_features``): pad vertices carry
+label -1 / degree 0 / zero histograms, so a real-vs-pad pair prices
+exactly as the ε column (2 + degree) and the min axes need no masking;
+only the two *sums* mask by the true vertex counts ``qn`` / ``dn``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_assign_lb_ref(qv, qd, qeh, qn, dv, dd, deh, dn):
+    """(Q, N) int32 Hausdorff branch lower bounds.
+
+    qv/qd (Q, VMq) int32, qeh (Q, VMq, NE) int32, qn (Q,) int32 true
+    query vertex counts; dv/dd (N, VM), deh (N, VM, NE), dn (N,) the
+    database side.  Pads as per the module docstring.
+    """
+    Q, VMq = qv.shape
+    N, VM = dv.shape
+    lbl = 2 * (qv[:, None, :, None] != dv[None, :, None, :]).astype(jnp.int32)
+    dmax = jnp.maximum(qd[:, None, :, None], dd[None, :, None, :])
+    inter = jnp.minimum(qeh[:, None, :, None, :],
+                        deh[None, :, None, :, :]).sum(axis=4)
+    c2 = lbl + dmax - inter                               # (Q, N, VMq, VM)
+
+    rowmin = jnp.minimum(c2.min(axis=3), (2 + qd)[:, None, :])
+    umask = jnp.arange(VMq)[None, :] < qn[:, None]        # (Q, VMq)
+    rowsum = jnp.where(umask[:, None, :], rowmin, 0).sum(axis=2)
+
+    colmin = jnp.minimum(c2.min(axis=2), (2 + dd)[None, :, :])
+    vmask = jnp.arange(VM)[None, :] < dn[:, None]         # (N, VM)
+    colsum = jnp.where(vmask[None, :, :], colmin, 0).sum(axis=2)
+
+    lb2 = jnp.maximum(rowsum, colsum)
+    return ((lb2 + 1) // 2).astype(jnp.int32)

@@ -295,7 +295,8 @@ class VerifyScheduler:
         self._closed = False        # guarded_by: self._cv
         self._interval_sink = interval_sink
         self.stats: Dict[str, int] = {          # guarded_by: self._cv
-            "verified_pairs": 0, "expired_pairs": 0, "resumed_runs": 0}
+            "verified_pairs": 0, "expired_pairs": 0, "resumed_runs": 0,
+            "lb_pruned": 0, "lb_tightened": 0}
 
     def stats_snapshot(self) -> Dict[str, int]:
         """Consistent copy of the worklist counters (readers must not
@@ -308,13 +309,24 @@ class VerifyScheduler:
                 bounds: Sequence[int], *, deadline: Optional[float] = None,
                 token=None, on_match: Optional[Callable] = None,
                 on_done: Optional[Callable] = None,
-                should_skip: Optional[Callable] = None) -> VerifyJob:
+                should_skip: Optional[Callable] = None,
+                n_lb_pruned: int = 0, n_lb_tightened: int = 0) -> VerifyJob:
         """Enqueue one query's candidate pairs (cheapest bound first is
         the heap's job).  ``on_done`` fires exactly once, on the thread
         that retires the query's last pair (immediately, on the calling
         thread, for candidate-less queries).  ``should_skip(gid, bound)``
         is consulted at pop time — a True verdict retires the pair as
-        ``pruned`` without running A* (the top-k kth-best cutoff)."""
+        ``pruned`` without running A* (the top-k kth-best cutoff).
+
+        ``n_lb_pruned`` / ``n_lb_tightened`` account the stage-1.5
+        assignment-LB merge that happened *before* this call (DESIGN.md
+        §16): pairs the LB already decided (``lb > τ``) never reach the
+        heap, so the no-redecide invariant becomes
+        ``verified + pruned + expired + lb_pruned == |candidates seen|``."""
+        if n_lb_pruned or n_lb_tightened:
+            with self._cv:
+                self.stats["lb_pruned"] += int(n_lb_pruned)
+                self.stats["lb_tightened"] += int(n_lb_tightened)
         job = VerifyJob(graph, tau, deadline, token=token,
                         on_match=on_match, on_done=on_done,
                         should_skip=should_skip)
@@ -465,7 +477,12 @@ class VerifyScheduler:
                         "pruned_pairs", 0) + 1
                 return
             if search is None:
-                search = GEDSearch(self.db[gid], job.graph, job.tau)
+                # the heap bound is a provable GED lower bound (filter
+                # bound merged with the stage-1.5 assignment LB), so it
+                # seeds A* directly: lb > τ decides τ+1 with zero
+                # expansions and min_f never reports below it (§16)
+                search = GEDSearch(self.db[gid], job.graph, job.tau,
+                                   initial_bound=int(bound))
             else:
                 with self._cv:
                     self.stats["resumed_runs"] += 1
@@ -524,7 +541,9 @@ class GraphQueryEngine:
                  encoding_cache_size: int = 1024,
                  result_cache_size: int = 256, slab_layout: str = "dense",
                  hot_d: Optional[int] = None,
-                 hot_mass: Optional[float] = None, tile_table=None):
+                 hot_mass: Optional[float] = None, tile_table=None,
+                 assign_lb: bool = True, lb_hungarian: int = 0,
+                 lb_tile_table=None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
         self.slab_layout = slab_layout
@@ -533,11 +552,19 @@ class GraphQueryEngine:
         # autotuned kernel tiles for the pallas path (DESIGN.md §13);
         # e.g. tile_table=cfg.tile_table() for a config-selected table
         self.tile_table = tile_table
+        # stage-1.5 assignment-LB knobs (DESIGN.md §16): the batched
+        # branch bound between the q-gram filter and A* verification;
+        # lb_hungarian > 0 additionally runs the exact Hungarian
+        # assignment on that many top-LB survivors per query
+        self.assign_lb = bool(assign_lb)
+        self.lb_hungarian = int(lb_hungarian)
+        self.lb_tile_table = lb_tile_table
         self._enc_cache = _LRU(encoding_cache_size)
         self._res_cache = _LRU(result_cache_size)
         self.stats: Dict[str, float] = {
             "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
             "verified_pairs": 0, "expired_pairs": 0, "pruned_pairs": 0,
+            "lb_pruned": 0, "lb_tightened": 0,
             "cache_hits": 0, "topk_rounds": 0}
 
     # ---- encoding cache ----------------------------------------------------
@@ -563,6 +590,11 @@ class GraphQueryEngine:
             kwargs["hot_mass"] = self.hot_mass
         if "tile_table" in params and self.tile_table is not None:
             kwargs["tile_table"] = self.tile_table
+        if "assign_lb" in params:
+            kwargs["assign_lb"] = self.assign_lb
+            kwargs["lb_hungarian"] = self.lb_hungarian
+            if self.lb_tile_table is not None:
+                kwargs["lb_tile_table"] = self.lb_tile_table
         return self.source.batched_candidates(graphs, taus, **kwargs)
 
     # ---- shared stages (submit composes them inline; the async pipeline
@@ -621,6 +653,39 @@ class GraphQueryEngine:
         if bnd is None:                      # tree sources carry no bounds
             return [0] * len(batch.ids[row])
         return [int(b) for b in bnd]
+
+    @staticmethod
+    def _job_lbs(batch, row: int) -> Optional[Sequence[int]]:
+        """The row's stage-1.5 assignment LBs, or None when the source
+        computed none (tree sources, ``assign_lb=False``)."""
+        lbs = getattr(batch, "lbs", None)
+        return None if lbs is None else lbs[row]
+
+    @staticmethod
+    def _merge_lb(ids: Sequence[int], bounds: Sequence[int],
+                  lbs: Optional[Sequence[int]], tau: int):
+        """Fold the stage-1.5 assignment LBs into one query's worklist
+        admission (DESIGN.md §16).  A pair with ``lb > τ`` is already
+        decided (GED >= lb), so it never enters the heap; survivors seed
+        A* at the tighter ``max(filter bound, lb)``.  The candidate
+        *list* is untouched by the caller — the LB prunes work, never
+        recall.  Returns (ids, bounds, n_lb_pruned, n_lb_tightened)."""
+        if lbs is None:
+            return list(ids), list(bounds), 0, 0
+        keep_ids: List[int] = []
+        keep_bounds: List[int] = []
+        pruned = tightened = 0
+        for g, b, lb in zip(ids, bounds, lbs):
+            lb = int(lb)
+            if lb > int(tau):
+                pruned += 1
+                continue
+            if lb > int(b):
+                tightened += 1
+                b = lb
+            keep_ids.append(int(g))
+            keep_bounds.append(int(b))
+        return keep_ids, keep_bounds, pruned, tightened
 
     @staticmethod
     def _assemble(cand: List[int], job: Optional[VerifyJob], n_db: int,
@@ -696,17 +761,24 @@ class GraphQueryEngine:
                 self.stats["topk_rounds"] += 1
                 st.filter_s += share
                 bounds = self._job_bounds(batch, row)
-                new = [(int(g), int(b))
-                       for g, b in zip(batch.ids[row], bounds)
-                       if int(g) not in st.seen]
-                st.seen.update(g for g, _ in new)
+                lbs = self._job_lbs(batch, row)
+                keep = [c for c, g in enumerate(batch.ids[row])
+                        if int(g) not in st.seen]
+                new_ids = [int(batch.ids[row][c]) for c in keep]
+                st.seen.update(new_ids)   # lb-pruned gids stay "seen":
+                # they are decided (GED >= lb > cap), never resubmitted
+                w_ids, w_bounds, n_pr, n_tt = self._merge_lb(
+                    new_ids, [bounds[c] for c in keep],
+                    None if lbs is None else [int(lbs[c]) for c in keep],
+                    st.cap)
                 # pairs run at the query CAP, not the round τ — decisions
                 # stay final and frontiers resumable (DESIGN.md §15)
                 jobs[i] = sched.add_job(
-                    requests[i].graph, st.cap, [g for g, _ in new],
-                    [b for _, b in new], deadline=st.deadline,
+                    requests[i].graph, st.cap, w_ids, w_bounds,
+                    deadline=st.deadline,
                     on_match=lambda job, g, d, s=st: s.record_match(g, d),
-                    should_skip=st.should_skip)
+                    should_skip=st.should_skip,
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
             sched.run_until_idle()   # the one-worker special case
             still: List[int] = []
             for i in active:
@@ -730,6 +802,8 @@ class GraphQueryEngine:
         self.stats["verified_pairs"] += ss["verified_pairs"]
         self.stats["expired_pairs"] += ss["expired_pairs"]
         self.stats["pruned_pairs"] += ss.get("pruned_pairs", 0)
+        self.stats["lb_pruned"] += ss["lb_pruned"]
+        self.stats["lb_tightened"] += ss["lb_tightened"]
 
     # ---- the batched path --------------------------------------------------
     def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
@@ -760,13 +834,18 @@ class GraphQueryEngine:
                     continue
                 deadline = (None if r.deadline_s is None
                             else now + float(r.deadline_s))
+                w_ids, w_bounds, n_pr, n_tt = self._merge_lb(
+                    batch.ids[row], self._job_bounds(batch, row),
+                    self._job_lbs(batch, row), taus[row])
                 jobs[row] = sched.add_job(
-                    r.graph, taus[row], batch.ids[row],
-                    self._job_bounds(batch, row), deadline=deadline)
+                    r.graph, taus[row], w_ids, w_bounds, deadline=deadline,
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
             sched.run_until_idle()   # the one-worker special case
             self.stats["verify_s"] += sum(j.verify_s for j in jobs.values())
             self.stats["verified_pairs"] += sched.stats["verified_pairs"]
             self.stats["expired_pairs"] += sched.stats["expired_pairs"]
+            self.stats["lb_pruned"] += sched.stats["lb_pruned"]
+            self.stats["lb_tightened"] += sched.stats["lb_tightened"]
 
             n_db = len(self.source.db)
             per_q_filter = (t1 - t0) / max(len(fresh), 1)
@@ -848,7 +927,9 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
         self.evaluator = BatchedFilterEval(
             source.db, source.enc, source.partition, backend="distributed",
             mesh=mesh, layout=layout, k=k, shard_pad=shard_pad,
-            slab=slab_layout, hot_d=hot_d, hot_mass=hot_mass)
+            slab=slab_layout, hot_d=hot_d, hot_mass=hot_mass,
+            assign_lb=self.assign_lb, lb_hungarian=self.lb_hungarian,
+            lb_tile_table=self.lb_tile_table)
         # also visible to plain GraphQueryEngine(source, "distributed") users
         source.set_filter_eval("distributed", self.evaluator)
 
@@ -864,6 +945,8 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
         kw.setdefault("hot_mass", hm)
         kw.setdefault("hot_d",
                       None if hm is not None else getattr(cfg, "hot_d", None))
+        kw.setdefault("assign_lb", getattr(cfg, "assign_lb", True))
+        kw.setdefault("lb_hungarian", getattr(cfg, "lb_hungarian", 0))
         return cls(source, mesh,
                    layout=getattr(cfg, "sharded_layout", "graph"),
                    k=int(getattr(cfg, "shard_topk", 256)), **kw)

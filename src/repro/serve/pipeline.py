@@ -406,20 +406,26 @@ class AsyncGraphQueryEngine:
                 with self._cv:
                     eng.stats["topk_rounds"] += 1
                 bounds = eng._job_bounds(batch, row)
-                fresh_pairs = [(int(g), int(b))
-                               for g, b in zip(cand, bounds)
-                               if int(g) not in st.seen]
-                st.seen.update(g for g, _ in fresh_pairs)
+                lbs = eng._job_lbs(batch, row)
+                keep = [c for c, g in enumerate(cand)
+                        if int(g) not in st.seen]
+                new_ids = [int(cand[c]) for c in keep]
+                st.seen.update(new_ids)   # lb-pruned gids stay "seen":
+                # decided (GED >= lb > cap), never resubmitted (§16)
+                w_ids, w_bounds, n_pr, n_tt = eng._merge_lb(
+                    new_ids, [bounds[c] for c in keep],
+                    None if lbs is None else [int(lbs[c]) for c in keep],
+                    st.cap)
                 # pairs run at the query CAP, not the round τ: decisions
                 # stay final, frontiers stay resumable in the shared heap
                 # across escalation rounds (DESIGN.md §15)
                 self.scheduler.add_job(
-                    r.graph, st.cap, [g for g, _ in fresh_pairs],
-                    [b for _, b in fresh_pairs], deadline=st.deadline,
+                    r.graph, st.cap, w_ids, w_bounds, deadline=st.deadline,
                     token=(ticket, key, r, st),
                     on_match=self._on_topk_match,
                     on_done=self._on_topk_round_done,
-                    should_skip=st.should_skip)
+                    should_skip=st.should_skip,
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
                 continue
             if not r.verify:
                 res = eng._assemble(cand, None, n_db, per_q_filter)
@@ -429,11 +435,16 @@ class AsyncGraphQueryEngine:
             dl_s = (r.deadline_s if r.deadline_s is not None
                     else self.default_deadline_s)
             deadline = None if dl_s is None else now + float(dl_s)
+            # candidate list in the token stays the *full* row — the
+            # stage-1.5 LB prunes verification work, never recall (§16)
+            w_ids, w_bounds, n_pr, n_tt = eng._merge_lb(
+                cand, eng._job_bounds(batch, row),
+                eng._job_lbs(batch, row), tau)
             self.scheduler.add_job(
-                r.graph, tau, cand, eng._job_bounds(batch, row),
-                deadline=deadline,
+                r.graph, tau, w_ids, w_bounds, deadline=deadline,
                 token=(ticket, key, r, cand, n_db, per_q_filter),
-                on_match=self._on_match, on_done=self._on_done)
+                on_match=self._on_match, on_done=self._on_done,
+                n_lb_pruned=n_pr, n_lb_tightened=n_tt)
 
     # ---- stage: top-k escalation (runs on verifier threads) ----------------
     def _reenter(self, ticket: QueryTicket) -> None:

@@ -130,6 +130,47 @@ def test_filter_eval_reused_across_batches(flat):
     assert isinstance(ev1, BatchedFilterEval)
 
 
+# ---- stage-1.5 assignment lower bound (DESIGN.md §16) ----------------------
+
+@pytest.fixture(scope="module")
+def lb_db():
+    # label-poor on purpose: the q-gram filter admits candidates whose GED
+    # is far above tau, so the LB stage actually prunes here instead of
+    # riding along inert
+    return graphgen_db(120, num_edges=12, density=0.5, n_vlabels=3,
+                       n_elabels=2, seed=3)
+
+
+@pytest.mark.parametrize("backend,slab", [
+    ("numpy", "dense"), ("numpy", "hot"), ("numpy", "packed"),
+    ("jax", "dense"), ("pallas", "dense"),
+])
+def test_assign_lb_match_parity(lb_db, backend, slab):
+    """The recall-safety invariant: candidates AND verified matches are
+    bit-identical with the LB stage off / on / on+Hungarian — the bound
+    only moves verification work, never answers."""
+    flat = FlatMSQIndex(lb_db)
+    rng = np.random.default_rng(11)
+    reqs = [GraphQuery(perturb_graph(lb_db[int(rng.integers(0, len(lb_db)))],
+                                     2, rng, lb_db.n_vlabels,
+                                     lb_db.n_elabels), 4, verify=True)
+            for _ in range(6)]
+    base = GraphQueryEngine(flat, backend=backend, slab_layout=slab,
+                            assign_lb=False).submit(reqs)
+    for lb_hungarian in (0, 4):
+        eng = GraphQueryEngine(flat, backend=backend, slab_layout=slab,
+                               assign_lb=True, lb_hungarian=lb_hungarian)
+        out = eng.submit(reqs)
+        for a, b in zip(out, base):
+            assert a.candidates == b.candidates
+            assert a.matches == b.matches
+        if lb_hungarian == 0:
+            # the stage must actually fire on this workload, not pass
+            # vacuously
+            assert eng.stats["lb_pruned"] > 0
+            assert eng.stats["lb_pruned"] + eng.stats["verified_pairs"] > 0
+
+
 # ---- top-k modality (adaptive-τ escalation, DESIGN.md §15) -----------------
 
 try:

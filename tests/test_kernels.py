@@ -162,6 +162,104 @@ def test_qgram_filter_block_size_invariance():
 
 
 # --------------------------------------------------------------------------
+# assign_lb (stage-1.5 assignment lower bound, DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+def _assign_lb_case(rng, Q, N, vmq_raw, vm_raw):
+    """Ragged branch-feature blocks padded with the production helpers:
+    query side via pad_query_block, db side with the slab-gather fills
+    (label -1 / degree 0 / zero hists, nv pad 0)."""
+    from repro.kernels.assign_lb.ops import (N_BASE, N_CAP, VM_BASE, VM_CAP,
+                                             pad_query_block)
+
+    def feats(counts, vm):
+        v = np.full((len(counts), vm), -1, np.int32)
+        d = np.zeros((len(counts), vm), np.int32)
+        eh = np.zeros((len(counts), vm, 3), np.int32)
+        for r, c in enumerate(counts):
+            v[r, :c] = rng.integers(0, 5, c)
+            eh[r, :c] = rng.integers(0, 3, (c, 3))
+            d[r, :c] = eh[r, :c].sum(1)
+        return v, d, eh
+
+    qn = rng.integers(1, vmq_raw + 1, Q).astype(np.int32)
+    dn = rng.integers(1, vm_raw + 1, N).astype(np.int32)
+    qv, qd, qeh = feats(qn, vmq_raw)
+    dv, dd, deh = feats(dn, vm_raw)
+    qv, qd, qeh, qn = pad_query_block(qv, qd, qeh, qn)
+    npad = shape_bucket(N, N_BASE, N_CAP)
+    vmp = shape_bucket(vm_raw, VM_BASE, VM_CAP)
+    pr = npad - N
+    dv = np.pad(dv, [(0, pr), (0, vmp - vm_raw)], constant_values=-1)
+    dd = np.pad(dd, [(0, pr), (0, vmp - vm_raw)])
+    deh = np.pad(deh, [(0, pr), (0, vmp - vm_raw), (0, 0)])
+    dn = np.pad(dn, (0, pr))
+    return qv, qd, qeh, qn, dv, dd, deh, dn
+
+
+@pytest.mark.parametrize("Q,N,VMq,VM", [
+    (1, 7, 5, 9),       # everything ragged and tiny
+    (5, 130, 11, 17),   # every axis off its bucket
+    (8, 64, 8, 16),     # exactly bucket-aligned
+    (13, 97, 30, 40),   # ragged against the default tiles
+])
+def test_assign_lb_kernel_vs_ref_ragged(Q, N, VMq, VM):
+    from repro.kernels.assign_lb.ops import (assign_lb_bounds_batched,
+                                             assign_lb_np)
+    from repro.kernels.assign_lb.ref import batched_assign_lb_ref
+    rng = np.random.default_rng(Q * 1000 + N)
+    case = _assign_lb_case(rng, Q, N, VMq, VM)
+    want = assign_lb_np(*case)
+    ref = np.asarray(batched_assign_lb_ref(*[jnp.asarray(x) for x in case]))
+    got = np.asarray(assign_lb_bounds_batched(
+        *case, qb=min(8, case[0].shape[0]), bb=min(128, case[4].shape[0]),
+        interpret=True))
+    assert np.array_equal(ref, want)
+    assert np.array_equal(got, want)
+
+
+def test_assign_lb_tile_sweep():
+    """The (qb, bb) tile choice must never change a single bound — what
+    makes the assign_lb autotuner safe to run blind."""
+    from repro.kernels.assign_lb.ops import (assign_lb_bounds_batched,
+                                             assign_lb_np)
+    rng = np.random.default_rng(7)
+    case = _assign_lb_case(rng, 6, 70, 10, 14)      # pads to (8, 128)
+    want = assign_lb_np(*case)
+    for qb in (2, 4, 8):
+        for bb in (16, 32, 64, 128):
+            got = np.asarray(assign_lb_bounds_batched(
+                *case, qb=qb, bb=bb, interpret=True))
+            assert np.array_equal(got, want), (qb, bb)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_assign_lb_le_exact_ged(seed):
+    """Provability on random graph pairs: Hausdorff <= Hungarian <= the
+    exact GED (so stage-1.5 pruning can never drop a true match)."""
+    from repro.core.verify import GEDSearch
+    from repro.graphs.generators import random_graph
+    from repro.kernels.assign_lb.ops import (assign_lb_np,
+                                             graph_branch_features,
+                                             hungarian_lb_pair)
+    rng = np.random.default_rng(seed)
+    n1, n2 = (int(rng.integers(2, 7)) for _ in range(2))
+    g = random_graph(rng, n1, int(rng.integers(n1 - 1, 2 * n1)), 4, 2)
+    h = random_graph(rng, n2, int(rng.integers(n2 - 1, 2 * n2)), 4, 2)
+    ged = GEDSearch(g, h, 60).run()     # tau far above any possible GED
+    qf = graph_branch_features(g, 2)
+    hf = graph_branch_features(h, 2)
+    haus = int(assign_lb_np(
+        qf[0][None], qf[1][None], qf[2][None], np.array([g.n]),
+        hf[0][None], hf[1][None], hf[2][None], np.array([h.n]))[0, 0])
+    hung = hungarian_lb_pair(*qf, *hf)
+    assert haus <= ged
+    if hung is not None:                # scipy-gated
+        assert haus <= hung <= ged
+
+
+# --------------------------------------------------------------------------
 # bitunpack
 # --------------------------------------------------------------------------
 

@@ -429,8 +429,11 @@ def test_async_topk_equals_sync_and_never_redecides(small_db, flat):
     _assert_same(out, ref)
     s = apipe.stats
     assert s["topk_rounds"] > len(topk)       # someone actually escalated
+    # every seen pair is decided exactly once: run to completion, pruned
+    # by the kth-best cutoff, expired, or pruned by the stage-1.5
+    # assignment LB before ever entering the heap (DESIGN.md §16)
     decided = (s["verified_pairs"] + s["pruned_pairs"]
-               + s["expired_pairs"])
+               + s["expired_pairs"] + s["lb_pruned"])
     assert decided == sum(len(r.candidates) for r in out)
     if s["pruned_pairs"]:                     # kth-best cutoff engaged
         assert all([tuple(m) for m in a.matches]
