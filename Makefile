@@ -29,9 +29,10 @@ bench-throughput:
 # §16), and the SLO traffic
 # simulator on a tiny trace (both tenant mixes, open + closed loop),
 # asserting the report schema — non-empty percentiles, goodput,
-# partial-rate (DESIGN.md §15).
+# partial-rate, per-stage breakdowns (DESIGN.md §15, §17) — and the
+# span-trace artifact schema (--trace + --smoke validates it).
 bench-smoke:
 	PYTHONPATH=src python -m benchmarks.query_throughput --n 300 --q 16 \
 	    --pipeline --pipeline-workers 2
 	PYTHONPATH=src python -m benchmarks.kernels_bench --smoke-batched
-	PYTHONPATH=src python -m benchmarks.serving_slo --smoke
+	PYTHONPATH=src python -m benchmarks.serving_slo --smoke --trace

@@ -27,6 +27,10 @@ verification ON: synchronous ``submit`` vs ``AsyncGraphQueryEngine``
 asserts bit-identical results, and records overlap-efficiency — how much
 of the device filter time ran *while* verification was in flight — to
 ``artifacts/bench/query_throughput_pipeline.{csv,json}``.
+
+``--obs-overhead`` measures span-recording overhead (DESIGN.md §17):
+engine q/s with spans off vs on, identical candidates asserted, recorded
+to ``artifacts/bench/query_throughput_obs.json`` (budget: <= 2% loss).
 """
 from __future__ import annotations
 
@@ -148,6 +152,58 @@ def run(csv: Csv, n_db: int = 5000, n_queries: int = 64,
     print(f"batched engine [{engine.backend}/{slab}]: {qps_eng:.1f} q/s vs "
           f"looped {qps_loop:.1f} q/s -> {speedup:.2f}x "
           f"({slab_bits:.0f} slab bits/graph, identical candidate sets)")
+    return rec
+
+
+def run_obs_overhead(csv: Csv, n_db: int = 5000, n_queries: int = 64,
+                     backend: str = "auto", repeats: int = 5,
+                     slab: str = "dense") -> Dict:
+    """Tracing overhead: engine q/s with span recording OFF (the default
+    ``Observability``) vs ON (DESIGN.md §17), same warm + best-of-repeats
+    protocol as ``run`` and identical candidate sets asserted.  The PR
+    acceptance budget is <= 2% q/s loss with spans on."""
+    from repro.core.search import FlatMSQIndex
+    from repro.obs import Observability
+    from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+
+    db = dataset("aids", n_db)
+    flat = FlatMSQIndex(db)
+    graphs, taus = make_queries(db, n_queries)
+    reqs = [GraphQuery(g, t, verify=False) for g, t in zip(graphs, taus)]
+
+    def rate(obs):
+        eng = GraphQueryEngine(flat, backend=backend, result_cache_size=0,
+                               slab_layout=slab, obs=obs)
+        eng.submit(reqs)                     # warm: builds the slab, jits
+        best, out = np.inf, None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            o = eng.submit(reqs)
+            dt = time.perf_counter() - t0
+            if dt < best:
+                best, out = dt, o
+        return n_queries / best, out
+
+    qps_off, ref = rate(None)                # default: spans disabled
+    obs_on = Observability(spans=True)
+    qps_on, got = rate(obs_on)
+    for a, b in zip(got, ref):
+        assert a.candidates == b.candidates, "candidate sets diverged"
+
+    overhead_pct = (qps_off - qps_on) / qps_off * 100.0
+    rec = {"n_db": n_db, "n_queries": n_queries, "backend": backend,
+           "slab": slab, "qps_obs_off": qps_off, "qps_obs_on": qps_on,
+           "overhead_pct": overhead_pct,
+           "spans_recorded": len(obs_on.spans),
+           "identical_candidates": True}
+    csv.add(f"obs_off_n{n_db}_q{n_queries}", 1.0 / qps_off,
+            f"{qps_off:.1f} q/s")
+    csv.add(f"obs_on_n{n_db}_q{n_queries}", 1.0 / qps_on,
+            f"{qps_on:.1f} q/s ({overhead_pct:+.2f}%)")
+    print(f"obs overhead [{slab}]: spans on {qps_on:.1f} q/s vs off "
+          f"{qps_off:.1f} q/s -> {overhead_pct:+.2f}% "
+          f"({rec['spans_recorded']} spans recorded, identical "
+          f"candidate sets)")
     return rec
 
 
@@ -416,6 +472,10 @@ def main() -> None:
     ap.add_argument("--pipeline-workers", type=int, default=2)
     ap.add_argument("--pipeline-batch", type=int, default=0,
                     help="async batch-former size (0 = n_queries // 8)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="measure span-recording overhead: engine q/s "
+                         "with spans off vs on (DESIGN.md §17; budget "
+                         "is <= 2%% q/s loss)")
     ap.add_argument("--verified", action="store_true",
                     help="also measure verified q/s (A* verification ON) "
                          "with the stage-1.5 assignment LB off vs on "
@@ -450,6 +510,10 @@ def main() -> None:
     recs = [run(csv, n_db=args.n, n_queries=args.q, backend=args.backend,
                 slab=s, hot_d=args.hot_d) for s in slabs]
     save_json("query_throughput.json", recs[0])
+    if args.obs_overhead:
+        orec = run_obs_overhead(csv, n_db=args.n, n_queries=args.q,
+                                backend=args.backend, slab=slabs[0])
+        save_json("query_throughput_obs.json", orec)
     vrec = None
     if args.verified:
         vrec = run_verified(csv, n_db=args.n, n_queries=args.verified_q,

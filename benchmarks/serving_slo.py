@@ -12,8 +12,11 @@ each tenant's deadline SLO, and partial-result rates.
 to the repo-root ``BENCH_serving_slo.json`` trajectory (same convention
 as ``BENCH_query_throughput.json``): this is the serving harness every
 later PR gets judged by.  ``--smoke`` runs a tiny trace and asserts the
-report schema (non-empty percentiles, goodput, partial-rate) — wired
-into ``make bench-smoke``.
+report schema (non-empty percentiles, goodput, partial-rate, per-stage
+breakdown columns) — wired into ``make bench-smoke``.  ``--trace`` turns
+span recording on and writes one Chrome trace-event artifact per
+mix/mode to ``artifacts/bench/`` (DESIGN.md §17); with ``--smoke`` the
+artifact is schema-validated too.
 """
 from __future__ import annotations
 
@@ -55,19 +58,20 @@ MIXES: Dict[str, List[TenantSpec]] = {
 
 
 def make_pipe(db, *, backend: str = "numpy", workers: int = 2,
-              max_batch: int = 8):
+              max_batch: int = 8, obs=None):
     from repro.core.search import FlatMSQIndex
     from repro.serve.graph_engine import GraphQueryEngine
     from repro.serve.pipeline import AsyncGraphQueryEngine
     eng = GraphQueryEngine(FlatMSQIndex(db), backend=backend,
-                           result_cache_size=0)
+                           result_cache_size=0, obs=obs)
     return AsyncGraphQueryEngine(eng, max_batch=max_batch,
                                  max_delay_s=0.002, num_workers=workers)
 
 
 def check_report(rep: dict) -> None:
     """Schema gate (the bench-smoke assertion): percentiles present and
-    finite, goodput/partial-rate/SLO fields populated."""
+    finite, goodput/partial-rate/SLO fields populated, per-stage
+    breakdown columns present (DESIGN.md §17)."""
     for scope, b in [("overall", rep["overall"]),
                      *rep["per_tenant"].items()]:
         assert b["n"] > 0, f"{scope}: empty bucket"
@@ -76,15 +80,23 @@ def check_report(rep: dict) -> None:
                 f"{scope}.{fld} not a positive finite latency: {b[fld]}"
         for fld in ("goodput_qps", "partial_rate", "slo_miss_rate"):
             assert fld in b and b[fld] >= 0, f"{scope}.{fld} missing"
+        for fld in ("filter_ms", "lb_ms", "verify_ms", "queue_ms"):
+            assert fld in b and math.isfinite(b[fld]) and b[fld] >= 0, \
+                f"{scope}.{fld} breakdown missing/invalid: {b.get(fld)}"
         assert b["errors"] == 0, f"{scope}: {b['errors']} query errors"
 
 
 def run_mix(csv: Csv, db, mix: str, mode: str, *, backend: str,
             workers: int, duration_s: float, seed: int,
-            speed: float) -> Dict:
+            speed: float, span_trace: bool = False,
+            validate: bool = False) -> Dict:
     trace = generate_trace(MIXES[mix], len(db), mode=mode,
                            duration_s=duration_s, seed=seed)
-    pipe = make_pipe(db, backend=backend, workers=workers)
+    obs = None
+    if span_trace:
+        from repro.obs import Observability
+        obs = Observability(spans=True)
+    pipe = make_pipe(db, backend=backend, workers=workers, obs=obs)
     try:
         # warm the slab + caches so the first arrivals don't pay build
         # cost — the bench measures steady-state serving
@@ -95,6 +107,15 @@ def run_mix(csv: Csv, db, mix: str, mode: str, *, backend: str,
         pipe.close()
     rep = report.to_json()
     check_report(rep)
+    trace_path = None
+    if span_trace:
+        trace_path = art_path(f"serving_slo_{mix}_{mode}.trace.json")
+        obs.export_trace(trace_path)
+        print(f"[{mix}/{mode}] trace -> {trace_path} "
+              f"({len(obs.spans)} spans, {obs.spans.dropped} dropped)")
+        if validate:
+            from repro.obs.export import load_trace, validate_trace
+            validate_trace(load_trace(trace_path))
     o = rep["overall"]
     key = f"{mix}/{mode}"
     csv.add(f"slo_{mix}_{mode}_p99", o["p99_ms"] / 1e3,
@@ -107,7 +128,8 @@ def run_mix(csv: Csv, db, mix: str, mode: str, *, backend: str,
           f"slo_miss={o['slo_miss_rate']:.3f}")
     return {"mix": mix, "mode": mode, "seed": seed,
             "n_db": len(db), "backend": backend, "workers": workers,
-            "trace_digest": trace.digest(), **rep}
+            "trace_digest": trace.digest(), "span_trace": trace_path,
+            **rep}
 
 
 def record_trajectory(recs: List[Dict], commit: str, date: str,
@@ -123,6 +145,11 @@ def record_trajectory(recs: List[Dict], commit: str, date: str,
             "goodput_qps": r["overall"]["goodput_qps"],
             "partial_rate": r["overall"]["partial_rate"],
             "slo_miss_rate": r["overall"]["slo_miss_rate"],
+            # per-tenant stage breakdowns (DESIGN.md §17)
+            "per_tenant": {name: {
+                "filter_ms": b["filter_ms"], "lb_ms": b["lb_ms"],
+                "verify_ms": b["verify_ms"], "queue_ms": b["queue_ms"],
+            } for name, b in r["per_tenant"].items()},
         } for r in recs},
     }
     log = []
@@ -152,6 +179,10 @@ def main() -> None:
                     choices=["both", "open", "closed"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace; assert report schema only")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-query spans; write one Chrome "
+                         "trace-event artifact per mix/mode to "
+                         "artifacts/bench/ (DESIGN.md §17)")
     ap.add_argument("--record", action="store_true",
                     help=f"append SLO metrics to {BENCH_LOG}")
     ap.add_argument("--commit", default="unknown",
@@ -170,7 +201,8 @@ def main() -> None:
     modes = ["open", "closed"] if args.mode == "both" else [args.mode]
     recs = [run_mix(csv, db, mix, mode, backend=args.backend,
                     workers=args.workers, duration_s=args.duration,
-                    seed=args.seed, speed=args.speed)
+                    seed=args.seed, speed=args.speed,
+                    span_trace=args.trace, validate=args.smoke)
             for mix in mixes for mode in modes]
 
     save_json("serving_slo.json", recs)

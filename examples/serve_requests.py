@@ -15,16 +15,18 @@ from repro.configs import get_config, reduced
 from repro.core.search import MSQIndex
 from repro.graphs.generators import aids_like_db, perturb_graph
 from repro.models import build_params
+from repro.obs import Observability
 from repro.serve import (AsyncGraphQueryEngine, GraphQuery,
                          GraphQueryEngine, Request, ServeEngine,
                          as_completed)
 
 
 def main() -> None:
-    # retrieval side: molecule database + index + pipelined query engine
+    # retrieval side: molecule database + index + pipelined query engine,
+    # with per-query span recording on (DESIGN.md §17)
     db = aids_like_db(1000, seed=2)
     index = MSQIndex(db)
-    retriever = GraphQueryEngine(index)
+    retriever = GraphQueryEngine(index, obs=Observability(spans=True))
 
     # serving side: small LM
     cfg = reduced(get_config("granite-moe-1b-a400m"))
@@ -61,6 +63,13 @@ def main() -> None:
     print(f"retrieval: {retriever.stats['filter_s']:.3f}s filter for "
           f"{retriever.stats['queries']} queries "
           f"(backend={retriever.backend})")
+    # per-stage breakdown from the recorded spans (DESIGN.md §17)
+    print("stage breakdown (spans):")
+    print(f"  {'stage':<14} {'count':>6} {'total_ms':>9}")
+    for name, (count, total_s) in sorted(
+            retriever.obs.spans.aggregate().items(),
+            key=lambda kv: -kv[1][1]):
+        print(f"  {name:<14} {count:>6} {total_s * 1e3:>9.2f}")
     engine.run(requests)
     for i, r in enumerate(requests):
         print(f"req{i}: generated {r.out_tokens}")

@@ -21,6 +21,8 @@ LOCK_FILES = (
     "src/repro/core/device_cache.py",
     "src/repro/train/checkpoint.py",
     "src/repro/data/pipeline.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/spans.py",
 )
 
 JAX_FILES = (

@@ -40,10 +40,13 @@ what lets that engine run tree-backed (``MSQIndex``) or flat
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
+
+from repro.obs import current_obs, device_annotation
 
 from repro.core import arrays, filters
 from repro.core.arrays import DBArrays, QueryArrays
@@ -100,6 +103,10 @@ class CandidateBatch:
     ids: List[List[int]]
     bounds: List[Optional[np.ndarray]]     # aligned with ids; None for trees
     lbs: Optional[List[Optional[np.ndarray]]] = None
+    # per-query share of the assignment-LB wall time (seconds), for the
+    # serving engine's stage breakdown (DESIGN.md §17); None when the
+    # stage is off
+    lb_s: Optional[List[float]] = None
 
 
 def bucket_queries(partition: RegionPartition, graphs: Sequence[Graph],
@@ -583,11 +590,12 @@ class BatchedFilterEval:
         p = self.partition
         sc = ops.make_scalars_batch(qs, p.x0, p.y0, p.l)
         qb_t, bb_t, bu_t = self.tile_table.lookup(Q, np_, fd_dev.shape[1])
-        b, _ = ops.fused_filter_bounds_batched(
-            jnp.asarray(sc), fd_dev, jnp.asarray(qb.fd),
-            vhist_d, jnp.asarray(qb.vhist), ehist_d, jnp.asarray(qb.ehist),
-            degseq_d, jnp.asarray(qb.sigma), aux_d, cdt,
-            qb=qb_t, bb=bb_t, bu=bu_t)
+        with device_annotation("msq.qgram_filter.pallas"):
+            b, _ = ops.fused_filter_bounds_batched(
+                jnp.asarray(sc), fd_dev, jnp.asarray(qb.fd),
+                vhist_d, jnp.asarray(qb.vhist), ehist_d, jnp.asarray(qb.ehist),
+                degseq_d, jnp.asarray(qb.sigma), aux_d, cdt,
+                qb=qb_t, bb=bb_t, bu=bu_t)
         return np.asarray(b)[:Q, :N]
 
     # ---- the distributed per-bucket step ----------------------------------
@@ -699,12 +707,20 @@ def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
     sharded), one filter pass per bucket, per-query candidate lists, then
     (when ``ev.assign_lb``) the stage-1.5 assignment LB pass over each
     bucket's surviving candidates (DESIGN.md §16)."""
+    obs = current_obs()
+    spans_on = obs is not None and obs.spans.enabled
     Qn = len(graphs)
     ids: List[List[int]] = [[] for _ in range(Qn)]
     bnds: List[Optional[np.ndarray]] = [None] * Qn
     lbs: Optional[List[Optional[np.ndarray]]] = \
         [None] * Qn if ev.assign_lb else None
-    for rect, qis in bucket_queries(ev.partition, graphs, taus).items():
+    lb_s: Optional[List[float]] = [0.0] * Qn if ev.assign_lb else None
+    t_b = time.perf_counter() if spans_on else 0.0
+    buckets = bucket_queries(ev.partition, graphs, taus)
+    if spans_on:
+        obs.spans.record("bucket", t_b, time.perf_counter(),
+                         n_queries=Qn, n_buckets=len(buckets))
+    for rect, qis in buckets.items():
         idx = ev.graphs_in_rect(rect)
         if len(idx) == 0:
             for qi in qis:
@@ -716,13 +732,25 @@ def batched_flat_candidates(ev: BatchedFilterEval, graphs: Sequence[Graph],
         qs = [ev.query_arrays(graphs[qi], int(taus[qi]),
                               None if qtuples is None else qtuples[qi])
               for qi in qis]
+        t_f = time.perf_counter() if spans_on else 0.0
         cands = ev.bucket_candidates(idx, qs, [int(taus[qi]) for qi in qis])
+        if spans_on:
+            obs.spans.record("filter_bucket", t_f, time.perf_counter(),
+                             n_queries=len(qis), n_graphs=int(len(idx)),
+                             backend=ev.backend)
         for row, qi in enumerate(qis):
             ids[qi], bnds[qi] = cands[row]
         if lbs is not None:
+            t0 = time.perf_counter()
             blbs = ev.bucket_assign_lbs([graphs[qi] for qi in qis],
                                         [cands[row][0]
                                          for row in range(len(qis))])
+            t1 = time.perf_counter()
+            if spans_on:
+                obs.spans.record("assign_lb", t0, t1, n_queries=len(qis),
+                                 n_pairs=sum(len(c[0]) for c in cands))
+            share = (t1 - t0) / len(qis)
             for row, qi in enumerate(qis):
                 lbs[qi] = blbs[row]
-    return CandidateBatch(ids=ids, bounds=bnds, lbs=lbs)
+                lb_s[qi] = share
+    return CandidateBatch(ids=ids, bounds=bnds, lbs=lbs, lb_s=lb_s)

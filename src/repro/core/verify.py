@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import time
 from collections import Counter
 from typing import Dict, List, Optional, Tuple
@@ -274,17 +275,23 @@ class GEDSearch:
 
 
 def run_search_slice(search: GEDSearch, max_expansions: Optional[int],
-                     deadline: Optional[float]
-                     ) -> Tuple[Optional[int], GEDSearch]:
+                     deadline: Optional[float], want_span: bool = False):
     """One worker-side A* timeslice: run the (picklable) search and send
     it back with its decision — the ``VerifyScheduler`` process-pool
     executor's unit of work (DESIGN.md §12).  The returned search carries
     the advanced frontier, so an undecided slice resumes exactly like the
     in-process path.  ``deadline`` stays comparable across processes
     because ``time.perf_counter`` is CLOCK_MONOTONIC (system-wide) on the
-    Linux hosts the pool runs on."""
+    Linux hosts the pool runs on — which is also what lets the
+    ``want_span`` timing fragment ``(t0, t1, pid)`` land on the host
+    span timeline (DESIGN.md §17) without clock translation."""
+    if not want_span:
+        d = search.run(max_expansions=max_expansions, deadline=deadline)
+        return d, search
+    t0 = time.perf_counter()
     d = search.run(max_expansions=max_expansions, deadline=deadline)
-    return d, search
+    t1 = time.perf_counter()
+    return d, search, (t0, t1, os.getpid())
 
 
 def ged_upto(g: Graph, h: Graph, tau: int, *,

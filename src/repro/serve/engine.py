@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.models import decode_step, forward, init_cache
 from repro.models.config import ModelConfig
+from repro.obs import Observability, StatsView
 
 
 @dataclass
@@ -29,15 +30,20 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
         self.max_len = max_len
         self._decode = jax.jit(
             lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
-        self.stats: Dict[str, float] = {"prefill_s": 0.0, "decode_s": 0.0,
-                                        "tokens": 0}
+        # same registry idiom as the graph engines (DESIGN.md §17): the
+        # legacy dict becomes a live view over ``obs.metrics``, keys and
+        # ``+=`` semantics unchanged
+        self.obs = obs if obs is not None else Observability(spans=False)
+        self.stats: StatsView = self.obs.metrics.view(
+            "lm", initial={"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0})
 
     def _prefill_one(self, cache, slot: int, prompt: np.ndarray):
         """Prefill by stepping tokens through the decode path for this slot.

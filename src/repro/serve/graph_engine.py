@@ -47,6 +47,7 @@ from repro.core.search import QueryResult
 from repro.core.tree import QueryTuple
 from repro.core.verify import GEDSearch
 from repro.graphs.graph import Graph
+from repro.obs import MetricsRegistry, Observability, StatsView, use_obs
 
 
 @dataclass
@@ -122,10 +123,11 @@ class VerifyJob:
 
     __slots__ = ("graph", "tau", "deadline", "remaining", "matches",
                  "verify_s", "unverified", "pruned", "should_skip",
-                 "on_match", "on_done", "token")
+                 "on_match", "on_done", "token", "qid", "t_enq")
 
     def __init__(self, graph: Graph, tau: int, deadline: Optional[float],
-                 token=None, on_match=None, on_done=None, should_skip=None):
+                 token=None, on_match=None, on_done=None, should_skip=None,
+                 qid: Optional[int] = None):
         self.graph = graph
         self.tau = int(tau)
         self.deadline = deadline
@@ -138,6 +140,8 @@ class VerifyJob:
         self.on_match = on_match
         self.on_done = on_done
         self.token = token
+        self.qid = qid                  # engine query id (span correlation)
+        self.t_enq = time.perf_counter()
 
 
 class TopKState:
@@ -161,7 +165,7 @@ class TopKState:
     confirmed ``(ged, gid)`` can never enter the answer set."""
 
     __slots__ = ("k", "cap", "tau", "deadline", "rounds", "seen",
-                 "confirmed", "filter_s", "verify_s", "unverified",
+                 "confirmed", "filter_s", "lb_s", "verify_s", "unverified",
                  "pruned", "deadline_hit", "_lock")
 
     def __init__(self, k: int, cap: int, deadline: Optional[float] = None):
@@ -173,6 +177,7 @@ class TopKState:
         self.seen: set = set()          # gids ever submitted to the worklist
         self.confirmed: Dict[int, int] = {}     # guarded_by: self._lock
         self.filter_s = 0.0
+        self.lb_s = 0.0
         self.verify_s = 0.0
         self.unverified = 0
         self.pruned = 0
@@ -266,13 +271,26 @@ class VerifyScheduler:
     not touch it.
     """
 
+    # every counter pre-initialized (no conditional ``.get`` defaults in
+    # the hot loop, and snapshot keys are stable for the engine's fold)
+    STAT_KEYS = ("verified_pairs", "expired_pairs", "resumed_runs",
+                 "lb_pruned", "lb_tightened", "pruned_pairs",
+                 "pool_fallbacks", "error_pairs")
+
     def __init__(self, db, slice_expansions: Optional[int] = None,
                  interval_sink: Optional[List[Tuple[float, float]]] = None,
-                 executor: str = "inline", workers: int = 1):
+                 executor: str = "inline", workers: int = 1,
+                 obs: Optional[Observability] = None):
         if executor not in ("inline", "thread", "process"):
             raise ValueError(f"unknown executor {executor!r} "
                              "(inline | thread | process)")
         self.db = db
+        # spans go to the owning engine's ring; counters live in this
+        # scheduler's own registry (sync paths spin up one scheduler per
+        # submit and fold its snapshot into the engine — a shared
+        # registry would double-count across those folds)
+        self.obs = obs
+        self.metrics = MetricsRegistry()
         # <= 0 means unbudgeted: a zero-pop slice would make GEDSearch.run
         # return undecided with no progress and the re-push loop livelock
         self.slice_expansions = (int(slice_expansions)
@@ -294,15 +312,17 @@ class VerifyScheduler:
         self._inflight = 0          # guarded_by: self._cv
         self._closed = False        # guarded_by: self._cv
         self._interval_sink = interval_sink
-        self.stats: Dict[str, int] = {          # guarded_by: self._cv
-            "verified_pairs": 0, "expired_pairs": 0, "resumed_runs": 0,
-            "lb_pruned": 0, "lb_tightened": 0}
+        # a registry view, not a dict (DESIGN.md §17): same keys and
+        # mutation idiom, but snapshot/merge-able with every other
+        # component.  Mutations stay under self._cv as before — the view
+        # only adds the registry's own lock per access.
+        self.stats: StatsView = self.metrics.view(
+            "sched", initial={k: 0 for k in self.STAT_KEYS})
 
     def stats_snapshot(self) -> Dict[str, int]:
         """Consistent copy of the worklist counters (readers must not
         iterate ``stats`` while a verifier thread is publishing)."""
-        with self._cv:
-            return dict(self.stats)
+        return self.stats.snapshot()
 
     # ---- producer side -----------------------------------------------------
     def add_job(self, graph: Graph, tau: int, ids: Sequence[int],
@@ -310,7 +330,8 @@ class VerifyScheduler:
                 token=None, on_match: Optional[Callable] = None,
                 on_done: Optional[Callable] = None,
                 should_skip: Optional[Callable] = None,
-                n_lb_pruned: int = 0, n_lb_tightened: int = 0) -> VerifyJob:
+                n_lb_pruned: int = 0, n_lb_tightened: int = 0,
+                qid: Optional[int] = None) -> VerifyJob:
         """Enqueue one query's candidate pairs (cheapest bound first is
         the heap's job).  ``on_done`` fires exactly once, on the thread
         that retires the query's last pair (immediately, on the calling
@@ -329,7 +350,7 @@ class VerifyScheduler:
                 self.stats["lb_tightened"] += int(n_lb_tightened)
         job = VerifyJob(graph, tau, deadline, token=token,
                         on_match=on_match, on_done=on_done,
-                        should_skip=should_skip)
+                        should_skip=should_skip, qid=qid)
         job.remaining = len(ids)
         if not ids:
             if on_done is not None:
@@ -420,34 +441,49 @@ class VerifyScheduler:
                 return
             self._run_item(item)
 
-    def _execute(self, search: GEDSearch, deadline):
+    def _execute(self, search: GEDSearch, deadline,
+                 qid: Optional[int] = None):
         """One A* slice, in-process or on the pool.  Returns the decision
         (or None) plus the search holding the advanced frontier — the
         pool round-trips the search object, so resume works identically
-        either way."""
+        either way.  With spans enabled, the pool also round-trips a
+        worker-side ``(t0, t1, pid)`` fragment with the pickled search
+        (``perf_counter`` is system-wide monotonic on these hosts), so
+        the A* compute interval lands on the trace inside the host-side
+        dispatch span."""
         pool = self._pool
+        want_span = self.obs is not None and self.obs.spans.enabled
         if pool is not None:
             from concurrent.futures.process import BrokenProcessPool
             from repro.core.verify import run_search_slice
             fut = None
             try:
                 fut = pool.submit(run_search_slice, search,
-                                  self.slice_expansions, deadline)
+                                  self.slice_expansions, deadline,
+                                  want_span)
             except (OSError, RuntimeError):
                 pass        # shut-down / unspawnable pool: dispatch failed
             if fut is not None:
                 try:
-                    return fut.result()
+                    out = fut.result()
                 except BrokenProcessPool:
-                    pass    # worker died mid-slice; state is untouched
+                    out = None   # worker died mid-slice; state untouched
                 # any other exception came from the A* slice itself and
                 # re-raises unchanged — _run_item counts it once as an
                 # error pair, with no duplicate in-process run
+                if out is not None:
+                    if len(out) == 3:
+                        d, search, frag = out
+                        if want_span and frag is not None:
+                            self.obs.spans.record(
+                                "astar_slice", frag[0], frag[1], qid=qid,
+                                tid=f"ged-pool-{frag[2]}")
+                        return d, search
+                    return out
             # a dead pool degrades to in-process slices (slower, never
             # wrong): results must not depend on the pool's health
             with self._cv:
-                self.stats["pool_fallbacks"] = self.stats.get(
-                    "pool_fallbacks", 0) + 1
+                self.stats["pool_fallbacks"] += 1
         return (search.run(max_expansions=self.slice_expansions,
                            deadline=deadline), search)
 
@@ -473,8 +509,7 @@ class VerifyScheduler:
                     and job.should_skip(int(gid), int(bound)):
                 with self._cv:
                     job.pruned += 1
-                    self.stats["pruned_pairs"] = self.stats.get(
-                        "pruned_pairs", 0) + 1
+                    self.stats["pruned_pairs"] += 1
                 return
             if search is None:
                 # the heap bound is a provable GED lower bound (filter
@@ -486,8 +521,18 @@ class VerifyScheduler:
             else:
                 with self._cv:
                     self.stats["resumed_runs"] += 1
-            d, search = self._execute(search, job.deadline)
+            exp0 = search.expansions
+            d, search = self._execute(search, job.deadline, qid=job.qid)
             t1 = time.perf_counter()
+            obs = self.obs
+            if obs is not None and obs.spans.enabled:
+                # per-slice verify span: which pair, at what seed bound,
+                # how much A* it burned, and whether it decided (§17)
+                obs.spans.record(
+                    "verify", t0, t1, qid=job.qid, gid=int(gid),
+                    bound=int(bound), expansions=search.expansions - exp0,
+                    decided=d is not None)
+            self.metrics.observe("sched.verify_slice_s", t1 - t0)
             with self._cv:
                 job.verify_s += t1 - t0
                 if self._interval_sink is not None:
@@ -515,8 +560,7 @@ class VerifyScheduler:
         except Exception:               # noqa: BLE001 — stage containment
             with self._cv:
                 job.unverified += 1
-                self.stats["error_pairs"] = self.stats.get(
-                    "error_pairs", 0) + 1
+                self.stats["error_pairs"] += 1
         finally:
             if finish:
                 self._finish_one(job)
@@ -525,6 +569,12 @@ class VerifyScheduler:
         with self._cv:
             job.remaining -= 1
             done = job.remaining == 0
+        if done and self.obs is not None and self.obs.spans.enabled:
+            # the query's whole worklist residency: enqueue -> last pair
+            self.obs.spans.record(
+                "worklist", job.t_enq, time.perf_counter(), qid=job.qid,
+                matches=len(job.matches), unverified=job.unverified,
+                pruned=job.pruned)
         if done and job.on_done is not None:
             try:
                 job.on_done(job)
@@ -543,7 +593,7 @@ class GraphQueryEngine:
                  hot_d: Optional[int] = None,
                  hot_mass: Optional[float] = None, tile_table=None,
                  assign_lb: bool = True, lb_hungarian: int = 0,
-                 lb_tile_table=None):
+                 lb_tile_table=None, obs: Optional[Observability] = None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
         self.slab_layout = slab_layout
@@ -561,18 +611,27 @@ class GraphQueryEngine:
         self.lb_tile_table = lb_tile_table
         self._enc_cache = _LRU(encoding_cache_size)
         self._res_cache = _LRU(result_cache_size)
-        self.stats: Dict[str, float] = {
+        # every engine carries an Observability (DESIGN.md §17): the
+        # registry backs the ``stats`` view below; span recording stays
+        # off unless the caller opts in (the ≤2% overhead budget)
+        self.obs = obs if obs is not None else Observability(spans=False)
+        self._qid = itertools.count()   # per-engine query ids for spans
+        self.stats: StatsView = self.obs.metrics.view("engine", initial={
             "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
-            "verified_pairs": 0, "expired_pairs": 0, "pruned_pairs": 0,
-            "lb_pruned": 0, "lb_tightened": 0,
-            "cache_hits": 0, "topk_rounds": 0}
+            "lb_s": 0.0, "verified_pairs": 0, "expired_pairs": 0,
+            "pruned_pairs": 0, "lb_pruned": 0, "lb_tightened": 0,
+            "resumed_runs": 0, "pool_fallbacks": 0, "error_pairs": 0,
+            "cache_hits": 0, "topk_rounds": 0})
 
     # ---- encoding cache ----------------------------------------------------
     def _qtuple(self, g: Graph) -> Tuple[bytes, QueryTuple]:
         key = _graph_key(g)
         qt = self._enc_cache.get(key)
         if qt is None:
+            t0 = time.perf_counter()
             qt = QueryTuple.from_graph(g, self.source.vocab)
+            if self.obs.spans.enabled:
+                self.obs.spans.record("encode", t0, time.perf_counter())
             self._enc_cache.put(key, qt)
         return key, qt
 
@@ -602,16 +661,21 @@ class GraphQueryEngine:
     def _admit(self, requests: Sequence[GraphQuery]):
         """Stage 0: result-cache replay + in-batch duplicate coalescing.
 
-        Returns (results, fresh, aliases, keys, qtuples); ``results`` has
-        cache hits already resolved — tagged ``cache_hit`` with the stale
-        per-query timings zeroed, so replayed stats are never mistaken
-        for fresh filter/verify work."""
+        Returns (results, fresh, aliases, keys, qtuples, qids);
+        ``results`` has cache hits already resolved — tagged
+        ``cache_hit`` with the stale per-query timings (filter, verify,
+        lb, queue) zeroed, so replayed stats are never mistaken for
+        fresh filter/verify work.  ``qids`` are the engine-assigned
+        query ids correlating this batch's spans."""
+        t_adm = time.perf_counter()
         results: List[Optional[QueryResult]] = [None] * len(requests)
         fresh: List[int] = []
         aliases: List[Tuple[int, int]] = []      # (request idx, source idx)
         pending: Dict[Tuple, int] = {}
         keys: List[Optional[bytes]] = [None] * len(requests)
         qtuples: List[Optional[QueryTuple]] = [None] * len(requests)
+        qids: List[int] = [next(self._qid) for _ in requests]
+        spans_on = self.obs.spans.enabled
         for i, r in enumerate(requests):
             key, qt = self._qtuple(r.graph)
             # the cache key carries the full query modality: a range-τ
@@ -626,7 +690,12 @@ class GraphQueryEngine:
                 self.stats["cache_hits"] += 1
                 results[i] = replace(
                     hit, filter_time_s=0.0, verify_time_s=0.0,
-                    stats={**hit.stats, "cache_hit": 1})
+                    stats={**hit.stats, "cache_hit": 1,
+                           "lb_s": 0.0, "queue_s": 0.0})
+                if spans_on:
+                    now = time.perf_counter()
+                    self.obs.spans.record("query", t_adm, now,
+                                          qid=qids[i], cache_hit=1)
                 continue
             # in-batch coalescing must also match on the deadline: a
             # deadline-free duplicate aliased to a deadline-carrying one
@@ -639,7 +708,10 @@ class GraphQueryEngine:
                 fresh.append(i)
                 keys[i] = key
                 qtuples[i] = qt
-        return results, fresh, aliases, keys, qtuples
+        if spans_on:
+            self.obs.spans.record("admission", t_adm, time.perf_counter(),
+                                  n=len(requests), fresh=len(fresh))
+        return results, fresh, aliases, keys, qtuples, qids
 
     def _cache_result(self, key: bytes, request: GraphQuery,
                       res: QueryResult) -> None:
@@ -660,6 +732,13 @@ class GraphQueryEngine:
         computed none (tree sources, ``assign_lb=False``)."""
         lbs = getattr(batch, "lbs", None)
         return None if lbs is None else lbs[row]
+
+    @staticmethod
+    def _job_lb_share(batch, row: int) -> float:
+        """The row's share of the batch's assignment-LB pass time, in
+        seconds (0.0 for sources that don't report it)."""
+        lb_s = getattr(batch, "lb_s", None)
+        return 0.0 if lb_s is None else float(lb_s[row])
 
     @staticmethod
     def _merge_lb(ids: Sequence[int], bounds: Sequence[int],
@@ -689,8 +768,8 @@ class GraphQueryEngine:
 
     @staticmethod
     def _assemble(cand: List[int], job: Optional[VerifyJob], n_db: int,
-                  per_q_filter: float) -> QueryResult:
-        stats: Dict[str, int] = {"batched": 1}
+                  per_q_filter: float, lb_s: float = 0.0) -> QueryResult:
+        stats: Dict[str, int] = {"batched": 1, "lb_s": lb_s}
         matches: List[Tuple[int, int]] = []
         verify_s = 0.0
         if job is not None:
@@ -712,8 +791,9 @@ class GraphQueryEngine:
         truncated, the recall-safety analog of the range path)."""
         matches = st.topk_matches()
         stats: Dict[str, int] = {
-            "batched": 1, "top_k": st.k, "topk_rounds": st.rounds,
-            "topk_tau_final": st.tau, "topk_pruned": st.pruned}
+            "batched": 1, "lb_s": st.lb_s, "top_k": st.k,
+            "topk_rounds": st.rounds, "topk_tau_final": st.tau,
+            "topk_pruned": st.pruned}
         if len(matches) < st.k:
             stats["topk_exhausted"] = 1   # fewer than k graphs within cap
         if st.unverified or st.deadline_hit:
@@ -727,16 +807,27 @@ class GraphQueryEngine:
             filter_time_s=st.filter_s, verify_time_s=st.verify_s,
             stats=stats)
 
+    def _fold_scheduler_stats(self, sched: VerifyScheduler) -> None:
+        """Fold a drained scheduler's counters into the engine registry —
+        the one merge path shared by the sync range and sync top-k drains
+        (the async pipeline keeps a live scheduler and merges at its
+        ``stats`` property instead)."""
+        ss = sched.stats_snapshot()
+        for k in VerifyScheduler.STAT_KEYS:
+            self.stats[k] += ss[k]
+
     def _submit_topk(self, requests: Sequence[GraphQuery],
-                     fresh: List[int], keys, qtuples, results) -> None:
+                     fresh: List[int], keys, qtuples, results,
+                     qids: Sequence[int], t_sub: float) -> None:
         """The sync adaptive-τ escalation loop (DESIGN.md §15): per round,
         one joint filter pass over every still-active top-k query at its
         own round τ, then the shared cheapest-first worklist drains the
         *new* pairs (decided gids are never resubmitted).  Escalation
         stops per query when its kth-best confirmed distance is covered
         by the round τ, the cap is reached, or its deadline fires."""
-        sched = VerifyScheduler(self.source.db)
+        sched = VerifyScheduler(self.source.db, obs=self.obs)
         now = time.perf_counter()
+        spans_on = self.obs.spans.enabled
         states: Dict[int, TopKState] = {}
         for i in fresh:
             r = requests[i]
@@ -749,10 +840,14 @@ class GraphQueryEngine:
             graphs = [requests[i].graph for i in active]
             taus = [states[i].tau for i in active]
             t0 = time.perf_counter()
-            batch = self._batched_candidates(graphs, taus,
-                                             [qtuples[i] for i in active])
+            with use_obs(self.obs):
+                batch = self._batched_candidates(
+                    graphs, taus, [qtuples[i] for i in active])
             t1 = time.perf_counter()
             self.stats["filter_s"] += t1 - t0
+            if spans_on:
+                self.obs.spans.record("filter", t0, t1, rows=len(active),
+                                      backend=self.backend)
             share = (t1 - t0) / len(active)
             jobs: Dict[int, VerifyJob] = {}
             for row, i in enumerate(active):
@@ -760,6 +855,9 @@ class GraphQueryEngine:
                 st.rounds += 1
                 self.stats["topk_rounds"] += 1
                 st.filter_s += share
+                lb_share = self._job_lb_share(batch, row)
+                st.lb_s += lb_share
+                self.stats["lb_s"] += lb_share
                 bounds = self._job_bounds(batch, row)
                 lbs = self._job_lbs(batch, row)
                 keep = [c for c, g in enumerate(batch.ids[row])
@@ -778,14 +876,18 @@ class GraphQueryEngine:
                     deadline=st.deadline,
                     on_match=lambda job, g, d, s=st: s.record_match(g, d),
                     should_skip=st.should_skip,
-                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt, qid=qids[i])
             sched.run_until_idle()   # the one-worker special case
             still: List[int] = []
             for i in active:
                 st = states[i]
                 st.absorb_round(jobs[i])
-                expired = (st.deadline is not None
-                           and time.perf_counter() >= st.deadline)
+                now = time.perf_counter()
+                if spans_on:
+                    self.obs.spans.record("topk_round", t0, now,
+                                          qid=qids[i], tau=st.tau,
+                                          round=st.rounds)
+                expired = st.deadline is not None and now >= st.deadline
                 if st.unverified or expired:
                     st.deadline_hit = True
                 if st.deadline_hit or st.satisfied():
@@ -793,24 +895,27 @@ class GraphQueryEngine:
                     results[i] = res
                     if not (st.unverified or st.deadline_hit):
                         self._cache_result(keys[i], requests[i], res)
+                    if spans_on:
+                        self.obs.spans.record(
+                            "query", t_sub, time.perf_counter(),
+                            qid=qids[i], top_k=st.k,
+                            partial=int(bool(res.stats.get("partial"))))
                 else:
                     st.escalate()
                     still.append(i)
             active = still
-        ss = sched.stats_snapshot()
         self.stats["verify_s"] += sum(s.verify_s for s in states.values())
-        self.stats["verified_pairs"] += ss["verified_pairs"]
-        self.stats["expired_pairs"] += ss["expired_pairs"]
-        self.stats["pruned_pairs"] += ss.get("pruned_pairs", 0)
-        self.stats["lb_pruned"] += ss["lb_pruned"]
-        self.stats["lb_tightened"] += ss["lb_tightened"]
+        self._fold_scheduler_stats(sched)
 
     # ---- the batched path --------------------------------------------------
     def submit(self, requests: Sequence[GraphQuery]) -> List[QueryResult]:
         """Answer a batch; results align with ``requests`` order."""
+        t_sub = time.perf_counter()
+        spans_on = self.obs.spans.enabled
         self.stats["batches"] += 1
         self.stats["queries"] += len(requests)
-        results, all_fresh, aliases, keys, qtuples = self._admit(requests)
+        results, all_fresh, aliases, keys, qtuples, qids = \
+            self._admit(requests)
         fresh = [i for i in all_fresh if requests[i].top_k is None]
         fresh_topk = [i for i in all_fresh if requests[i].top_k is not None]
         if fresh:
@@ -819,13 +924,17 @@ class GraphQueryEngine:
 
             # stages 1-3: bucket, shard the slab, filter (source-specific)
             t0 = time.perf_counter()
-            batch = self._batched_candidates(graphs, taus,
-                                             [qtuples[i] for i in fresh])
+            with use_obs(self.obs):
+                batch = self._batched_candidates(
+                    graphs, taus, [qtuples[i] for i in fresh])
             t1 = time.perf_counter()
             self.stats["filter_s"] += t1 - t0
+            if spans_on:
+                self.obs.spans.record("filter", t0, t1, rows=len(fresh),
+                                      backend=self.backend)
 
             # stage 4: shared verification worklist, cheapest pair first
-            sched = VerifyScheduler(self.source.db)
+            sched = VerifyScheduler(self.source.db, obs=self.obs)
             now = time.perf_counter()
             jobs: Dict[int, VerifyJob] = {}
             for row, i in enumerate(fresh):
@@ -839,26 +948,32 @@ class GraphQueryEngine:
                     self._job_lbs(batch, row), taus[row])
                 jobs[row] = sched.add_job(
                     r.graph, taus[row], w_ids, w_bounds, deadline=deadline,
-                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt, qid=qids[i])
             sched.run_until_idle()   # the one-worker special case
             self.stats["verify_s"] += sum(j.verify_s for j in jobs.values())
-            self.stats["verified_pairs"] += sched.stats["verified_pairs"]
-            self.stats["expired_pairs"] += sched.stats["expired_pairs"]
-            self.stats["lb_pruned"] += sched.stats["lb_pruned"]
-            self.stats["lb_tightened"] += sched.stats["lb_tightened"]
+            self._fold_scheduler_stats(sched)
 
             n_db = len(self.source.db)
             per_q_filter = (t1 - t0) / max(len(fresh), 1)
             for row, i in enumerate(fresh):
                 job = jobs.get(row)
-                res = self._assemble(batch.ids[row], job, n_db, per_q_filter)
+                lb_share = self._job_lb_share(batch, row)
+                self.stats["lb_s"] += lb_share
+                res = self._assemble(batch.ids[row], job, n_db,
+                                     per_q_filter, lb_s=lb_share)
                 results[i] = res
                 # deadline-partial results are never cached: a later query
                 # without the deadline must not replay incomplete matches
                 if job is None or not job.unverified:
                     self._cache_result(keys[i], requests[i], res)
+                if spans_on:
+                    self.obs.spans.record(
+                        "query", t_sub, time.perf_counter(), qid=qids[i],
+                        tau=taus[row],
+                        partial=int(bool(res.stats.get("partial"))))
         if fresh_topk:
-            self._submit_topk(requests, fresh_topk, keys, qtuples, results)
+            self._submit_topk(requests, fresh_topk, keys, qtuples, results,
+                              qids, t_sub)
         # resolve from results, not the cache: small caches may already
         # have evicted the entry by the time the batch finishes
         for i, src in aliases:

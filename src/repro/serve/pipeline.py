@@ -33,6 +33,7 @@ from collections import deque
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.search import QueryResult
+from repro.obs import use_obs
 from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
                                       TopKState, VerifyScheduler)
 
@@ -55,6 +56,14 @@ class QueryTicket:
         self._resolved = False            # guarded_by: self._lock
         self._callbacks: List = []        # guarded_by: self._lock
         self._streamed_live = False
+        # observability context (engine-internal, DESIGN.md §17):
+        # _t_submit pins the root query span's start, _t_enq the current
+        # batch-former entry (reset on top-k re-entry), _queue_s the
+        # accumulated former wait across rounds, _qid the engine query id
+        self._t_submit: Optional[float] = None
+        self._t_enq: Optional[float] = None
+        self._queue_s = 0.0
+        self._qid: Optional[int] = None
         # top-k escalation context (engine-internal, DESIGN.md §15): the
         # ticket re-enters the batch former once per widened-τ round, so
         # its state/encoding ride along instead of being recomputed
@@ -200,6 +209,7 @@ class AsyncGraphQueryEngine:
         self.default_deadline_s = default_deadline_s
         self.filter_intervals: List[Tuple[float, float]] = []
         self.verify_intervals: List[Tuple[float, float]] = []
+        self.obs = engine.obs           # one ring/registry per pipeline
         self.scheduler = VerifyScheduler(
             engine.source.db, slice_expansions=slice_expansions,
             interval_sink=self.verify_intervals if record_intervals else None,
@@ -207,7 +217,7 @@ class AsyncGraphQueryEngine:
             # scheduler's own validation instead of silently degrading
             executor={"thread": "inline"}.get(verify_executor,
                                               verify_executor),
-            workers=num_workers)
+            workers=num_workers, obs=engine.obs)
         self._record_intervals = record_intervals
         self._cv = threading.Condition()
         self._inbox: "deque[Tuple[float, QueryTicket]]" = \
@@ -238,6 +248,7 @@ class AsyncGraphQueryEngine:
             if self._closing:
                 raise RuntimeError("AsyncGraphQueryEngine is closed")
             for t in tickets:
+                t._t_submit = t._t_enq = now
                 self._inbox.append((now, t))
             self._outstanding += len(tickets)
             self._cv.notify_all()
@@ -336,6 +347,17 @@ class AsyncGraphQueryEngine:
 
     def _process_batch(self, tickets: List[QueryTicket]) -> None:
         eng = self.engine
+        spans_on = eng.obs.spans.enabled
+        # batch-former wait becomes a visible queue span (DESIGN.md §17):
+        # submission (or top-k re-entry) -> this batch picking the ticket
+        t_formed = time.perf_counter()
+        for t in tickets:
+            if t._t_enq is not None:
+                t._queue_s += t_formed - t._t_enq
+                if spans_on and t._qid is not None:   # top-k re-entry
+                    eng.obs.spans.record("queue", t._t_enq, t_formed,
+                                         qid=t._qid)
+                t._t_enq = None
         # a re-entered top-k ticket is already admitted (cache checked,
         # encoding cached, state attached): it only needs its next filter
         # round at the widened τ, batched with fresh arrivals
@@ -350,7 +372,14 @@ class AsyncGraphQueryEngine:
             eng.stats["queries"] += len(new)
         if new:
             requests = [t.request for t in new]
-            results, fresh, aliases, keys, qtuples = eng._admit(requests)
+            results, fresh, aliases, keys, qtuples, qids = \
+                eng._admit(requests)
+            for i, t in enumerate(new):
+                t._qid = qids[i]
+            if spans_on:
+                for t in new:
+                    eng.obs.spans.record("queue", t._t_submit, t_formed,
+                                         qid=t._qid)
             # cache hits resolve immediately — no pipeline latency at all
             for i, res in enumerate(results):
                 if res is not None:
@@ -387,11 +416,15 @@ class AsyncGraphQueryEngine:
         graphs = [r.graph for _, r, _, _, _, _ in rows]
         taus = [tau for _, _, tau, _, _, _ in rows]
         t0 = time.perf_counter()
-        batch = eng._batched_candidates(graphs, taus,
-                                        [qt for _, _, _, qt, _, _ in rows])
+        with use_obs(eng.obs):
+            batch = eng._batched_candidates(
+                graphs, taus, [qt for _, _, _, qt, _, _ in rows])
         t1 = time.perf_counter()
         with self._cv:
             eng.stats["filter_s"] += t1 - t0
+        if spans_on:
+            eng.obs.spans.record("filter", t0, t1, rows=len(rows),
+                                 backend=eng.backend)
         if self._record_intervals:
             self.filter_intervals.append((t0, t1))
 
@@ -400,9 +433,13 @@ class AsyncGraphQueryEngine:
         now = time.perf_counter()
         for row, (ticket, r, tau, _qt, key, st) in enumerate(rows):
             cand = batch.ids[row]
+            lb_share = eng._job_lb_share(batch, row)
+            with self._cv:
+                eng.stats["lb_s"] += lb_share
             if st is not None:
                 st.rounds += 1
                 st.filter_s += per_q_filter
+                st.lb_s += lb_share
                 with self._cv:
                     eng.stats["topk_rounds"] += 1
                 bounds = eng._job_bounds(batch, row)
@@ -425,10 +462,13 @@ class AsyncGraphQueryEngine:
                     on_match=self._on_topk_match,
                     on_done=self._on_topk_round_done,
                     should_skip=st.should_skip,
-                    n_lb_pruned=n_pr, n_lb_tightened=n_tt)
+                    n_lb_pruned=n_pr, n_lb_tightened=n_tt,
+                    qid=ticket._qid)
                 continue
             if not r.verify:
-                res = eng._assemble(cand, None, n_db, per_q_filter)
+                res = eng._assemble(cand, None, n_db, per_q_filter,
+                                    lb_s=lb_share)
+                res.stats["queue_s"] = ticket._queue_s
                 eng._cache_result(key, r, res)
                 self._finish(ticket, res)
                 continue
@@ -442,17 +482,19 @@ class AsyncGraphQueryEngine:
                 eng._job_lbs(batch, row), tau)
             self.scheduler.add_job(
                 r.graph, tau, w_ids, w_bounds, deadline=deadline,
-                token=(ticket, key, r, cand, n_db, per_q_filter),
+                token=(ticket, key, r, cand, n_db, per_q_filter, lb_share),
                 on_match=self._on_match, on_done=self._on_done,
-                n_lb_pruned=n_pr, n_lb_tightened=n_tt)
+                n_lb_pruned=n_pr, n_lb_tightened=n_tt, qid=ticket._qid)
 
     # ---- stage: top-k escalation (runs on verifier threads) ----------------
     def _reenter(self, ticket: QueryTicket) -> None:
         """Queue a top-k query's next widened-τ filter round.  Bypasses
         ``submit_many``: escalation of an in-flight query must proceed
         even while admission is closing (close() waits for it)."""
+        now = time.perf_counter()
         with self._cv:
-            self._inbox.append((time.perf_counter(), ticket))
+            ticket._t_enq = now        # next round's queue-wait starts now
+            self._inbox.append((now, ticket))
             self._cv.notify_all()
 
     def _on_topk_match(self, job, gid: int, d: int) -> None:
@@ -468,6 +510,10 @@ class AsyncGraphQueryEngine:
         eng = self.engine
         try:
             st.absorb_round(job)
+            if eng.obs.spans.enabled:
+                eng.obs.spans.record("topk_round", job.t_enq,
+                                     time.perf_counter(), qid=ticket._qid,
+                                     tau=st.tau, round=st.rounds)
             with self._cv:
                 eng.stats["verify_s"] += job.verify_s
             if st.unverified or (st.deadline is not None
@@ -475,6 +521,7 @@ class AsyncGraphQueryEngine:
                 st.deadline_hit = True
             if st.deadline_hit or st.satisfied():
                 res = eng._assemble_topk(st, len(eng.source.db))
+                res.stats["queue_s"] = ticket._queue_s
                 # deadline partials are never cached (DESIGN.md §15)
                 if not (st.unverified or st.deadline_hit):
                     eng._cache_result(key, request, res)
@@ -490,10 +537,15 @@ class AsyncGraphQueryEngine:
         job.token[0]._push_match(gid, d)
 
     def _on_done(self, job) -> None:
-        ticket, key, request, cand, n_db, per_q_filter = job.token
+        ticket, key, request, cand, n_db, per_q_filter, lb_share = job.token
         eng = self.engine
         try:
-            res = eng._assemble(cand, job, n_db, per_q_filter)
+            res = eng._assemble(cand, job, n_db, per_q_filter,
+                                lb_s=lb_share)
+            # queue time is per-*ticket*, stamped before caching so the
+            # cached entry never carries another query's wait (replays
+            # zero it regardless — DESIGN.md §17)
+            res.stats["queue_s"] = ticket._queue_s
             with self._cv:
                 eng.stats["verify_s"] += job.verify_s
             if not job.unverified:   # deadline partials are never cached
@@ -507,6 +559,17 @@ class AsyncGraphQueryEngine:
                 error: Optional[BaseException] = None) -> None:
         if not ticket._resolve(res, error):
             return                       # already resolved — keep accounting
+        obs = self.engine.obs
+        if obs.spans.enabled and ticket._qid is not None \
+                and ticket._t_submit is not None \
+                and not (res is not None and res.stats.get("cache_hit")):
+            # the async root span: submission -> resolution (cache hits
+            # already got theirs from _admit, zero-length by design)
+            obs.spans.record(
+                "query", ticket._t_submit, time.perf_counter(),
+                qid=ticket._qid, error=int(error is not None),
+                partial=int(bool(res is not None
+                                 and res.stats.get("partial"))))
         with self._cv:
             self._outstanding -= 1
             if ticket._topk_counted:     # escalation over — release close()

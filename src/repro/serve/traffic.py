@@ -202,6 +202,11 @@ class _Obs:
     deadline_s: Optional[float]
     partial: bool
     error: bool
+    # per-query stage breakdown (DESIGN.md §17), zeros on error
+    filter_s: float = 0.0
+    lb_s: float = 0.0
+    verify_s: float = 0.0
+    queue_s: float = 0.0
 
 
 @dataclass
@@ -232,6 +237,8 @@ class TrafficReport:
                   and (o.error or o.partial
                        or o.latency_s > o.deadline_s)]
         n = len(obs)
+        done = [o for o in obs if not o.error]
+        nd = max(len(done), 1)
         return {
             "n": n,
             "n_topk": sum(o.kind == "topk" for o in obs),
@@ -242,6 +249,11 @@ class TrafficReport:
                                   / max(n, 1), 4),
             "slo_miss_rate": round(len(missed) / max(n, 1), 4),
             "errors": sum(o.error for o in obs),
+            # mean stage time per completed query (DESIGN.md §17)
+            "filter_ms": round(sum(o.filter_s for o in done) / nd * 1e3, 3),
+            "lb_ms": round(sum(o.lb_s for o in done) / nd * 1e3, 3),
+            "verify_ms": round(sum(o.verify_s for o in done) / nd * 1e3, 3),
+            "queue_ms": round(sum(o.queue_s for o in done) / nd * 1e3, 3),
         }
 
     @classmethod
@@ -278,9 +290,16 @@ def replay(trace: TrafficTrace, pipe, db, *, speed: float = 1.0,
     def record(q: TraceQuery, t_issue: float, res, err) -> None:
         lat = time.perf_counter() - t_issue
         partial = bool(res is not None and res.stats.get("partial"))
+        filter_s = lb_s = verify_s = queue_s = 0.0
+        if res is not None:
+            filter_s = float(res.filter_time_s)
+            verify_s = float(res.verify_time_s)
+            lb_s = float(res.stats.get("lb_s", 0.0))
+            queue_s = float(res.stats.get("queue_s", 0.0))
         with obs_lock:
             obs.append(_Obs(q.tenant, q.kind, lat, q.deadline_s, partial,
-                            err is not None))
+                            err is not None, filter_s, lb_s, verify_s,
+                            queue_s))
 
     t_start = time.perf_counter()
     if trace.mode == "open":

@@ -1,0 +1,27 @@
+"""Fixture: the obs registry idiom with broken lock discipline — a
+``# guarded_by:``-annotated counter store mutated outside its lock, the
+exact shape LCK001 must keep catching now that ``src/repro/obs/`` is a
+lint target."""
+import threading
+
+
+class MiniRegistry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters = {}     # guarded_by: self._lock
+
+    def counter_add(self, name, v):
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + v
+
+    def snapshot(self):
+        with self._lock:
+            return dict(self._counters)
+
+    def reset(self):
+        self._counters = {}     # expect: LCK001
+
+    def absorb(self, snap):
+        for name, v in snap.get("counters", {}).items():
+            old = self._counters.get(name, 0)   # expect: LCK001
+            self._counters[name] = old + v      # expect: LCK001

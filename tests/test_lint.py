@@ -50,6 +50,7 @@ def _got(relpath, select):
 
 FIXTURES = [
     ("lck001_bad.py", "LCK"), ("lck001_ok.py", "LCK"),
+    ("lck001_obs_bad.py", "LCK"),
     ("lck002_bad.py", "LCK"), ("lck002_ok.py", "LCK"),
     ("lck003_bad.py", "LCK"), ("lck003_ok.py", "LCK"),
     ("lck004_bad.py", "LCK"), ("lck004_cross_bad.py", "LCK"),
@@ -74,6 +75,15 @@ def test_fixture_findings_exact(name, family):
     else:
         assert want, f"violation fixture {name} must carry expect markers"
     assert _got(rel, family) == want
+
+
+def test_obs_modules_are_lock_targets():
+    """The observability substrate's shared state stays under LCK
+    coverage (DESIGN.md §17)."""
+    from repro.analysis.targets import targets_for
+    lck = set(targets_for(REPO)["LCK"])
+    assert "src/repro/obs/metrics.py" in lck
+    assert "src/repro/obs/spans.py" in lck
 
 
 def test_every_rule_code_has_a_violation_fixture():
