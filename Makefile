@@ -1,4 +1,5 @@
-.PHONY: check check-docs check-slow lint bench-throughput bench-smoke
+.PHONY: check check-docs check-slow lint bench-throughput bench-smoke \
+	chaos-smoke
 
 # Static analysis gate (DESIGN.md §14): lock discipline, JAX hygiene,
 # Pallas contracts, doc citations. Pure stdlib — no jax/numpy needed.
@@ -36,3 +37,11 @@ bench-smoke:
 	    --pipeline --pipeline-workers 2
 	PYTHONPATH=src python -m benchmarks.kernels_bench --smoke-batched
 	PYTHONPATH=src python -m benchmarks.serving_slo --smoke --trace
+
+# Chaos smoke (CI): replays the SLO mixes under the deterministic
+# fault_plan() schedule — poisoned filter batches, latency spikes, a
+# SIGKILLed verifier worker, admission shedding — asserting bounded
+# errors, finite p99, and zero stuck queries (DESIGN.md §18).
+chaos-smoke:
+	PYTHONPATH=src python -m benchmarks.serving_slo --faults --smoke \
+	    --mode open

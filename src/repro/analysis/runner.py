@@ -18,7 +18,7 @@ import os
 import sys
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.analysis import docs, jax_rules, locks, pallas_rules
+from repro.analysis import docs, jax_rules, locks, pallas_rules, serve_rules
 from repro.analysis.core import (FileCtx, Finding, Rule, filter_suppressed,
                                  load_baseline, new_findings, write_baseline)
 from repro.analysis.targets import targets_for
@@ -29,6 +29,7 @@ FAMILIES: Dict[str, Tuple[type, ...]] = {
     "JAX": jax_rules.RULES,
     "PLC": pallas_rules.RULES,
     "DOC": docs.RULES,
+    "SRV": serve_rules.RULES,
 }
 
 DEFAULT_BASELINE = "scripts/lint_baseline.json"

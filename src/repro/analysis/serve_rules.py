@@ -1,0 +1,106 @@
+"""Serving fault-containment rules (SRV family, DESIGN.md §18).
+
+The serving stack's failure-domain invariant is that every exception
+resolves to a *typed outcome* on the owning ticket — a result, a
+partial, or a ``QueryError`` — never a silent swallow that leaves a
+future hanging.  Containment handlers are therefore only legitimate
+when their body visibly propagates the failure: re-raising, failing the
+owning ticket/job, or counting it into the error accounting.  Rules:
+
+* **SRV001** — a bare ``except:`` or broad ``except Exception /
+  BaseException`` in ``src/repro/serve/`` whose handler neither
+  re-raises, references the bound exception, fails/resolves/finishes a
+  ticket, nor records the failure into error/fallback accounting.  Such
+  a handler swallows faults invisibly — the exact anti-pattern the
+  chaos suite exists to catch.  Deliberate last-resort guards (e.g. a
+  user callback that raised *after* its ticket resolved) carry an
+  inline ``# lint: disable=SRV001`` with a justification comment.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.core import FileCtx, Finding, Rule, dotted_name
+
+_BROAD = ("Exception", "BaseException")
+
+# handler-body evidence that the failure is propagated, not swallowed:
+# a called name containing one of these retires/fails the owning ticket
+_PROPAGATING_CALLS = ("finish", "resolve", "fail", "record", "abort",
+                      "retire", "reject", "log", "warn")
+# ...or an assignment target containing one of these feeds the error
+# accounting the stats/chaos assertions read
+_ACCOUNTING_NAMES = ("error", "unverified", "fallback", "fail", "shed",
+                     "reject", "skip", "drop")
+
+
+def _is_broad(expr: Optional[ast.expr]) -> bool:
+    if expr is None:                       # bare except:
+        return True
+    if isinstance(expr, ast.Tuple):
+        return any(_is_broad(e) for e in expr.elts)
+    name = dotted_name(expr)
+    return name is not None and name.split(".")[-1] in _BROAD
+
+
+def _target_text(node: ast.expr) -> str:
+    """Lowercased identifier soup of an assignment target — attribute
+    names, subscript string keys, plain names."""
+    parts = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            parts.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            parts.append(n.attr)
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            parts.append(n.value)
+    return " ".join(parts).lower()
+
+
+def _propagates(handler: ast.ExceptHandler) -> bool:
+    bound = handler.name
+    for stmt in handler.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Raise):
+                return True
+            if bound and isinstance(node, ast.Name) and node.id == bound:
+                return True                # error object is used somewhere
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                leaf = (name or "").split(".")[-1].lower()
+                if any(k in leaf for k in _PROPAGATING_CALLS):
+                    return True
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets
+                           if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    text = _target_text(t)
+                    if any(k in text for k in _ACCOUNTING_NAMES):
+                        return True
+    return False
+
+
+class SwallowedExceptRule(Rule):
+    """SRV001: broad except that swallows the failure silently."""
+
+    codes = ("SRV001",)
+    name = "serve-swallowed-except"
+
+    def run(self, ctx: FileCtx) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node.type):
+                continue
+            if _propagates(node):
+                continue
+            yield ctx.finding(
+                node, "SRV001",
+                "broad except swallows the failure: re-raise, fail the "
+                "owning ticket, or count it into error accounting "
+                "(DESIGN.md §18)")
+
+
+RULES = (SwallowedExceptRule,)

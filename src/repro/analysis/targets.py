@@ -7,6 +7,7 @@ than blanket-scanning the tree:
 * JAX — the jit/shard_map modules (plus kernel op wrappers).
 * PLC — every module under ``kernels/``.
 * DOC — project-wide text scan (handled inside the rule itself).
+* SRV — fault containment, every module under ``serve/``.
 
 ``extra_roots`` lets tests point the runner at fixture trees instead.
 """
@@ -56,5 +57,6 @@ def targets_for(root: str) -> Dict[str, List[str]]:
                 if os.path.exists(os.path.join(root, p))] + kernels,
         "PLC": kernels,
         "DOC": [],  # the doc rule walks the tree itself
+        "SRV": _glob_py(root, "src/repro/serve"),
     }
     return fam

@@ -51,6 +51,13 @@ class DeviceSlabCache:
             OrderedDict()                       # guarded_by: self._lock
         self.stats: Dict[str, int] = {          # guarded_by: self._lock
             "hits": 0, "misses": 0, "evictions": 0, "invalidations": 0}
+        # duck-typed fault injector (serve.faults.FaultInjector); builds
+        # fire the ``device.cache`` point so upload/gather failures are
+        # injectable without a real device (DESIGN.md §18)
+        self._faults = None
+
+    def set_faults(self, faults) -> None:
+        self._faults = faults
 
     def __len__(self) -> int:
         with self._lock:
@@ -77,6 +84,8 @@ class DeviceSlabCache:
                 return entry[field]
         # build outside the lock: gathers/uploads are slow and re-entrant
         # callers (a field builder using another field) must not deadlock
+        if self._faults is not None:
+            self._faults.fire("device.cache", field=field)
         value = build()
         with self._lock:
             entry = self._entries.setdefault(key, {})

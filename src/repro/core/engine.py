@@ -40,6 +40,7 @@ what lets that engine run tree-backed (``MSQIndex``) or flat
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
@@ -47,6 +48,7 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_chec
 import numpy as np
 
 from repro.obs import current_obs, device_annotation
+from repro.obs.health import FAILING, StageHealth
 
 from repro.core import arrays, filters
 from repro.core.arrays import DBArrays, QueryArrays
@@ -65,6 +67,17 @@ _Q_PAD = 8
 _N_PAD = 512
 # per-device candidate-block size of the distributed backend
 _K_DEFAULT = 256
+
+# the recall-safe degradation ladders (DESIGN.md §18).  Every backend
+# computes bit-identical bounds and every slab layout decodes to the
+# same F_D, so stepping down a rung changes cost, never candidates.
+_BACKEND_LADDER = {
+    "pallas": ("pallas", "jax", "numpy"),
+    "jax": ("jax", "numpy"),
+    "numpy": ("numpy",),
+    "distributed": ("distributed", "numpy"),
+}
+_SLAB_LADDER = {"packed": "hot", "hot": "dense"}
 
 
 @runtime_checkable
@@ -244,7 +257,7 @@ class BatchedFilterEval:
                  hot_mass: Optional[float] = None,
                  tile_table=None, device_cache_entries: int = 16,
                  assign_lb: bool = True, lb_hungarian: int = 0,
-                 lb_tile_table=None):
+                 lb_tile_table=None, faults=None):
         if backend == "auto":
             backend = resolve_backend()
         if backend not in ("jax", "numpy", "pallas", "distributed"):
@@ -269,8 +282,25 @@ class BatchedFilterEval:
         self.lb_hungarian = int(lb_hungarian)
         self._lb_tile_table = lb_tile_table
         self._lb_dist_fn = None
+        # fault injection (duck-typed: anything with .fire(point, **ctx);
+        # serve.faults.FaultInjector in practice) + the per-stage health
+        # machines driving the degradation ladder (DESIGN.md §18)
+        self.faults = None
+        self.backend_health = StageHealth("filter_backend")
+        self.slab_health = StageHealth("slab_decode", fail_threshold=2)
+        self._health_reg = None
+        self._ladder_lock = threading.Lock()
+        self.ladder_stats: Dict[str, int] = {
+            "backend_fallbacks": 0, "slab_fallbacks": 0, "primary_skips": 0}
+        self.set_faults(faults)
         if backend == "distributed":
             self._init_distributed(mesh, layout, k, shard_pad)
+
+    def set_faults(self, faults) -> None:
+        """(Re)attach a fault injector; threads into the device cache so
+        upload builds fire ``device.cache`` too.  ``None`` disarms."""
+        self.faults = faults
+        self.device_cache.set_faults(faults)
 
     # ---- slab lifecycle ----------------------------------------------------
     def rebuild_slab(self, *, layout: Optional[str] = None,
@@ -461,11 +491,91 @@ class BatchedFilterEval:
             raise ValueError("the distributed backend emits candidate "
                              "blocks, not dense bounds; use "
                              "bucket_candidates()")
-        if self.backend == "numpy":
+        return self._bounds_ladder(idx, qs)
+
+    def _bounds_backend(self, backend: str, idx: np.ndarray,
+                        qs: Sequence[QueryArrays]) -> np.ndarray:
+        if backend == "numpy":
             return self._bounds_np(idx, qs)
-        if self.backend == "pallas":
+        if backend == "pallas":
             return self._bounds_pallas(idx, qs)
         return self._bounds_jax(idx, qs)
+
+    # ---- the degradation ladder (DESIGN.md §18) ---------------------------
+    def _attach_health(self) -> None:
+        """Bind the health gauges to the ambient registry: the serving
+        engines wrap every filter pass in ``use_obs``, so ladder state
+        lands in the same snapshot as the serving stats."""
+        obs = current_obs()
+        reg = None if obs is None else obs.metrics
+        if reg is not self._health_reg:
+            self._health_reg = reg
+            self.backend_health.attach(reg)
+            self.slab_health.attach(reg)
+
+    def _note_degrade(self, counter: str, **fields) -> None:
+        with self._ladder_lock:
+            self.ladder_stats[counter] += 1
+        obs = current_obs()
+        if obs is not None:
+            obs.metrics.counter_add(f"filter.{counter}")
+            if obs.spans.enabled:
+                now = time.perf_counter()
+                obs.spans.record("degrade", now, now, kind=counter,
+                                 **fields)
+
+    def _fire_device_faults(self, backend: str) -> None:
+        if self.faults is not None and backend != "numpy":
+            self.faults.fire("device.filter", backend=backend)
+            if self.slab_layout in _SLAB_LADDER:
+                self.faults.fire("device.decode", layout=self.slab_layout)
+
+    def _record_ladder_failure(self, backend: str, err: BaseException,
+                               primary: bool) -> None:
+        """Account one rung failure; step the slab ladder when repeated
+        failures attribute to the packed/hot decode path."""
+        if getattr(err, "slab_decode", False):
+            self.slab_health.record_failure()
+            nxt = _SLAB_LADDER.get(self.slab_layout)
+            if self.slab_health.state == FAILING and nxt is not None:
+                # packed -> hot -> dense: rebuild the resident slab one
+                # rung denser (identical F_D content, no decode step) and
+                # drop the stale device uploads with it
+                self.rebuild_slab(layout=nxt)
+                self.slab_health.record_success()
+                self._note_degrade("slab_fallbacks", to_layout=nxt)
+        elif primary:
+            self.backend_health.record_failure()
+        self._note_degrade("backend_fallbacks", backend=backend)
+
+    def _bounds_ladder(self, idx: np.ndarray,
+                       qs: Sequence[QueryArrays]) -> np.ndarray:
+        """Walk pallas→jax→numpy (or the backend's suffix) until a rung
+        succeeds.  Candidates are bit-identical on every rung, so the
+        ladder trades latency for availability, never recall.  A FAILING
+        primary is sticky-skipped until its next probe; numpy is the
+        floor and its failure propagates (nothing recall-safe is left)."""
+        ladder = _BACKEND_LADDER[self.backend]
+        if len(ladder) == 1:        # numpy primary: no ladder, no faults
+            return self._bounds_np(idx, qs)
+        self._attach_health()
+        last_err: Optional[BaseException] = None
+        for rung, be in enumerate(ladder):
+            primary = rung == 0
+            if primary and not self.backend_health.allow_primary():
+                self._note_degrade("primary_skips", backend=be)
+                continue
+            try:
+                self._fire_device_faults(be)
+                out = self._bounds_backend(be, idx, qs)
+            except Exception as e:      # noqa: BLE001 — ladder containment
+                last_err = e
+                self._record_ladder_failure(be, e, primary)
+                continue
+            if primary:
+                self.backend_health.record_success()
+            return out
+        raise last_err  # type: ignore[misc]
 
     def bucket_candidates(self, idx: np.ndarray, qs: Sequence[QueryArrays],
                           taus: Sequence[int]
@@ -474,10 +584,24 @@ class BatchedFilterEval:
 
         Single-host backends threshold the dense (Q, N) bounds; the
         distributed backend drains the all-gathered candidate blocks.
+        Both sit on the degradation ladder: device failures fall back to
+        the exact numpy pass (bit-identical candidates, DESIGN.md §18).
         """
         if self.backend == "distributed":
-            return self._bucket_candidates_dist(idx, qs, taus)
-        bounds = self.bounds(idx, qs)
+            self._attach_health()
+            if self.backend_health.allow_primary():
+                try:
+                    self._fire_device_faults("distributed")
+                    out = self._bucket_candidates_dist(idx, qs, taus)
+                    self.backend_health.record_success()
+                    return out
+                except Exception as e:  # noqa: BLE001 — ladder containment
+                    self._record_ladder_failure("distributed", e, True)
+            else:
+                self._note_degrade("primary_skips", backend="distributed")
+            bounds = self._bounds_np(idx, qs)
+        else:
+            bounds = self.bounds(idx, qs)
         out: List[Tuple[List[int], np.ndarray]] = []
         for row in range(len(qs)):
             keep = bounds[row] <= int(taus[row])

@@ -251,13 +251,17 @@ class FlatMSQIndex:
                            hot_mass: Optional[float] = None,
                            tile_table=None, assign_lb: bool = True,
                            lb_hungarian: int = 0,
-                           lb_tile_table=None) -> CandidateBatch:
-        return batched_flat_candidates(
-            self.filter_eval(backend, slab=slab, hot_d=hot_d,
-                             hot_mass=hot_mass, tile_table=tile_table,
-                             assign_lb=assign_lb, lb_hungarian=lb_hungarian,
-                             lb_tile_table=lb_tile_table),
-            graphs, taus, qtuples)
+                           lb_tile_table=None, faults=None) -> CandidateBatch:
+        ev = self.filter_eval(backend, slab=slab, hot_d=hot_d,
+                              hot_mass=hot_mass, tile_table=tile_table,
+                              assign_lb=assign_lb, lb_hungarian=lb_hungarian,
+                              lb_tile_table=lb_tile_table)
+        if faults is not ev.faults:
+            # the serving engine's injector rides along per call: the
+            # evaluator is shared across engines (one per backend/slab
+            # key), so attach rather than forking the cache key
+            ev.set_faults(faults)
+        return batched_flat_candidates(ev, graphs, taus, qtuples)
 
     def candidates(self, h: Graph, tau: int) -> List[int]:
         i1, i2, j1, j2 = self.partition.query_region(h.n, h.m, tau)

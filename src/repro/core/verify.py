@@ -165,6 +165,14 @@ class GEDSearch:
         f = self.heap[0][0] if self.heap else self.tau + 1
         return max(f, self.lb)
 
+    def frontier(self) -> Tuple[int, int]:
+        """``(expansions, open_nodes)`` — where a paused search stands.
+
+        Used by the scheduler's pool-recovery path (and its tests) to
+        assert that a re-enqueued search resumes from its last frontier
+        instead of restarting from scratch."""
+        return self.expansions, len(self.heap)
+
     def _completion_cost(self, used_g: int) -> int:
         """Insert the unmatched g vertices and all their incident edges."""
         rem = [v for v in range(self.g.n) if not (used_g >> v) & 1]

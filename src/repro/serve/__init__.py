@@ -1,14 +1,19 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.errors import (AdmissionError, FilterStageError,
+                                QueryError, VerifyStageError)
+from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
                                       ShardedGraphQueryEngine,
                                       VerifyScheduler)
 from repro.serve.pipeline import (AsyncGraphQueryEngine, QueryTicket,
                                   as_completed)
 from repro.serve.traffic import (TenantSpec, TrafficReport, TrafficTrace,
-                                 generate_trace, replay)
+                                 generate_trace, replay, tenant_weights)
 
 __all__ = ["ServeEngine", "Request", "GraphQuery", "GraphQueryEngine",
            "ShardedGraphQueryEngine", "VerifyScheduler",
            "AsyncGraphQueryEngine", "QueryTicket", "as_completed",
            "TenantSpec", "TrafficReport", "TrafficTrace",
-           "generate_trace", "replay"]
+           "generate_trace", "replay", "tenant_weights",
+           "QueryError", "FilterStageError", "VerifyStageError",
+           "AdmissionError", "FaultInjector", "FaultSpec", "InjectedFault"]

@@ -1,0 +1,62 @@
+"""Typed error taxonomy for the serving stack (DESIGN.md §18).
+
+Every fault the pipeline can hit resolves a ticket with one of these —
+callers can branch on the class (admission rejection vs. stage failure)
+without parsing messages, and the invariant "every injected fault
+resolves to a typed outcome, never a hang" is checkable by type.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+class QueryError(RuntimeError):
+    """Base class for typed per-query failures.
+
+    ``stage`` names the pipeline stage that failed ("admission",
+    "filter", "verify"); ``cause`` carries the original exception when
+    one exists (also chained via ``__cause__`` for tracebacks).
+    """
+
+    stage = "query"
+
+    def __init__(self, message: str, *,
+                 cause: Optional[BaseException] = None) -> None:
+        super().__init__(message)
+        self.cause = cause
+        if cause is not None:
+            self.__cause__ = cause
+
+
+class FilterStageError(QueryError):
+    """The device filter stage raised for this ticket's batch.
+
+    Only the poisoned batch's tickets fail; the filter thread and every
+    other in-flight query keep running (DESIGN.md §18)."""
+
+    stage = "filter"
+
+
+class VerifyStageError(QueryError):
+    """The verification stage failed this query beyond containment."""
+
+    stage = "verify"
+
+
+class AdmissionError(QueryError):
+    """The bounded inbox rejected (or shed) this query under overload.
+
+    ``policy`` is the shedding policy that fired ("reject" rejected the
+    new arrival, "shed_oldest" evicted a queued victim); ``shed`` is
+    True on the evicted victim's ticket, False on a rejected arrival.
+    """
+
+    stage = "admission"
+
+    def __init__(self, message: str, *, policy: str = "reject",
+                 tenant: Optional[str] = None, shed: bool = False,
+                 cause: Optional[BaseException] = None) -> None:
+        super().__init__(message, cause=cause)
+        self.policy = policy
+        self.tenant = tenant
+        self.shed = shed

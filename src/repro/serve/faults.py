@@ -1,0 +1,196 @@
+"""Deterministic, seeded fault injection for the serving stack.
+
+The serving pipeline (DESIGN.md §18) threads named injection points
+through its stages; a ``FaultInjector`` installed on the pipeline fires
+at those points according to declarative ``FaultSpec``s — raise on the
+Nth call, add a latency spike, kill a process-pool worker, or fail a
+device op.  Call counting is per-point and the worker-kill victim is
+chosen with a seeded RNG, so a given (spec, seed, trace) triple replays
+the same fault schedule every run: chaos tests and the ``--faults``
+bench mode assert exact outcomes against it.
+
+Standing injection points (grep for ``_fire(`` / ``.fire(``):
+
+==================  =====================================================
+point               fires
+==================  =====================================================
+``admit``           per ticket, on admission into the async inbox
+``filter.batch``    per formed batch, before the device filter stage
+``device.filter``   inside ``BatchedFilterEval`` device dispatch
+``device.decode``   inside the packed/hot slab decode path
+``device.cache``    inside ``DeviceSlabCache.get_or_build`` builds
+``verify.slice``    per verification slice, before the A* run
+``verify.pool``     before each process-pool dispatch (worker kill)
+==================  =====================================================
+
+The injector is duck-typed at the call sites (``faults.fire(point)``),
+so ``repro.core`` modules never import this package; ``None`` disables
+injection with zero hot-path cost.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``raise``/``device`` fault; carries its point."""
+
+    def __init__(self, point: str, call_index: int, tag: str = "") -> None:
+        super().__init__(f"injected fault at {point!r} (call #{call_index})")
+        self.point = point
+        self.call_index = call_index
+        self.tag = tag
+        if tag == "decode":
+            # the slab ladder keys decode attribution off this flag
+            self.slab_decode = True
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault schedule at a named injection point.
+
+    ``on_calls`` fires at explicit 1-based call indices; ``every``
+    fires at every Nth call — both respect ``times`` (max fires,
+    ``None`` = unbounded).  ``kind``:
+
+    * ``"raise"``       — raise :class:`InjectedFault` at the site
+    * ``"delay"``       — sleep ``delay_s`` (latency spike), then return
+    * ``"kill_worker"`` — SIGKILL one live process-pool worker (the
+      site passes ``pool=``; victim picked by the injector's seeded RNG)
+    """
+
+    point: str
+    kind: str = "raise"
+    on_calls: Tuple[int, ...] = ()
+    every: int = 0
+    times: Optional[int] = None
+    delay_s: float = 0.0
+    tag: str = ""
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("raise", "delay", "kill_worker"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if not self.on_calls and not self.every:
+            raise ValueError("FaultSpec needs on_calls or every")
+
+    def matches(self, call_index: int) -> bool:
+        if call_index in self.on_calls:
+            return True
+        return bool(self.every) and call_index % self.every == 0
+
+
+@dataclass
+class _Armed:
+    spec: FaultSpec
+    fires: int = 0
+
+    def due(self, call_index: int) -> bool:
+        if self.spec.times is not None and self.fires >= self.spec.times:
+            return False
+        return self.spec.matches(call_index)
+
+
+@dataclass
+class FireEvent:
+    """One fault firing, recorded for assertions and bench rows."""
+
+    point: str
+    call_index: int
+    kind: str
+    detail: str = ""
+
+
+class FaultInjector:
+    """Thread-safe registry of armed fault specs + per-point counters."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = (),
+                 seed: int = 0) -> None:
+        self._lock = threading.Lock()
+        self._rng = random.Random(seed)
+        self._armed: List[_Armed] = [_Armed(s) for s in specs]
+        self.calls: Dict[str, int] = {}
+        self.fired: List[FireEvent] = []
+
+    def add(self, spec: FaultSpec) -> "FaultInjector":
+        with self._lock:
+            self._armed.append(_Armed(spec))
+        return self
+
+    # ------------------------------------------------------------------
+    def fire(self, point: str, **ctx: Any) -> None:
+        """Count a pass through ``point``; act on any due spec.
+
+        Raise faults propagate an :class:`InjectedFault` out of the
+        call site; delay/kill faults act and return.  One call can fire
+        at most one raise fault (after any delay/kill faults)."""
+        with self._lock:
+            idx = self.calls.get(point, 0) + 1
+            self.calls[point] = idx
+            due = [a for a in self._armed
+                   if a.spec.point == point and a.due(idx)]
+            for a in due:
+                a.fires += 1
+            events = [FireEvent(point, idx, a.spec.kind) for a in due]
+            self.fired.extend(events)
+            kill_rng = self._rng.random() if any(
+                a.spec.kind == "kill_worker" for a in due) else 0.0
+        to_raise: Optional[InjectedFault] = None
+        for a, ev in zip(due, events):
+            spec = a.spec
+            if spec.kind == "delay":
+                time.sleep(spec.delay_s)
+            elif spec.kind == "kill_worker":
+                ev.detail = self._kill_worker(ctx.get("pool"), kill_rng)
+            elif to_raise is None:
+                to_raise = InjectedFault(point, idx, tag=spec.tag)
+        if to_raise is not None:
+            raise to_raise
+
+    @staticmethod
+    def _kill_worker(pool: Any, pick: float) -> str:
+        # the spawn pool starts workers lazily, so a kill scheduled on an
+        # early call can land before any worker exists — wait out warmup
+        # (bounded) so a scheduled kill deterministically kills
+        procs: List[Any] = []
+        for _ in range(100):
+            procs = [p for p in getattr(pool, "_processes", {}).values()
+                     if p.is_alive()]
+            if procs:
+                break
+            time.sleep(0.02)
+        if not procs:
+            return "no-live-worker"
+        victim = procs[int(pick * len(procs)) % len(procs)]
+        victim.kill()
+        victim.join(timeout=10.0)
+        return f"killed pid {victim.pid}"
+
+    # ------------------------------------------------------------------
+    def count(self, point: str) -> int:
+        with self._lock:
+            return self.calls.get(point, 0)
+
+    def fired_at(self, point: str) -> List[FireEvent]:
+        with self._lock:
+            return [e for e in self.fired if e.point == point]
+
+    def summary(self) -> Dict[str, Any]:
+        """Bench-row payload: calls seen and faults fired per point."""
+        with self._lock:
+            fires: Dict[str, int] = {}
+            for e in self.fired:
+                fires[f"{e.point}:{e.kind}"] = \
+                    fires.get(f"{e.point}:{e.kind}", 0) + 1
+            return {"calls": dict(self.calls), "fired": fires,
+                    "n_fired": len(self.fired)}
+
+    def reset(self) -> None:
+        with self._lock:
+            self.calls.clear()
+            self.fired.clear()
+            for a in self._armed:
+                a.fires = 0

@@ -48,6 +48,14 @@ from repro.core.tree import QueryTuple
 from repro.core.verify import GEDSearch
 from repro.graphs.graph import Graph
 from repro.obs import MetricsRegistry, Observability, StatsView, use_obs
+from repro.obs.health import StageHealth
+
+
+class _PoolBroken(Exception):
+    """Internal: the process pool died under this slice.  The search
+    state is untouched (the pool round-trips a *copy*), so the caller
+    re-enqueues the pair at its current frontier instead of retiring
+    it — raised and caught inside this module only."""
 
 
 @dataclass
@@ -71,6 +79,11 @@ class GraphQuery:
     verify: bool = True
     deadline_s: Optional[float] = None
     top_k: Optional[int] = None
+    # admission-control identity (DESIGN.md §18): the async pipeline's
+    # shed-oldest policy picks victims by per-tenant weighted occupancy;
+    # None = the anonymous tenant.  Ignored by the sync path and by
+    # caching (tenancy never changes an answer).
+    tenant: Optional[str] = None
 
     def __post_init__(self):
         if self.top_k is not None:
@@ -90,14 +103,60 @@ def _graph_key(g: Graph) -> bytes:
                       np.asarray(g.elabels, np.int64).tobytes()))
 
 
+def _approx_nbytes(obj) -> int:
+    """Rough resident-byte estimate for cache accounting (DESIGN.md §18):
+    numpy arrays by ``nbytes``, containers by recursive walk, scalars at
+    CPython ballpark.  An accounting bound for eviction decisions, not a
+    ``sys.getsizeof`` ground truth — both cached types (``QueryTuple``,
+    ``QueryResult``) are flat bundles of arrays/lists, so the walk is
+    shallow and cycle-free."""
+    if obj is None:
+        return 0
+    if isinstance(obj, np.ndarray):
+        return int(obj.nbytes) + 96
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj) + 33
+    if isinstance(obj, str):
+        return len(obj) + 49
+    if isinstance(obj, (int, float, bool)):
+        return 28
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return 56 + 8 * len(obj) + sum(_approx_nbytes(x) for x in obj)
+    if isinstance(obj, dict):
+        return 64 + sum(_approx_nbytes(k) + _approx_nbytes(v)
+                        for k, v in obj.items())
+    d = getattr(obj, "__dict__", None)
+    if d is not None:
+        return 64 + _approx_nbytes(d)
+    slots = getattr(type(obj), "__slots__", ())
+    return 64 + sum(_approx_nbytes(getattr(obj, s, None)) for s in slots)
+
+
 class _LRU:
     """Tiny LRU with a lock: the async pipeline reads from its admission
-    thread while verifier workers publish finished results."""
+    thread while verifier workers publish finished results.
 
-    def __init__(self, maxsize: int):
+    Bounded by entry count and — when ``max_bytes``/``sizeof`` are given —
+    by estimated resident bytes, whichever trips first, so a burst of
+    huge graphs cannot balloon the cache past its memory budget
+    (DESIGN.md §18).  High-water marks are tracked here and exported by
+    the owning engine's registry; ``on_hwm`` (if set) is invoked with
+    ``(bytes_hwm, entries_hwm)`` *outside* the lock after a put that
+    raised either mark."""
+
+    def __init__(self, maxsize: int, max_bytes: Optional[int] = None,
+                 sizeof: Optional[Callable] = None,
+                 on_hwm: Optional[Callable] = None):
         self.maxsize = maxsize
+        self.max_bytes = max_bytes
+        self._sizeof = sizeof
+        self._on_hwm = on_hwm
         self._lock = threading.Lock()
         self._d: OrderedDict = OrderedDict()    # guarded_by: self._lock
+        self._sizes: Dict = {}                  # guarded_by: self._lock
+        self._bytes = 0                         # guarded_by: self._lock
+        self.bytes_hwm = 0                      # guarded_by: self._lock
+        self.entries_hwm = 0                    # guarded_by: self._lock
         self.hits = 0                           # guarded_by: self._lock
         self.misses = 0                         # guarded_by: self._lock
 
@@ -110,12 +169,48 @@ class _LRU:
             self.misses += 1
             return None
 
+    def _evict_locked(self, key) -> None:    # guarded_by: self._lock
+        del self._d[key]
+        self._bytes -= self._sizes.pop(key, 0)
+
     def put(self, key, value) -> None:
+        sz = 0
+        if self._sizeof is not None:
+            sz = int(self._sizeof(value))   # size outside any eviction path
+        hwm = None
         with self._lock:
+            if key in self._d:
+                self._bytes -= self._sizes.pop(key, 0)
             self._d[key] = value
             self._d.move_to_end(key)
+            self._sizes[key] = sz
+            self._bytes += sz
             while len(self._d) > self.maxsize:
-                self._d.popitem(last=False)
+                self._evict_locked(next(iter(self._d)))
+            if self.max_bytes is not None:
+                # may evict down to empty: one over-budget value still
+                # never holds more than itself, and it ages out next put
+                while self._bytes > self.max_bytes and len(self._d) > 1:
+                    self._evict_locked(next(iter(self._d)))
+            raised = False
+            if self._bytes > self.bytes_hwm:
+                self.bytes_hwm = self._bytes
+                raised = True
+            if len(self._d) > self.entries_hwm:
+                self.entries_hwm = len(self._d)
+                raised = True
+            if raised and self._on_hwm is not None:
+                hwm = (self.bytes_hwm, self.entries_hwm)
+        if hwm is not None:
+            # registry publish happens outside self._lock (lock ordering:
+            # never hold a cache lock across the metrics registry's)
+            self._on_hwm(*hwm)
+
+    def usage(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._d), "bytes": self._bytes,
+                    "bytes_hwm": self.bytes_hwm,
+                    "entries_hwm": self.entries_hwm}
 
 
 class VerifyJob:
@@ -275,12 +370,13 @@ class VerifyScheduler:
     # the hot loop, and snapshot keys are stable for the engine's fold)
     STAT_KEYS = ("verified_pairs", "expired_pairs", "resumed_runs",
                  "lb_pruned", "lb_tightened", "pruned_pairs",
-                 "pool_fallbacks", "error_pairs")
+                 "pool_fallbacks", "pool_rebuilds", "error_pairs")
 
     def __init__(self, db, slice_expansions: Optional[int] = None,
                  interval_sink: Optional[List[Tuple[float, float]]] = None,
                  executor: str = "inline", workers: int = 1,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None, faults=None,
+                 dispatch_retries: int = 2, max_pool_rebuilds: int = 2):
         if executor not in ("inline", "thread", "process"):
             raise ValueError(f"unknown executor {executor!r} "
                              "(inline | thread | process)")
@@ -297,15 +393,21 @@ class VerifyScheduler:
                                  if slice_expansions and slice_expansions > 0
                                  else None)
         self.workers = max(1, int(workers))
+        # duck-typed fault injector (serve.faults.FaultInjector): fires
+        # ``verify.slice`` per pair and ``verify.pool`` per pool dispatch
+        self.faults = faults
+        self.dispatch_retries = max(0, int(dispatch_retries))
+        self.max_pool_rebuilds = max(0, int(max_pool_rebuilds))
+        # poisoned-pool health (DESIGN.md §18): repeated breakage trips
+        # FAILING and slices go straight in-process until a probe passes
+        self.pool_health = StageHealth(
+            "verify_pool", fail_threshold=2, probe_interval=4,
+            registry=obs.metrics if obs is not None else self.metrics)
         self._pool = None
-        if executor == "process":
-            import multiprocessing
-            from concurrent.futures import ProcessPoolExecutor
-            # spawn, not fork: the parent usually has jax/XLA threads, and
-            # the child only needs the jax-free core.verify module anyway
-            self._pool = ProcessPoolExecutor(
-                max_workers=self.workers,
-                mp_context=multiprocessing.get_context("spawn"))
+        self._want_pool = executor == "process"
+        self._pool_closed = False   # guarded_by: self._cv
+        if self._want_pool:
+            self._pool = self._make_pool()
         self._seq = itertools.count()
         self._cv = threading.Condition()
         self._heap: list = []       # guarded_by: self._cv
@@ -323,6 +425,42 @@ class VerifyScheduler:
         """Consistent copy of the worklist counters (readers must not
         iterate ``stats`` while a verifier thread is publishing)."""
         return self.stats.snapshot()
+
+    def _make_pool(self):
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+        # spawn, not fork: the parent usually has jax/XLA threads, and
+        # the child only needs the jax-free core.verify module anyway
+        return ProcessPoolExecutor(
+            max_workers=self.workers,
+            mp_context=multiprocessing.get_context("spawn"))
+
+    def _on_pool_broken(self, pool) -> None:
+        """A dispatch saw ``BrokenProcessPool``: retire the poisoned pool
+        and — within the rebuild budget — stand up a fresh one so later
+        slices regain process parallelism.  Concurrent observers of the
+        same broken pool race benignly: only the first swaps it out, the
+        rest see ``self._pool is not pool`` and return."""
+        self.pool_health.record_failure()
+        rebuild = False
+        with self._cv:
+            self.stats["pool_fallbacks"] += 1
+            if self._pool is not pool or self._pool_closed:
+                return
+            self._pool = None
+            if self.stats["pool_rebuilds"] < self.max_pool_rebuilds:
+                self.stats["pool_rebuilds"] += 1
+                rebuild = True
+        pool.shutdown(wait=False)   # reap outside the lock; workers are dead
+        if not rebuild:
+            return
+        fresh = self._make_pool()
+        with self._cv:
+            if self._pool is None and not self._pool_closed:
+                self._pool = fresh
+                fresh = None
+        if fresh is not None:       # lost the race / closing: discard it
+            fresh.shutdown(wait=False)
 
     # ---- producer side -----------------------------------------------------
     def add_job(self, graph: Graph, tau: int, ids: Sequence[int],
@@ -372,10 +510,14 @@ class VerifyScheduler:
             self._cv.notify_all()
 
     def shutdown(self, wait: bool = True) -> None:
-        """Stop the process-pool executor (idempotent, no-op inline)."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=wait)
-            self._pool = None
+        """Stop the process-pool executor (idempotent, no-op inline).
+        Marks the pool closed first so a concurrent broken-pool recovery
+        can never rebuild a pool that would leak past shutdown."""
+        with self._cv:
+            self._pool_closed = True
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=wait)
 
     # ---- consumer side -----------------------------------------------------
     def _pop(self, block: bool):
@@ -453,25 +595,49 @@ class VerifyScheduler:
         dispatch span."""
         pool = self._pool
         want_span = self.obs is not None and self.obs.spans.enabled
+        if pool is not None and not self.pool_health.allow_primary():
+            # FAILING pool is sticky-skipped between probes: slices go
+            # straight in-process without paying a doomed dispatch
+            self.metrics.counter_add("sched.pool_skips")
+            pool = None
         if pool is not None:
             from concurrent.futures.process import BrokenProcessPool
             from repro.core.verify import run_search_slice
+            if self.faults is not None:
+                # kill_worker specs act here, right before the dispatch
+                self.faults.fire("verify.pool", pool=pool)
             fut = None
-            try:
-                fut = pool.submit(run_search_slice, search,
-                                  self.slice_expansions, deadline,
-                                  want_span)
-            except (OSError, RuntimeError):
-                pass        # shut-down / unspawnable pool: dispatch failed
+            for attempt in range(self.dispatch_retries + 1):
+                try:
+                    fut = pool.submit(run_search_slice, search,
+                                      self.slice_expansions, deadline,
+                                      want_span)
+                    break
+                except BrokenProcessPool:
+                    # broken before dispatch (a worker died under an
+                    # earlier slice): same recovery as a mid-slice break
+                    self._on_pool_broken(pool)
+                    raise _PoolBroken() from None
+                except (OSError, RuntimeError):
+                    # transient dispatch failure (queue hiccup / raced
+                    # shutdown): back off and retry before falling back
+                    if attempt < self.dispatch_retries:
+                        time.sleep(0.005 * (2 ** attempt))
             if fut is not None:
                 try:
                     out = fut.result()
                 except BrokenProcessPool:
-                    out = None   # worker died mid-slice; state untouched
+                    # worker died mid-slice; the search state here is
+                    # untouched (the pool ran a pickled copy), so hand
+                    # the pair back to the heap at its current frontier
+                    # and retire/rebuild the poisoned pool
+                    self._on_pool_broken(pool)
+                    raise _PoolBroken() from None
                 # any other exception came from the A* slice itself and
                 # re-raises unchanged — _run_item counts it once as an
                 # error pair, with no duplicate in-process run
                 if out is not None:
+                    self.pool_health.record_success()
                     if len(out) == 3:
                         d, search, frag = out
                         if want_span and frag is not None:
@@ -522,6 +688,8 @@ class VerifyScheduler:
                 with self._cv:
                     self.stats["resumed_runs"] += 1
             exp0 = search.expansions
+            if self.faults is not None:
+                self.faults.fire("verify.slice", qid=job.qid, gid=int(gid))
             d, search = self._execute(search, job.deadline, qid=job.qid)
             t1 = time.perf_counter()
             obs = self.obs
@@ -557,6 +725,18 @@ class VerifyScheduler:
                     job.matches.append((gid, d))
             if d <= job.tau and job.on_match is not None:
                 job.on_match(job, gid, d)
+        except _PoolBroken:
+            # the pool died under this pair, not the pair under the pool:
+            # its search state is intact, so re-enqueue at the frontier it
+            # already reached (min_f) — never restart from scratch, never
+            # retire it unverified (the satellite invariant tests assert
+            # exactly one GEDSearch construction per pair)
+            with self._cv:
+                heapq.heappush(self._heap,
+                               (max(int(bound), search.min_f()),
+                                next(self._seq), job, gid, search))
+                self._cv.notify()
+            finish = False
         except Exception:               # noqa: BLE001 — stage containment
             with self._cv:
                 job.unverified += 1
@@ -578,10 +758,11 @@ class VerifyScheduler:
         if done and job.on_done is not None:
             try:
                 job.on_done(job)
-            except Exception:           # noqa: BLE001 — last-resort guard:
-                pass                    # delivery errors must not kill the
-                                        # worker (on_done resolves its own
-                                        # ticket with the error first)
+            except Exception:           # lint: disable=SRV001
+                pass                    # last-resort guard: delivery errors
+                                        # must not kill the worker (on_done
+                                        # resolves its own ticket with the
+                                        # error first)
 
 
 class GraphQueryEngine:
@@ -593,7 +774,9 @@ class GraphQueryEngine:
                  hot_d: Optional[int] = None,
                  hot_mass: Optional[float] = None, tile_table=None,
                  assign_lb: bool = True, lb_hungarian: int = 0,
-                 lb_tile_table=None, obs: Optional[Observability] = None):
+                 lb_tile_table=None, obs: Optional[Observability] = None,
+                 encoding_cache_bytes: Optional[int] = None,
+                 result_cache_bytes: Optional[int] = None, faults=None):
         self.source = source
         self.backend = resolve_backend() if backend == "auto" else backend
         self.slab_layout = slab_layout
@@ -609,19 +792,35 @@ class GraphQueryEngine:
         self.assign_lb = bool(assign_lb)
         self.lb_hungarian = int(lb_hungarian)
         self.lb_tile_table = lb_tile_table
-        self._enc_cache = _LRU(encoding_cache_size)
-        self._res_cache = _LRU(result_cache_size)
         # every engine carries an Observability (DESIGN.md §17): the
         # registry backs the ``stats`` view below; span recording stays
         # off unless the caller opts in (the ≤2% overhead budget)
         self.obs = obs if obs is not None else Observability(spans=False)
+        # duck-typed fault injector, threaded to the filter evaluator per
+        # call and to the async pipeline's scheduler (DESIGN.md §18)
+        self.faults = faults
+        # caches are entry-bounded and — with *_cache_bytes — also
+        # byte-bounded; high-water marks surface as gauges (max-merge)
+        reg = self.obs.metrics
+        self._enc_cache = _LRU(
+            encoding_cache_size, max_bytes=encoding_cache_bytes,
+            sizeof=_approx_nbytes if encoding_cache_bytes else None,
+            on_hwm=lambda b, n: (
+                reg.gauge_set("engine.enc_cache_bytes_hwm", b),
+                reg.gauge_set("engine.enc_cache_entries_hwm", n)))
+        self._res_cache = _LRU(
+            result_cache_size, max_bytes=result_cache_bytes,
+            sizeof=_approx_nbytes if result_cache_bytes else None,
+            on_hwm=lambda b, n: (
+                reg.gauge_set("engine.res_cache_bytes_hwm", b),
+                reg.gauge_set("engine.res_cache_entries_hwm", n)))
         self._qid = itertools.count()   # per-engine query ids for spans
         self.stats: StatsView = self.obs.metrics.view("engine", initial={
             "batches": 0, "queries": 0, "filter_s": 0.0, "verify_s": 0.0,
             "lb_s": 0.0, "verified_pairs": 0, "expired_pairs": 0,
             "pruned_pairs": 0, "lb_pruned": 0, "lb_tightened": 0,
-            "resumed_runs": 0, "pool_fallbacks": 0, "error_pairs": 0,
-            "cache_hits": 0, "topk_rounds": 0})
+            "resumed_runs": 0, "pool_fallbacks": 0, "pool_rebuilds": 0,
+            "error_pairs": 0, "cache_hits": 0, "topk_rounds": 0})
 
     # ---- encoding cache ----------------------------------------------------
     def _qtuple(self, g: Graph) -> Tuple[bytes, QueryTuple]:
@@ -654,6 +853,8 @@ class GraphQueryEngine:
             kwargs["lb_hungarian"] = self.lb_hungarian
             if self.lb_tile_table is not None:
                 kwargs["lb_tile_table"] = self.lb_tile_table
+        if "faults" in params:      # flat sources thread the injector
+            kwargs["faults"] = self.faults
         return self.source.batched_candidates(graphs, taus, **kwargs)
 
     # ---- shared stages (submit composes them inline; the async pipeline
@@ -993,10 +1194,17 @@ class GraphQueryEngine:
 
     @property
     def cache_info(self) -> Dict[str, int]:
+        enc, res = self._enc_cache.usage(), self._res_cache.usage()
         return {"encoding_hits": self._enc_cache.hits,
                 "encoding_misses": self._enc_cache.misses,
                 "result_hits": self._res_cache.hits,
-                "result_misses": self._res_cache.misses}
+                "result_misses": self._res_cache.misses,
+                "encoding_bytes": enc["bytes"],
+                "encoding_bytes_hwm": enc["bytes_hwm"],
+                "encoding_entries_hwm": enc["entries_hwm"],
+                "result_bytes": res["bytes"],
+                "result_bytes_hwm": res["bytes_hwm"],
+                "result_entries_hwm": res["entries_hwm"]}
 
 
 class ShardedGraphQueryEngine(GraphQueryEngine):
@@ -1068,6 +1276,8 @@ class ShardedGraphQueryEngine(GraphQueryEngine):
 
     def _batched_candidates(self, graphs, taus, qtuples):
         from repro.core.engine import batched_flat_candidates
+        if self.faults is not self.evaluator.faults:
+            self.evaluator.set_faults(self.faults)
         return batched_flat_candidates(self.evaluator, graphs, taus, qtuples)
 
     @property

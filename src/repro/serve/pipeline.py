@@ -30,14 +30,28 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.search import QueryResult
 from repro.obs import use_obs
+from repro.serve.errors import (AdmissionError, FilterStageError,
+                                QueryError)
 from repro.serve.graph_engine import (GraphQuery, GraphQueryEngine,
                                       TopKState, VerifyScheduler)
 
 _DONE = object()                     # stream sentinel
+
+
+def _ticket_nbytes(r: GraphQuery) -> int:
+    """Rough inbox footprint of one queued request: the query graph's
+    arrays (vlabels + edge endpoints/labels at int64) plus fixed ticket
+    overhead — an admission-accounting bound, not a measurement."""
+    g = r.graph
+    # defensive: a malformed request (g=None) must still admit and fail
+    # *typed* at the filter stage, not blow up the submitter
+    n = int(getattr(g, "n", 0) or 0)
+    m = int(getattr(g, "m", 0) or 0)
+    return 96 + 8 * (n + 3 * m)
 
 
 class QueryTicket:
@@ -71,6 +85,9 @@ class QueryTicket:
         self._topk_counted = False
         self._topk_key = None
         self._topk_qt = None
+        # admission accounting (DESIGN.md §18): estimated inbox bytes,
+        # stamped at submit and released when the batch former pops it
+        self._nbytes = 0
 
     def done(self) -> bool:
         return self._done.is_set()
@@ -140,9 +157,11 @@ class QueryTicket:
         for fn in callbacks:
             try:
                 fn(result, error)
-            except Exception:        # noqa: BLE001 — a raising user
-                pass                 # callback must not kill the
-                                     # delivering verifier thread
+            except Exception:        # lint: disable=SRV001
+                pass                 # a raising user callback must not
+                                     # kill the delivering verifier
+                                     # thread (the ticket is already
+                                     # resolved by this point)
         return True
 
 
@@ -195,6 +214,17 @@ class AsyncGraphQueryEngine:
     * ``record_intervals``: collect per-stage (start, end) busy spans in
       ``filter_intervals`` / ``verify_intervals`` for overlap accounting
       (``benchmarks/query_throughput.py --pipeline``).
+    * ``inbox_limit`` / ``inbox_bytes``: admission control (DESIGN.md
+      §18) — the inbox is bounded by queued tickets and/or estimated
+      bytes; an arrival past either bound triggers ``shed_policy``:
+      ``"reject"`` resolves the *new* ticket with ``AdmissionError``,
+      ``"shed_oldest"`` evicts the oldest queued ticket of the most
+      over-weight tenant (per ``tenant_weights``, default weight 1.0)
+      and admits the arrival.  Rejections are fast typed outcomes, never
+      hangs; in-flight top-k escalation rounds bypass the bound (they
+      re-enter, they are not new load).
+    * ``faults``: a ``serve.faults.FaultInjector`` threaded through every
+      stage's injection points (defaults to the wrapped engine's).
     """
 
     def __init__(self, engine: GraphQueryEngine, *, max_batch: int = 32,
@@ -202,11 +232,27 @@ class AsyncGraphQueryEngine:
                  verify_executor: str = "thread",
                  slice_expansions: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
-                 record_intervals: bool = False, name: str = "apipe"):
+                 record_intervals: bool = False, name: str = "apipe",
+                 inbox_limit: Optional[int] = None,
+                 inbox_bytes: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 faults=None):
+        if shed_policy not in ("reject", "shed_oldest"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r} "
+                             "(reject | shed_oldest)")
         self.engine = engine
         self.max_batch = max(1, int(max_batch))
         self.max_delay_s = float(max_delay_s)
         self.default_deadline_s = default_deadline_s
+        self.inbox_limit = None if inbox_limit is None else int(inbox_limit)
+        self.inbox_bytes = None if inbox_bytes is None else int(inbox_bytes)
+        self.shed_policy = shed_policy
+        self.tenant_weights = dict(tenant_weights or {})
+        # one injector for the whole pipeline: the engine threads it to
+        # the filter evaluator, the scheduler to the verify points
+        self.faults = faults if faults is not None else engine.faults
+        engine.faults = self.faults
         self.filter_intervals: List[Tuple[float, float]] = []
         self.verify_intervals: List[Tuple[float, float]] = []
         self.obs = engine.obs           # one ring/registry per pipeline
@@ -217,11 +263,16 @@ class AsyncGraphQueryEngine:
             # scheduler's own validation instead of silently degrading
             executor={"thread": "inline"}.get(verify_executor,
                                               verify_executor),
-            workers=num_workers, obs=engine.obs)
+            workers=num_workers, obs=engine.obs, faults=self.faults)
         self._record_intervals = record_intervals
         self._cv = threading.Condition()
         self._inbox: "deque[Tuple[float, QueryTicket]]" = \
             deque()                 # guarded_by: self._cv
+        self._inbox_nbytes = 0      # guarded_by: self._cv
+        # admission counters + high-water marks, merged into ``stats``
+        self.pstats = engine.obs.metrics.view("pipe", initial={
+            "rejected": 0, "shed": 0, "inbox_hwm": 0,
+            "inbox_bytes_hwm": 0})  # guarded_by: self._cv
         self._outstanding = 0       # guarded_by: self._cv
         self._topk_pending = 0      # guarded_by: self._cv
         self._closing = False       # guarded_by: self._cv
@@ -242,17 +293,104 @@ class AsyncGraphQueryEngine:
 
     def submit_many(self, requests: Sequence[GraphQuery]
                     ) -> List[QueryTicket]:
+        """Admit requests into the bounded inbox.  Over capacity, the
+        configured ``shed_policy`` fires per arrival: rejected arrivals
+        and shed victims resolve immediately with ``AdmissionError`` —
+        a fast typed outcome, never a queued-forever ticket."""
         tickets = [QueryTicket(r) for r in requests]
         now = time.perf_counter()
+        rejected: List[QueryTicket] = []
+        shed: List[QueryTicket] = []
+        failed: List[Tuple[QueryTicket, AdmissionError]] = []
+        admitting = tickets
+        if self.faults is not None:
+            # the ``admit`` point fires outside _cv (a delay fault must
+            # not stall concurrent submitters); a raise fails only the
+            # struck ticket, typed, before it ever occupies the inbox
+            admitting = []
+            for t in tickets:
+                try:
+                    self.faults.fire("admit", tenant=t.request.tenant)
+                    admitting.append(t)
+                except Exception as e:  # noqa: BLE001 — typed containment
+                    failed.append((t, AdmissionError(
+                        f"admission fault: {e!r}",
+                        tenant=t.request.tenant, cause=e)))
         with self._cv:
             if self._closing:
                 raise RuntimeError("AsyncGraphQueryEngine is closed")
-            for t in tickets:
+            for t in admitting:
                 t._t_submit = t._t_enq = now
+                t._nbytes = _ticket_nbytes(t.request)
+                if self._over_locked(t._nbytes) \
+                        and self.shed_policy == "shed_oldest":
+                    while self._over_locked(t._nbytes):
+                        victim = self._pick_victim_locked()
+                        if victim is None:
+                            break
+                        shed.append(victim)
+                        self.pstats["shed"] += 1
+                if self._over_locked(t._nbytes):
+                    self.pstats["rejected"] += 1
+                    rejected.append(t)
+                    continue
                 self._inbox.append((now, t))
-            self._outstanding += len(tickets)
+                self._inbox_nbytes += t._nbytes
+                self._outstanding += 1
+                if len(self._inbox) > self.pstats["inbox_hwm"]:
+                    self.pstats["inbox_hwm"] = len(self._inbox)
+                if self._inbox_nbytes > self.pstats["inbox_bytes_hwm"]:
+                    self.pstats["inbox_bytes_hwm"] = self._inbox_nbytes
             self._cv.notify_all()
+        # resolutions run outside _cv: _resolve takes the ticket lock and
+        # fires user callbacks — never under the pipeline lock
+        for t, err in failed:
+            t._resolve(None, err)
+        for t in rejected:
+            t._resolve(None, AdmissionError(
+                "inbox full: arrival rejected under overload",
+                policy=self.shed_policy, tenant=t.request.tenant))
+        for t in shed:
+            # victims were admitted earlier (outstanding): _finish keeps
+            # drain()/close() accounting exact
+            self._finish(t, None, AdmissionError(
+                "shed from inbox under overload", policy="shed_oldest",
+                tenant=t.request.tenant, shed=True))
         return tickets
+
+    def _over_locked(self, nbytes: int) -> bool:    # guarded_by: self._cv
+        """Would admitting ``nbytes`` more exceed a bound?  An empty inbox
+        always admits (one oversized request must proceed, not livelock)."""
+        if not self._inbox:
+            return False
+        if self.inbox_limit is not None \
+                and len(self._inbox) >= self.inbox_limit:
+            return True
+        return (self.inbox_bytes is not None
+                and self._inbox_nbytes + nbytes > self.inbox_bytes)
+
+    def _pick_victim_locked(self    # guarded_by: self._cv
+                            ) -> Optional[QueryTicket]:
+        """Evict the oldest queued ticket of the most over-weight tenant
+        (queued count / tenant weight, ties by tenant name).  In-flight
+        top-k rounds are never victims — shedding a half-escalated query
+        would strand its worklist accounting."""
+        occ: Dict[Optional[str], int] = {}
+        for _, t in self._inbox:
+            if t._topk is None:
+                ten = t.request.tenant
+                occ[ten] = occ.get(ten, 0) + 1
+        if not occ:
+            return None
+        victim_tenant = max(
+            occ, key=lambda ten: (occ[ten] / max(
+                self.tenant_weights.get(ten, 1.0), 1e-9), str(ten)))
+        for i, (_, t) in enumerate(self._inbox):
+            if t._topk is None and t.request.tenant == victim_tenant:
+                del self._inbox[i]
+                self._inbox_nbytes -= t._nbytes
+                return t
+        return None
 
     # ---- lifecycle ---------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -306,6 +444,7 @@ class AsyncGraphQueryEngine:
         lock-order edge between the pipeline and the scheduler exists."""
         with self._cv:
             s = dict(self.engine.stats)
+            s.update(dict(self.pstats))
         s.update(self.scheduler.stats_snapshot())
         return s
 
@@ -320,9 +459,12 @@ class AsyncGraphQueryEngine:
             except Exception as e:      # noqa: BLE001 — stage containment
                 # a failed admission/filter pass must not kill the filter
                 # thread (that would hang every future ticket): fail this
-                # batch's unresolved tickets with the error and keep going
+                # batch's unresolved tickets with a *typed* error and keep
+                # going — other batches and in-flight queries are untouched
+                err = e if isinstance(e, QueryError) else FilterStageError(
+                    f"filter stage failed: {e!r}", cause=e)
                 for t in batch:
-                    self._finish(t, None, e)
+                    self._finish(t, None, err)
 
     def _next_batch(self) -> Optional[List[QueryTicket]]:
         """Size/deadline admission: wait for ``max_batch`` requests or an
@@ -334,7 +476,12 @@ class AsyncGraphQueryEngine:
                     if (len(self._inbox) >= self.max_batch
                             or age >= self.max_delay_s or self._closing):
                         n = min(len(self._inbox), self.max_batch)
-                        return [self._inbox.popleft()[1] for _ in range(n)]
+                        out = []
+                        for _ in range(n):
+                            _, t = self._inbox.popleft()
+                            self._inbox_nbytes -= t._nbytes
+                            out.append(t)
+                        return out
                     self._cv.wait(self.max_delay_s - age)
                 elif self._closing:
                     if self._topk_pending == 0:
@@ -347,6 +494,10 @@ class AsyncGraphQueryEngine:
 
     def _process_batch(self, tickets: List[QueryTicket]) -> None:
         eng = self.engine
+        if self.faults is not None:
+            # per-batch injection point: a raise here fails exactly this
+            # batch's tickets via _filter_loop's containment
+            self.faults.fire("filter.batch", n=len(tickets))
         spans_on = eng.obs.spans.enabled
         # batch-former wait becomes a visible queue span (DESIGN.md §17):
         # submission (or top-k re-entry) -> this batch picking the ticket
@@ -495,6 +646,7 @@ class AsyncGraphQueryEngine:
         with self._cv:
             ticket._t_enq = now        # next round's queue-wait starts now
             self._inbox.append((now, ticket))
+            self._inbox_nbytes += ticket._nbytes
             self._cv.notify_all()
 
     def _on_topk_match(self, job, gid: int, d: int) -> None:

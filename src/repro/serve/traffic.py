@@ -37,8 +37,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serve.errors import AdmissionError
+
 __all__ = ["TenantSpec", "TraceQuery", "TrafficTrace", "TrafficReport",
-           "generate_trace", "replay", "percentile"]
+           "generate_trace", "replay", "percentile", "tenant_weights"]
+
+
+def tenant_weights(tenants: Sequence["TenantSpec"]) -> Dict[str, float]:
+    """Admission-control weight map from the tenant specs — feed to
+    ``AsyncGraphQueryEngine(tenant_weights=...)`` so shed-oldest victim
+    choice respects the same shares the trace was generated with."""
+    return {t.name: float(t.weight) for t in tenants}
 
 
 @dataclass(frozen=True)
@@ -207,6 +216,9 @@ class _Obs:
     lb_s: float = 0.0
     verify_s: float = 0.0
     queue_s: float = 0.0
+    # typed admission rejection/shed (DESIGN.md §18): intentional load
+    # shedding, reported separately from stage failures
+    rejected: bool = False
 
 
 @dataclass
@@ -248,7 +260,10 @@ class TrafficReport:
             "partial_rate": round(sum(o.partial for o in obs)
                                   / max(n, 1), 4),
             "slo_miss_rate": round(len(missed) / max(n, 1), 4),
-            "errors": sum(o.error for o in obs),
+            # intentional admission shedding is not a failure: it reports
+            # separately so "errors" keeps meaning broken queries
+            "rejected": sum(o.rejected for o in obs),
+            "errors": sum(o.error and not o.rejected for o in obs),
             # mean stage time per completed query (DESIGN.md §17)
             "filter_ms": round(sum(o.filter_s for o in done) / nd * 1e3, 3),
             "lb_ms": round(sum(o.lb_s for o in done) / nd * 1e3, 3),
@@ -273,8 +288,10 @@ class TrafficReport:
 def _to_request(q: TraceQuery, graph):
     from repro.serve.graph_engine import GraphQuery
     if q.kind == "topk":
-        return GraphQuery(graph, q.tau, top_k=q.k, deadline_s=q.deadline_s)
-    return GraphQuery(graph, q.tau, deadline_s=q.deadline_s)
+        return GraphQuery(graph, q.tau, top_k=q.k, deadline_s=q.deadline_s,
+                          tenant=q.tenant)
+    return GraphQuery(graph, q.tau, deadline_s=q.deadline_s,
+                      tenant=q.tenant)
 
 
 def replay(trace: TrafficTrace, pipe, db, *, speed: float = 1.0,
@@ -299,7 +316,8 @@ def replay(trace: TrafficTrace, pipe, db, *, speed: float = 1.0,
         with obs_lock:
             obs.append(_Obs(q.tenant, q.kind, lat, q.deadline_s, partial,
                             err is not None, filter_s, lb_s, verify_s,
-                            queue_s))
+                            queue_s,
+                            rejected=isinstance(err, AdmissionError)))
 
     t_start = time.perf_counter()
     if trace.mode == "open":

@@ -1,0 +1,24 @@
+"""SRV001 violation fixture: broad excepts that swallow failures."""
+
+
+class Worker:
+    def __init__(self):
+        self.errors = 0
+
+    def run_bare(self, job):
+        try:
+            job.run()
+        except:                               # expect: SRV001
+            pass
+
+    def run_broad(self, job):
+        try:
+            job.run()
+        except Exception:                     # expect: SRV001
+            print("oops")
+
+    def run_tuple(self, job):
+        try:
+            job.run()
+        except (ValueError, BaseException):   # expect: SRV001
+            job.retries += 1

@@ -1,0 +1,43 @@
+"""SRV001 clean twin: broad excepts that visibly propagate the fault."""
+
+
+class Worker:
+    def __init__(self):
+        self.errors = 0
+        self.unverified = 0
+
+    def run_reraise(self, job):
+        try:
+            job.run()
+        except Exception:
+            raise
+
+    def run_counts(self, job):
+        try:
+            job.run()
+        except Exception:
+            self.errors += 1
+
+    def run_fails_ticket(self, job, ticket):
+        try:
+            job.run()
+        except Exception as e:
+            ticket.resolve(None, e)
+
+    def run_uses_bound(self, job, log):
+        try:
+            job.run()
+        except Exception as e:
+            log(repr(e))
+
+    def run_narrow(self, job):
+        try:
+            job.run()
+        except KeyError:
+            pass
+
+    def run_suppressed(self, job):
+        try:
+            job.run()
+        except Exception:   # lint: disable=SRV001
+            pass

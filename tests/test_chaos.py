@@ -1,0 +1,356 @@
+"""Chaos suite: every injection point resolves typed, never hangs.
+
+The fault-tolerance invariant (DESIGN.md §18): under any injected fault
+— filter-batch exception, device-op failure, verifier worker kill,
+overload burst — every ticket resolves to a result or a typed
+``QueryError``, every *completed* query's matches are bit-identical to
+the fault-free run (the degradation ladder trades latency for
+availability, never recall), and every ladder decision is visible in
+the metrics snapshot.  Schedules are deterministic (seeded
+``FaultInjector``), so outcomes are asserted exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.search import FlatMSQIndex
+from repro.serve.errors import (AdmissionError, FilterStageError,
+                                QueryError)
+from repro.serve.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
+from repro.serve.pipeline import AsyncGraphQueryEngine
+
+
+@pytest.fixture(scope="module")
+def small_db():
+    from repro.graphs.generators import aids_like_db
+    return aids_like_db(120, seed=9)
+
+
+@pytest.fixture(scope="module")
+def flat(small_db):
+    """Read-only index for tests that never trip a ladder.  Tests that
+    mutate shared evaluator state (health machines, slab rebuilds)
+    build their own FlatMSQIndex instead."""
+    return FlatMSQIndex(small_db)
+
+
+def _requests(db, n, seed, tau_hi=3, **kw):
+    from repro.graphs.generators import perturb_graph
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        tau = int(rng.integers(1, tau_hi))
+        h = perturb_graph(db[int(rng.integers(0, len(db)))], tau, rng,
+                          db.n_vlabels, db.n_elabels)
+        out.append(GraphQuery(h, tau, **kw))
+    return out
+
+
+def _assert_same(got, ref):
+    for a, b in zip(got, ref):
+        assert a.candidates == b.candidates
+        assert a.matches == b.matches
+        assert a.n_filtered == b.n_filtered
+
+
+# --------------------------------------------------------------------------
+# filter stage: a poisoned batch fails typed; the pipeline survives
+# --------------------------------------------------------------------------
+
+def test_filter_batch_fault_fails_only_struck_batch(small_db, flat):
+    reqs = _requests(small_db, 5, seed=21)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+
+    faults = FaultInjector([FaultSpec("filter.batch", on_calls=(2,))])
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=1, num_workers=1,
+                               faults=faults) as apipe:
+        tickets = apipe.submit_many(reqs)
+        outcomes = []
+        for t in tickets:
+            try:
+                outcomes.append(t.result(timeout=90))
+            except QueryError as e:
+                outcomes.append(e)
+    # max_batch=1: batch i is ticket i, so call #2 strikes exactly one
+    struck = [o for o in outcomes if isinstance(o, Exception)]
+    assert len(struck) == 1 and isinstance(outcomes[1], FilterStageError)
+    assert isinstance(outcomes[1].cause, InjectedFault)
+    assert outcomes[1].stage == "filter"
+    ok = [(o, r) for o, r in zip(outcomes, ref)
+          if not isinstance(o, Exception)]
+    _assert_same(*zip(*ok))
+    assert faults.count("filter.batch") == 5
+
+
+def test_filter_batch_delay_is_latency_only(small_db, flat):
+    reqs = _requests(small_db, 4, seed=22)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    faults = FaultInjector(
+        [FaultSpec("filter.batch", kind="delay", every=1, delay_s=0.02)])
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=2, num_workers=2,
+                               faults=faults) as apipe:
+        out = [t.result(timeout=90) for t in apipe.submit_many(reqs)]
+    _assert_same(out, ref)
+    assert len(faults.fired_at("filter.batch")) >= 2
+
+
+# --------------------------------------------------------------------------
+# device faults: the backend ladder keeps answers bit-identical
+# --------------------------------------------------------------------------
+
+def _jax_eval(index, backend="jax"):
+    evs = [e for e in index._filter_evals.values() if e.backend == backend]
+    assert len(evs) == 1
+    return evs[0]
+
+
+def test_device_fault_ladder_falls_back_bit_identical(small_db):
+    """Every jax device pass fails -> the numpy rung answers; candidates
+    and matches are bit-identical and the fallback is visible in both
+    ladder_stats and the engine's metrics snapshot."""
+    index = FlatMSQIndex(small_db)
+    reqs = _requests(small_db, 8, seed=23)
+    ref = GraphQueryEngine(index, backend="numpy").submit(reqs)
+
+    faults = FaultInjector([FaultSpec("device.filter", every=1)])
+    eng = GraphQueryEngine(index, backend="jax", faults=faults)
+    _assert_same(eng.submit(reqs), ref)
+
+    ev = _jax_eval(index)
+    assert ev.ladder_stats["backend_fallbacks"] >= 1
+    snap = eng.obs.metrics.snapshot()
+    assert snap["counters"].get("filter.backend_fallbacks", 0) >= 1
+    assert "health.filter_backend" in snap["gauges"]
+
+
+def test_device_fault_sticky_skip_then_probe_recovery(small_db):
+    """Three consecutive device failures trip FAILING (sticky-skip);
+    once the fault schedule is exhausted, the periodic probe restores
+    HEALTHY — and every answer along the way matched the numpy rung."""
+    index = FlatMSQIndex(small_db)
+    faults = FaultInjector([FaultSpec("device.filter", every=1, times=3)])
+    eng = GraphQueryEngine(index, backend="jax", faults=faults)
+    refeng = GraphQueryEngine(index, backend="numpy")
+
+    ev = None
+    for i in range(20):
+        reqs = _requests(small_db, 3, seed=100 + i)
+        _assert_same(eng.submit(reqs), refeng.submit(reqs))
+        ev = _jax_eval(index)
+        if ev.ladder_stats["primary_skips"] and \
+                ev.backend_health.state == "healthy":
+            break
+    assert ev.backend_health.state == "healthy"     # probe recovered
+    assert ev.ladder_stats["backend_fallbacks"] == 3
+    assert ev.ladder_stats["primary_skips"] >= 1    # sticky-skip happened
+    snap = eng.obs.metrics.snapshot()
+    assert snap["gauges"]["health.filter_backend"] == 0
+
+
+def test_slab_decode_fault_steps_packed_to_hot(small_db):
+    """Repeated decode-attributed failures rebuild the resident slab one
+    rung denser (packed -> hot); candidates stay bit-identical."""
+    index = FlatMSQIndex(small_db)
+    reqs = _requests(small_db, 8, seed=24)
+    ref = GraphQueryEngine(index, backend="numpy").submit(reqs)
+
+    faults = FaultInjector(
+        [FaultSpec("device.decode", every=1, times=2, tag="decode")])
+    eng = GraphQueryEngine(index, backend="jax", slab_layout="packed",
+                           faults=faults)
+    _assert_same(eng.submit(reqs), ref)
+
+    evs = [e for e in index._filter_evals.values()
+           if e.backend == "jax" and e.slab_layout == "hot"]
+    assert len(evs) == 1, "packed slab should have been rebuilt as hot"
+    assert evs[0].ladder_stats["slab_fallbacks"] == 1
+    snap = eng.obs.metrics.snapshot()
+    assert snap["counters"].get("filter.slab_fallbacks", 0) == 1
+
+
+def test_device_cache_fault_falls_back(small_db):
+    """An upload-build failure inside DeviceSlabCache attributes to the
+    device rung and falls back recall-safe."""
+    index = FlatMSQIndex(small_db)
+    reqs = _requests(small_db, 6, seed=25)
+    ref = GraphQueryEngine(index, backend="numpy").submit(reqs)
+    faults = FaultInjector([FaultSpec("device.cache", on_calls=(1,))])
+    eng = GraphQueryEngine(index, backend="jax", faults=faults)
+    _assert_same(eng.submit(reqs), ref)
+    assert _jax_eval(index).ladder_stats["backend_fallbacks"] >= 1
+
+
+# --------------------------------------------------------------------------
+# verify stage: slice faults are contained per pair, pools are rebuilt
+# --------------------------------------------------------------------------
+
+def test_verify_slice_fault_contained_per_pair(small_db, flat):
+    reqs = _requests(small_db, 6, seed=26)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    assert sum(len(r.candidates) for r in ref) > 2
+
+    faults = FaultInjector([FaultSpec("verify.slice", on_calls=(2,))])
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=3, num_workers=2,
+                               faults=faults) as apipe:
+        out = [t.result(timeout=90) for t in apipe.submit_many(reqs)]
+    # exactly one pair was struck: contained as unverified, flagged
+    # partial on its query; everything else is bit-identical
+    assert apipe.scheduler.stats["error_pairs"] == 1
+    partial = [o for o in out if o.stats.get("partial")]
+    assert len(partial) == 1
+    _assert_same(*zip(*[(o, r) for o, r in zip(out, ref)
+                        if not o.stats.get("partial")]))
+    for o, r in zip(out, ref):
+        assert o.candidates == r.candidates     # recall-safe even when hit
+
+
+def test_worker_kill_through_async_pipeline(small_db, flat):
+    """A SIGKILLed pool worker mid-run: the broken pool is rebuilt, the
+    in-flight searches resume at their frontiers, and the final matches
+    are bit-identical — the kill is completely recoverable."""
+    reqs = _requests(small_db, 6, seed=27)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    faults = FaultInjector(
+        [FaultSpec("verify.pool", kind="kill_worker", on_calls=(2,))],
+        seed=3)
+    eng = GraphQueryEngine(flat, backend="numpy", faults=faults)
+    with AsyncGraphQueryEngine(eng, max_batch=3, num_workers=2,
+                               verify_executor="process",
+                               slice_expansions=40,
+                               faults=faults) as apipe:
+        out = [t.result(timeout=180) for t in apipe.submit_many(reqs)]
+    _assert_same(out, ref)
+    sched = apipe.scheduler.stats
+    assert sched["pool_rebuilds"] >= 1
+    assert sched["error_pairs"] == 0
+    assert faults.fired_at("verify.pool")
+
+
+# --------------------------------------------------------------------------
+# overload burst: bounded inbox, typed rejections, tenant-weighted shed
+# --------------------------------------------------------------------------
+
+def test_overload_reject_policy(small_db, flat):
+    reqs = _requests(small_db, 8, seed=28)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    eng = GraphQueryEngine(flat, backend="numpy")
+    # a huge batch + delay keeps the former waiting, so the burst lands
+    # on a full inbox deterministically; close() flushes the admitted
+    with AsyncGraphQueryEngine(eng, max_batch=64, max_delay_s=5.0,
+                               inbox_limit=3,
+                               shed_policy="reject") as apipe:
+        tickets = apipe.submit_many(reqs)
+        rejected = []
+        for t in tickets[3:]:
+            with pytest.raises(AdmissionError) as ei:
+                t.result(timeout=10)
+            rejected.append(ei.value)
+        apipe.close()
+        out = [t.result(timeout=90) for t in tickets[:3]]
+    _assert_same(out, ref[:3])
+    assert all(e.policy == "reject" and not e.shed for e in rejected)
+    assert apipe.stats["rejected"] == 5
+    assert apipe.stats["shed"] == 0
+    assert apipe.stats["inbox_hwm"] == 3
+
+
+def test_overload_inbox_bytes_bound(small_db, flat):
+    reqs = _requests(small_db, 3, seed=29)
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=64, max_delay_s=5.0,
+                               inbox_bytes=1,
+                               shed_policy="reject") as apipe:
+        tickets = apipe.submit_many(reqs)
+        # an empty inbox always admits (no livelock on oversized
+        # requests); the rest bounce off the byte budget
+        with pytest.raises(AdmissionError):
+            tickets[1].result(timeout=10)
+        with pytest.raises(AdmissionError):
+            tickets[2].result(timeout=10)
+        apipe.close()
+        assert tickets[0].result(timeout=90) is not None
+    assert apipe.stats["rejected"] == 2
+    assert apipe.stats["inbox_bytes_hwm"] > 1
+
+
+def test_overload_shed_oldest_tenant_weights(small_db, flat):
+    """shed_oldest victims come from the tenant with the highest
+    weighted occupancy: tenant B (weight 0.5) is shed to admit tenant
+    A's burst (weight 4.0), and the shed tickets resolve typed."""
+    base = _requests(small_db, 6, seed=30)
+    for q, ten in zip(base, ("A", "A", "B", "B", "A", "A")):
+        q.tenant = ten
+    ref = GraphQueryEngine(flat, backend="numpy").submit(base)
+
+    eng = GraphQueryEngine(flat, backend="numpy")
+    with AsyncGraphQueryEngine(eng, max_batch=64, max_delay_s=5.0,
+                               inbox_limit=4, shed_policy="shed_oldest",
+                               tenant_weights={"A": 4.0, "B": 0.5}
+                               ) as apipe:
+        tickets = apipe.submit_many(base)
+        shed = []
+        for t in (tickets[2], tickets[3]):      # B's two queries
+            with pytest.raises(AdmissionError) as ei:
+                t.result(timeout=10)
+            shed.append(ei.value)
+        apipe.close()
+        out = [tickets[i].result(timeout=90) for i in (0, 1, 4, 5)]
+    _assert_same(out, [ref[i] for i in (0, 1, 4, 5)])
+    assert all(e.shed and e.policy == "shed_oldest" and e.tenant == "B"
+               for e in shed)
+    assert apipe.stats["shed"] == 2 and apipe.stats["rejected"] == 0
+
+
+# --------------------------------------------------------------------------
+# close()/shutdown() racing in-flight top-k escalation under faults
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_close_races_topk_escalation_under_faults(small_db, flat, executor):
+    """close() must drain in-flight top-k escalation rounds and tear
+    down the (possibly just-poisoned) pool without hanging; surviving
+    results stay bit-identical to the fault-free sync run."""
+    reqs = _requests(small_db, 4, seed=31, tau_hi=4)
+    topk = [GraphQuery(q.graph, tau=q.tau + 2, top_k=2) for q in reqs[:2]]
+    mix = topk + reqs[2:]
+    ref = GraphQueryEngine(flat, backend="numpy").submit(mix)
+
+    if executor == "process":
+        faults = FaultInjector(
+            [FaultSpec("verify.pool", kind="kill_worker", on_calls=(2,))],
+            seed=7)
+    else:
+        faults = FaultInjector([FaultSpec("verify.slice", on_calls=(3,))])
+    eng = GraphQueryEngine(flat, backend="numpy", faults=faults)
+    apipe = AsyncGraphQueryEngine(eng, max_batch=2, num_workers=2,
+                                  verify_executor=executor,
+                                  slice_expansions=30, faults=faults)
+    try:
+        tickets = apipe.submit_many(mix)
+    finally:
+        apipe.close(timeout=120)    # races escalation + pool teardown
+    out = [t.result(timeout=10) for t in tickets]   # all resolved already
+    clean = [(o, r) for o, r in zip(out, ref) if not o.stats.get("partial")]
+    _assert_same(*zip(*clean))
+    if executor == "process":
+        assert len(clean) == len(mix)       # a kill is fully recoverable
+        assert apipe.scheduler.stats["pool_rebuilds"] >= 1
+    else:
+        assert len(clean) >= len(mix) - 1   # one struck pair at most
+    # idempotent + still no hang
+    apipe.close(timeout=30)
+
+
+def test_injector_summary_shape():
+    faults = FaultInjector([FaultSpec("filter.batch", on_calls=(1,))])
+    with pytest.raises(InjectedFault):
+        faults.fire("filter.batch")
+    faults.fire("admit")
+    s = faults.summary()
+    assert s == {"calls": {"filter.batch": 1, "admit": 1},
+                 "fired": {"filter.batch:raise": 1}, "n_fired": 1}
+    faults.reset()
+    assert faults.summary()["n_fired"] == 0

@@ -62,6 +62,7 @@ FIXTURES = [
     ("plc301_bad.py", "PLC"), ("plc302_bad.py", "PLC"),
     ("plc303_bad.py", "PLC"), ("plc304_bad.py", "PLC"),
     ("plc_ok.py", "PLC"),
+    ("srv001_bad.py", "SRV"), ("srv001_ok.py", "SRV"),
 ]
 
 

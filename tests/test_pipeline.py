@@ -18,6 +18,7 @@ import pytest
 
 from repro.core.search import FlatMSQIndex, MSQIndex
 from repro.core.verify import GEDSearch, ged_upto
+from repro.serve.errors import FilterStageError
 from repro.serve.graph_engine import GraphQuery, GraphQueryEngine
 from repro.serve.pipeline import AsyncGraphQueryEngine, as_completed
 
@@ -139,6 +140,56 @@ def test_process_pool_scheduler_direct(small_db, flat):
         sched.shutdown()
     for job, res in zip(jobs, ref):
         assert sorted(job.matches) == res.matches
+
+
+def test_pool_worker_kill_resumes_at_frontier(small_db, flat, monkeypatch):
+    """A worker killed mid-slice re-enqueues the resumable GEDSearch at
+    its last frontier — one construction per pair, never a restart —
+    and the poisoned pool is rebuilt (DESIGN.md §18)."""
+    import repro.serve.graph_engine as ge
+    from repro.serve.faults import FaultInjector, FaultSpec
+    from repro.serve.graph_engine import VerifyScheduler
+
+    reqs = _requests(small_db, 5, seed=12)
+    ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
+    n_pairs = sum(len(r.candidates) for r in ref)
+    assert n_pairs > 3
+
+    made = []
+    real = ge.GEDSearch
+
+    def counting_ctor(*a, **kw):
+        # a factory, not a subclass: the instance must stay the real
+        # (picklable) GEDSearch so the spawn pool can round-trip it
+        made.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ge, "GEDSearch", counting_ctor)
+    faults = FaultInjector(
+        [FaultSpec("verify.pool", kind="kill_worker", on_calls=(3,))],
+        seed=5)
+    sched = VerifyScheduler(small_db, executor="process", workers=2,
+                            slice_expansions=40, faults=faults)
+    try:
+        jobs = [sched.add_job(r.graph, r.tau, res.candidates,
+                              [0] * len(res.candidates))
+                for r, res in zip(reqs, ref)]
+        sched.run_until_idle()
+    finally:
+        sched.close()
+        sched.shutdown()
+    # completed matches bit-identical to the fault-free run
+    for job, res in zip(jobs, ref):
+        assert sorted(job.matches) == res.matches
+        assert job.unverified == 0       # the struck pair resumed, not died
+    ss = sched.stats_snapshot()
+    assert ss["error_pairs"] == 0
+    assert ss["pool_rebuilds"] >= 1      # poisoned pool was replaced
+    assert faults.fired_at("verify.pool"), "kill spec never fired"
+    # the frontier-resume invariant: every pair built its search exactly
+    # once; interrupted slices re-entered the heap as resumes
+    assert len(made) == n_pairs
+    assert ss["resumed_runs"] >= 1
 
 
 def test_scheduler_rejects_unknown_executor(small_db):
@@ -371,9 +422,13 @@ def test_filter_stage_failure_fails_batch_not_pipeline(small_db, flat):
     ref = GraphQueryEngine(flat, backend="numpy").submit(reqs)
     with AsyncGraphQueryEngine(eng, max_batch=1, num_workers=2) as apipe:
         bad = apipe.submit(GraphQuery(None, 1))       # type: ignore[arg-type]
-        with pytest.raises(AttributeError):
+        # batch failures surface as the typed FilterStageError with the
+        # original exception chained (DESIGN.md §18)
+        with pytest.raises(FilterStageError) as ei:
             bad.result(timeout=30)
-        with pytest.raises(AttributeError):
+        assert isinstance(ei.value.cause, AttributeError)
+        assert ei.value.stage == "filter"
+        with pytest.raises(FilterStageError):
             list(bad.stream(timeout=30))
         good = [t.result(timeout=90) for t in apipe.submit_many(reqs)]
     _assert_same(good, ref)
@@ -391,7 +446,7 @@ def test_as_completed_timeout_and_error_contract(small_db, flat):
         with pytest.raises(TimeoutError):
             list(as_completed([stuck], timeout=0.05))
         bad = apipe.submit(GraphQuery(None, 1))       # type: ignore[arg-type]
-        with pytest.raises(AttributeError):
+        with pytest.raises(FilterStageError):
             list(as_completed([bad], timeout=30))
 
 
